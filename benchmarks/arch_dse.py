@@ -1,0 +1,34 @@
+"""Beyond-paper table: DxPTA across the 10 assigned architectures
+(prefill-2k serving workloads) — the cross-architecture co-design result
+that the paper's DeiT/BERT table generalizes to."""
+from __future__ import annotations
+
+from repro.configs import get_config, list_archs
+from repro.configs.base import ShapeConfig
+from repro.core import Constraints, dxpta_search
+from repro.core.extract import workload_for
+
+from .common import row, timed
+
+SHAPE = ShapeConfig("serve_2k", seq_len=2048, global_batch=1, kind="prefill")
+
+
+def run():
+    rows = []
+    cons = Constraints(area_mm2=50.0, power_w=5.0, energy_mj=1e9,
+                       latency_ms=1e9)
+    for arch in list_archs():
+        cfg = get_config(arch)
+        wl = workload_for(cfg, SHAPE)
+        r, us = timed(lambda: dxpta_search(wl, cons), repeats=1)
+        if r.feasible:
+            rows.append(row(
+                f"arch_dse/{arch}", us,
+                f"[{r.best_cfg}] E={r.energy_j*1e3:.0f}mJ "
+                f"L={r.latency_s*1e3:.1f}ms A={r.area_mm2:.1f}mm2 "
+                f"P={r.power_w:.2f}W"))
+        else:
+            rows.append(row(f"arch_dse/{arch}", us,
+                            "infeasible within 50mm2/5W (model too large "
+                            "for a single sub-5W photonic chip)"))
+    return rows

@@ -1,0 +1,19 @@
+"""Shared benchmark utilities. Every benchmark module exposes
+`run() -> list[(name, us_per_call, derived)]` rows; run.py prints the CSV."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """(result, microseconds-per-call) with a warmup call."""
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def row(name: str, us: float, derived) -> tuple:
+    return (name, f"{us:.1f}", derived)

@@ -1,0 +1,50 @@
+"""Paper Fig. 10 — area/power of LT-Base, LT-Large, exhaustive-search
+accelerators and DxPTA accelerators + component breakdowns + savings
+(paper: up to 76.9% area and 82.7% power saving vs LT)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (LT_BASE, LT_LARGE, Constraints, area_breakdown,
+                        dxpta_search, eval_hw_config, grid_search_vectorized,
+                        power_breakdown)
+from repro.core.paper_workloads import load
+
+from .common import row, timed
+
+
+def run():
+    rows = []
+    for name, cfg in (("LT-Base", LT_BASE), ("LT-Large", LT_LARGE)):
+        (a, p), us = timed(eval_hw_config, cfg)
+        rows.append(row(f"fig10/{name}", us, f"area={a:.1f}mm2 power={p:.2f}W"))
+
+    ab = area_breakdown(LT_BASE.n_t, LT_BASE.n_c, LT_BASE.n_h, LT_BASE.n_v,
+                        LT_BASE.n_lambda)
+    pb = power_breakdown(LT_BASE.n_t, LT_BASE.n_c, LT_BASE.n_h, LT_BASE.n_v,
+                         LT_BASE.n_lambda)
+    top_a = sorted(ab, key=lambda k: -ab[k])[:3]
+    top_p = sorted(pb, key=lambda k: -pb[k])[:4]
+    rows.append(row("fig10/area_dominated_by", 0.0,
+                    "+".join(top_a) + " (paper: memory/DAC/cores)"))
+    rows.append(row("fig10/power_dominated_by", 0.0,
+                    "+".join(top_p) + " (paper: MZM/DAC/PD/ADC)"))
+
+    best_saving_a, best_saving_p = 0.0, 0.0
+    for wname in ("deit-b", "bert-l"):
+        wl = load(wname)
+        dx, us1 = timed(lambda: dxpta_search(wl, Constraints()), repeats=1)
+        ex, us2 = timed(lambda: grid_search_vectorized(wl, Constraints()),
+                        repeats=1)
+        a_lt, p_lt = eval_hw_config(LT_LARGE)
+        best_saving_a = max(best_saving_a, 1 - dx.area_mm2 / a_lt)
+        best_saving_p = max(best_saving_p, 1 - dx.power_w / p_lt)
+        rows.append(row(
+            f"fig10/dxpta_{wname}", us1,
+            f"A={dx.area_mm2:.1f} P={dx.power_w:.2f} vs exh "
+            f"A={ex.area_mm2:.1f} P={ex.power_w:.2f}"))
+    rows.append(row(
+        "fig10/savings_vs_LT", 0.0,
+        f"area -{best_saving_a:.1%} power -{best_saving_p:.1%} "
+        f"(paper: up to -76.9% / -82.7%)"))
+    return rows

@@ -1,0 +1,46 @@
+"""Paper Fig. 12 — search-time: exhaustive vs DxPTA guided search (paper:
+15.2x), plus the beyond-paper engines (vectorized numpy grid, Pallas
+dse_eval kernel)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (Constraints, config_grid, dxpta_search,
+                        exhaustive_search, grid_search_vectorized)
+from repro.core.paper_workloads import load
+from repro.kernels import pallas_grid_search
+
+from .common import row, timed
+
+
+def run():
+    wl = load("deit-b")
+    cons = Constraints()
+    rows = []
+
+    ex, us_ex = timed(lambda: exhaustive_search(wl, cons), repeats=1)
+    dx, us_dx = timed(lambda: dxpta_search(wl, cons), repeats=1)
+    dx_np, us_dxnp = timed(lambda: dxpta_search(wl, cons, prune=False),
+                           repeats=1)
+    rows.append(row("fig12/exhaustive", us_ex,
+                    f"{ex.n_evaluated} cfgs, {us_ex/1e6:.2f}s"))
+    rows.append(row("fig12/dxpta", us_dx,
+                    f"{dx.n_evaluated} cfgs ({dx.n_workload_evals} wl evals),"
+                    f" speedup={us_ex/us_dx:.1f}x (paper 15.2x; pruning on)"))
+    rows.append(row("fig12/dxpta_noprune", us_dxnp,
+                    f"speedup={us_ex/us_dxnp:.1f}x (space reduction only)"))
+
+    vec, us_vec = timed(lambda: grid_search_vectorized(wl, cons), repeats=1)
+    rows.append(row("fig12/vectorized_grid[beyond-paper]", us_vec,
+                    f"FULL exhaustive grid in {us_vec/1e3:.0f}ms "
+                    f"({us_ex/us_vec:.0f}x vs sequential exhaustive), "
+                    f"same best: {vec.best_cfg == ex.best_cfg}"))
+
+    inc = list(range(1, 13))
+    grid = config_grid(inc, inc, inc, inc, inc)
+    (best, _), us_pal = timed(
+        lambda: pallas_grid_search(grid, wl, cons), repeats=1)
+    rows.append(row("fig12/pallas_dse_kernel[beyond-paper]", us_pal,
+                    f"full grid via dse_eval kernel (interpret=True on CPU);"
+                    f" same best: {best == ex.best_cfg}"))
+    return rows

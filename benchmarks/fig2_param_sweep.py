@@ -1,0 +1,31 @@
+"""Paper Fig. 2 — case study: area/power/energy/latency of the 4-bit LT
+accelerator across (N_t, N_c) configurations on DeiT-Base."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import PTAConfig, eval_full
+from repro.core.paper_workloads import load
+
+from .common import row, timed
+
+
+def run():
+    wl = load("deit-b")
+    rows = []
+    for n_t in (1, 2, 4, 8):
+        for n_c in (1, 2, 4):
+            cfg = PTAConfig(n_t=n_t, n_c=n_c)
+            (a, p, e, l, u), us = timed(eval_full, cfg, wl)
+            rows.append(row(
+                f"fig2/Nt{n_t}_Nc{n_c}", us,
+                f"area={a:.1f}mm2 power={p:.2f}W "
+                f"energy={e*1e3:.1f}mJ latency={l*1e3:.2f}ms util={u:.2f}"))
+    # the paper's headline observations as derived checks:
+    a1, p1, e1, l1, _ = eval_full(PTAConfig(n_t=1, n_c=1), wl)
+    a8, p8, e8, l8, _ = eval_full(PTAConfig(n_t=8, n_c=4), wl)
+    rows.append(row("fig2/trend", 0.0,
+                    f"power&area grow ({p1:.1f}->{p8:.1f}W, "
+                    f"{a1:.0f}->{a8:.0f}mm2) while latency&energy drop "
+                    f"({l1*1e3:.1f}->{l8*1e3:.2f}ms)"))
+    return rows

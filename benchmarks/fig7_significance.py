@@ -1,0 +1,18 @@
+"""Paper Fig. 7 / Alg. 1 — parameter significance scores."""
+from __future__ import annotations
+
+from repro.core import observe_significance, significant_params
+
+from .common import row, timed
+
+
+def run():
+    scores, us = timed(observe_significance)
+    rows = []
+    for name, s in scores.items():
+        rows.append(row(f"fig7/S_{name}", us / len(scores),
+                        f"S_area={s.s_area:.3f} S_power={s.s_power:.3f}"))
+    top = significant_params(scores)
+    rows.append(row("fig7/significant", 0.0,
+                    f"fine-grained search for {top} (paper: N_t, N_c)"))
+    return rows

@@ -1,0 +1,27 @@
+"""Paper Fig. 9 — constraint-aware DSE across all five workloads: candidate
+scatter + selected config per workload (area/power/energy/latency/EDP)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PAPER_WORKLOADS, Constraints, dxpta_search
+from repro.core.paper_workloads import load
+
+from .common import row, timed
+
+
+def run():
+    rows = []
+    cons = Constraints()
+    for wname in PAPER_WORKLOADS:
+        wl = load(wname)
+        r, us = timed(lambda: dxpta_search(wl, cons, collect=True),
+                      repeats=1)
+        h = r.history
+        explored = len(h["area"])
+        rows.append(row(
+            f"fig9/{wname}", us,
+            f"best=[{r.best_cfg}] A={r.area_mm2:.1f}mm2 P={r.power_w:.2f}W "
+            f"E={r.energy_j*1e3:.1f}mJ L={r.latency_s*1e3:.2f}ms "
+            f"EDP={r.edp:.2e} feasible={r.n_feasible}/{explored}"))
+    return rows

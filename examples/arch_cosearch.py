@@ -1,0 +1,51 @@
+"""Beyond-paper example: DxPTA across the 10 assigned architectures x
+deployment shapes — one searched PTA per (arch, shape), with Pareto fronts.
+
+The paper searches for DeiT/BERT only; this extends the methodology to the
+framework's whole model zoo via the config->workload extractor
+(repro.core.extract) and prints which deployments are photonic-feasible
+under the paper's constraints.
+
+    PYTHONPATH=src python examples/arch_cosearch.py [--shape prefill_32k]
+"""
+import argparse
+
+from repro.configs import SHAPES_BY_NAME, get_config, list_archs
+from repro.core import Constraints, dxpta_search
+from repro.core.extract import workload_for
+from repro.configs.base import ShapeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shape", default="serve_2k",
+                    choices=["serve_2k", *sorted(SHAPES_BY_NAME)])
+    ap.add_argument("--area", type=float, default=50.0)
+    ap.add_argument("--power", type=float, default=5.0)
+    args = ap.parse_args()
+
+    if args.shape == "serve_2k":
+        # laptop-scale default: 2k-token prefill, batch 1
+        shape = ShapeConfig("serve_2k", seq_len=2048, global_batch=1,
+                            kind="prefill")
+    else:
+        shape = SHAPES_BY_NAME[args.shape]
+    cons = Constraints(area_mm2=args.area, power_w=args.power,
+                       energy_mj=1e9, latency_ms=1e9)  # A/P-bounded search
+    print(f"shape={shape.name}  constraints: {args.area}mm^2 {args.power}W "
+          f"(energy/latency unconstrained -> min-EDP inside the A/P box)")
+    print(f"{'arch':24s} {'feasible':8s} {'config':34s} "
+          f"{'E[mJ]':>9s} {'L[ms]':>9s}")
+    for arch in list_archs():
+        cfg = get_config(arch)
+        wl = workload_for(cfg, shape)
+        r = dxpta_search(wl, cons)
+        if r.feasible:
+            print(f"{arch:24s} {'yes':8s} {str(r.best_cfg):34s} "
+                  f"{r.energy_j*1e3:9.1f} {r.latency_s*1e3:9.2f}")
+        else:
+            print(f"{arch:24s} {'NO':8s} {'-':34s} {'-':>9s} {'-':>9s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Post-SPMD HLO parsing: collective bytes per op kind.
+
+cost_analysis() gives FLOPs and memory bytes but not collective traffic, so
+we parse the optimized HLO text (compiled.as_text()) and sum the *result*
+sizes of every collective op. Sizes are per-participant (the module is the
+single SPMD program each device runs), which is the per-chip traffic the
+roofline's collective term wants.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# e.g.:  %all-reduce.5 = f32[16,512]{1,0} all-reduce(%x), replica_groups=...
+#        ROOT %tuple ... (bf16[4,8]{1,0}, f32[2]{0}) all-to-all(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<kind>" + "|".join(COLLECTIVE_KINDS) + r")(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum of collective result bytes per op kind (plus 'total').
+
+    `-done` ops are skipped so async (start/done) pairs count once.
+    """
+    out: Dict[str, float] = defaultdict(float)
+    for m in _OP_RE.finditer(hlo_text):
+        if "-done(" in m.group(0):
+            continue
+        out[m.group("kind")] += _shape_bytes(m.group("shapes"))
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        if "-done(" in m.group(0):
+            continue
+        out[m.group("kind")] += 1
+    return dict(out)
+
+
+# ---------------------------------------------------------------------------
+# Computation-aware accounting: multiply while-loop bodies by trip counts
+# ---------------------------------------------------------------------------
+
+_COMP_HEAD_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s*(?:\([^\n]*\))?\s*->[^\n{]*\{",
+    re.M)
+_WHILE_RE = re.compile(
+    r"while\([^)]*\),\s*condition=%?(?P<cond>[\w\.\-]+),\s*"
+    r"body=%?(?P<body>[\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?(?P<callee>[\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{(?P<names>[^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """{name: body_text} for every computation in the module."""
+    heads = list(_COMP_HEAD_RE.finditer(hlo_text))
+    comps = {}
+    for i, m in enumerate(heads):
+        end = heads[i + 1].start() if i + 1 < len(heads) else len(hlo_text)
+        comps[m.group("name")] = hlo_text[m.end():end]
+        if hlo_text[m.start():m.end()].startswith("ENTRY"):
+            comps["__entry__"] = comps[m.group("name")]
+    return comps
+
+
+def _trip_count(cond_text: str) -> float:
+    """Heuristic scan trip count: the largest integer constant compared in
+    the loop condition (jax scans lower to `iter < length`)."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    return float(max(consts)) if consts else 1.0
+
+
+def collective_bytes_scaled(hlo_text: str) -> Dict[str, float]:
+    """Like collective_bytes, but while-loop bodies are multiplied by their
+    trip counts (layer scans!) by walking the computation call graph from
+    the entry computation."""
+    comps = _split_computations(hlo_text)
+    if "__entry__" not in comps:
+        return collective_bytes(hlo_text)
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def visit(name: str, stack=()) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {}
+        text = comps[name]
+        acc: Dict[str, float] = defaultdict(float)
+        for m in _OP_RE.finditer(text):
+            if "-done(" in m.group(0):
+                continue
+            acc[m.group("kind")] += _shape_bytes(m.group("shapes"))
+        # while loops: body x trips
+        for m in _WHILE_RE.finditer(text):
+            trips = _trip_count(comps.get(m.group("cond"), ""))
+            for k, v in visit(m.group("body"), stack + (name,)).items():
+                acc[k] += v * trips
+        # plain calls / fusions (x1) — skip reducer computations (to_apply
+        # on all-reduce), they hold no collectives anyway
+        for m in _CALL_RE.finditer(text):
+            for k, v in visit(m.group("callee"), stack + (name,)).items():
+                acc[k] += v
+        # conditionals: max branch
+        for m in _BRANCH_RE.finditer(text):
+            branches = [b.strip().lstrip("%") for b in
+                        m.group("names").split(",") if b.strip()]
+            if branches:
+                sub = [visit(b, stack + (name,)) for b in branches]
+                best = max(sub, key=lambda d: sum(d.values()))
+                for k, v in best.items():
+                    acc[k] += v
+        memo[name] = dict(acc)
+        return memo[name]
+
+    out = visit("__entry__")
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out

@@ -1,0 +1,93 @@
+"""Roofline terms from the compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = HLO_FLOPs / (chips * 197e12 FLOP/s)     [bf16]
+    memory term     = HLO_bytes / (chips * 819e9 B/s)         [HBM]
+    collective term = collective_bytes_per_chip / 50e9 B/s    [ICI/link]
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() and are whole-
+program totals (all chips), so they are divided by the chip count;
+collective bytes are parsed per-participant from the SPMD module, so they
+are already per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes_per_chip: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """Perfect-overlap bound: the slowest of the three engines."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs — remat / padding / dispatch waste."""
+        if not self.model_flops or not self.flops:
+            return None
+        return self.model_flops / self.flops
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """Useful-FLOPs MFU bound implied by this program: time the chips
+        *must* spend / time doing useful math at peak."""
+        if not self.model_flops:
+            return None
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        t = self.step_time_lower_bound
+        return t_useful / t if t > 0 else None
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D for training, 2·N·D for forward-only; N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,24 @@
+"""DxPTA core — the paper's contribution.
+
+Pipeline: identify parameters (arch_params) -> analyze significance
+(significance, Alg. 1) -> constraint-aware search (search, Alg. 2) over the
+component-level cost model (photonic_model + performance_model), driven by
+workload descriptions extracted from model configs (workload,
+paper_workloads, and repro.configs for the assigned architectures).
+"""
+from .arch_params import (ALG1_DEFAULTS, LT_BASE, LT_LARGE, PAPER_CONSTRAINTS,
+                          Constraints, PTAConfig, config_grid, iter_configs)
+from .paper_workloads import PAPER_WORKLOADS
+from .performance_model import (calc_edp, eval_full, eval_wload,
+                                eval_wload_arrays, fps, gemm_cycles)
+from .photonic_model import (CONSTANTS, DEFAULT_SRAM_MB, DeviceConstants,
+                             area_breakdown, eval_hw, eval_hw_config,
+                             power_breakdown, sram_mb_for_workload)
+from .search import (SearchResult, build_search_space, dxpta_search,
+                     evaluate_grid, exhaustive_search, grid_search_vectorized,
+                     progressive_candidates)
+from .significance import (SignificanceScore, observe_significance,
+                           significant_params)
+from .workload import Gemm, Workload, merge_workloads, transformer_encoder_workload
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,54 @@
+"""Beyond-paper DSE tooling: Pareto frontier + utilization-aligned candidates.
+
+The paper selects a single feasible min-EDP point. A deployment team usually
+wants the *frontier* (what do I give up in EDP for 5 mm^2 less area?), so we
+expose a Pareto reduction over arbitrary metric subsets, computed on the
+vectorized grid evaluation.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .arch_params import Constraints
+from .search import evaluate_grid
+from .workload import Workload
+
+
+def pareto_mask(points: np.ndarray) -> np.ndarray:
+    """Boolean mask of non-dominated rows (all metrics minimized).
+
+    O(G^2 / 8) vectorized blocks — fine for the <=250k-point DxPTA grids.
+    """
+    g = len(points)
+    mask = np.ones(g, dtype=bool)
+    order = np.argsort(points[:, 0], kind="stable")
+    pts = points[order]
+    for i in range(g):
+        if not mask[i]:
+            continue
+        p = pts[i]
+        # Anything after i in sort order with all metrics >= p (and one >) is
+        # dominated; ties on every metric are kept.
+        later = pts[i + 1:]
+        dom = np.all(later >= p, axis=1) & np.any(later > p, axis=1)
+        mask[i + 1:] &= ~dom
+    out = np.zeros(g, dtype=bool)
+    out[order] = mask
+    return out
+
+
+def pareto_front(grid: np.ndarray, wl: Workload,
+                 metrics: Sequence[str] = ("area", "power", "edp"),
+                 constraints: Constraints | None = None):
+    """(front_grid, front_metrics) of non-dominated feasible configs."""
+    m = evaluate_grid(grid, wl)
+    keep = np.ones(len(grid), dtype=bool)
+    if constraints is not None:
+        keep = np.asarray(constraints.satisfied(
+            m["area"], m["power"], m["energy"], m["latency"]))
+    pts = np.stack([np.asarray(m[k])[keep] for k in metrics], axis=1)
+    sub = grid[keep]
+    mask = pareto_mask(pts)
+    return sub[mask], {k: np.asarray(m[k])[keep][mask] for k in metrics}

@@ -1,0 +1,109 @@
+"""Latency/energy model of a workload on a PTA config (eval_wload in Alg. 2).
+
+Dataflow (paper Fig. 6 + Sec. III-A): for a GEMM (M, K, N)
+  * tiles split the M dimension (data chunks -> tiles),
+  * the DDot array covers N_h rows (M) x N_v columns (N) per cycle,
+  * cores within a tile split the contraction K (partial photocurrents are
+    accumulated before the shared tile ADC array),
+  * each DDot contracts N_lambda WDM wavelengths per cycle,
+
+  cycles = ceil(M / (N_t*N_h)) * ceil(N / N_v) * ceil(K / (N_c*N_lambda))
+
+The ceil() terms are where the paper's "evenly-sized data dimension" guidance
+matters: misaligned N_h/N_v/N_lambda waste duty cycles (utilization < 1).
+
+Latency = max(photonic GEMM time, off-chip streaming time)   [double-buffered]
+          + electronic-unit time (softmax/LN/act/recurrences, not overlapped).
+Energy  = chip power x latency + DRAM traffic + SRAM operand traffic.
+
+All functions are `xp`-agnostic (numpy / jax.numpy) and broadcast over a grid
+of configs: pass cfg columns shaped (G, 1) against workload rows shaped (W,).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .photonic_model import CONSTANTS, DeviceConstants, eval_hw, sram_mb_for_workload
+from .workload import Workload
+
+
+def _ceil_div(a, b, xp):
+    return (a + b - 1) // b
+
+
+def gemm_cycles(m, k, n, n_t, n_c, n_h, n_v, n_l, xp=np):
+    """Photonic cycles for one GEMM on one config (broadcastable)."""
+    return (_ceil_div(m, n_t * n_h, xp)
+            * _ceil_div(n, n_v, xp)
+            * _ceil_div(k, n_c * n_l, xp))
+
+
+def eval_wload_arrays(n_t, n_c, n_h, n_v, n_l, gemm_array, elec_ops,
+                      weight_bytes, act_io_bytes, sram_mb,
+                      c: DeviceConstants = CONSTANTS, xp=np):
+    """(energy_J, latency_s, utilization) for config grid x one workload.
+
+    Args:
+      n_t..n_l: scalars or (G,) arrays (the config grid columns).
+      gemm_array: (W, 4) [M, K, N, count].
+      elec_ops / weight_bytes / act_io_bytes / sram_mb: workload scalars.
+    """
+    n_t, n_c, n_h, n_v, n_l = (xp.asarray(a)[..., None] for a in
+                               (n_t, n_c, n_h, n_v, n_l))  # (G, 1)
+    # Promote to float before any products: MAC counts overflow int32 (the
+    # jax default int width). Per-element dims are small, so the conversion
+    # itself is exact; float products carry ~1e-7 relative error at worst.
+    g = xp.asarray(gemm_array) * 1.0
+    m, k, n, count = g[:, 0], g[:, 1], g[:, 2], g[:, 3]      # (W,)
+
+    cyc = gemm_cycles(m, k, n, n_t, n_c, n_h, n_v, n_l, xp) * count  # (G, W)
+    total_cycles = xp.sum(cyc, axis=-1)                               # (G,)
+    macs = xp.sum(m * k * n * count)
+    peak_macs = (n_t * n_h * n_v * n_c * n_l)[..., 0]
+    util = macs / xp.maximum(total_cycles * peak_macs, 1.0)
+
+    t_photonic = total_cycles / c.f_clk_hz
+    t_mem = (weight_bytes + act_io_bytes) / c.dram_bw_bytes
+    t_elec = elec_ops / c.elec_ops_per_s
+    latency = xp.maximum(t_photonic, t_mem) + t_elec
+
+    _, power = eval_hw(n_t[..., 0], n_c[..., 0], n_h[..., 0], n_v[..., 0],
+                       n_l[..., 0], sram_mb, c, xp)
+    # SRAM operand streaming: X rows (N_t*N_h lanes) + Y cols (N_v lanes),
+    # each N_c*N_lambda values deep, every cycle, at act_bits precision.
+    lanes = (n_t * n_h + n_v) * n_c * n_l
+    sram_bytes = xp.sum(cyc * lanes, axis=-1) * c.act_bits / 8.0
+    energy = (power * latency
+              + c.e_dram_per_byte * (weight_bytes + act_io_bytes)
+              + c.e_sram_per_byte * sram_bytes)
+    return energy, latency, util
+
+
+def eval_wload(cfg, wl: Workload, c: DeviceConstants = CONSTANTS, xp=np):
+    """Alg. 2 line 12: (energy_J, latency_s) for one PTAConfig + Workload."""
+    sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
+    e, l, _ = eval_wload_arrays(
+        cfg.n_t, cfg.n_c, cfg.n_h, cfg.n_v, cfg.n_lambda, wl.gemm_array,
+        wl.elec_ops, wl.weight_bytes, wl.act_io_bytes, sram_mb, c, xp)
+    return float(e), float(l)
+
+
+def eval_full(cfg, wl: Workload, c: DeviceConstants = CONSTANTS):
+    """(area_mm2, power_w, energy_J, latency_s, util) for one config."""
+    sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
+    area, power = eval_hw(cfg.n_t, cfg.n_c, cfg.n_h, cfg.n_v, cfg.n_lambda,
+                          sram_mb, c)
+    e, l, u = eval_wload_arrays(
+        cfg.n_t, cfg.n_c, cfg.n_h, cfg.n_v, cfg.n_lambda, wl.gemm_array,
+        wl.elec_ops, wl.weight_bytes, wl.act_io_bytes, sram_mb, c)
+    return float(area), float(power), float(e), float(l), float(u)
+
+
+def calc_edp(energy_j, latency_s):
+    """Alg. 2 line 14: energy-delay product (J*s)."""
+    return energy_j * latency_s
+
+
+def fps(wl: Workload, latency_s: float) -> float:
+    """Inferences per second (Fig. 11 metric)."""
+    return wl.batch / latency_s

@@ -1,0 +1,169 @@
+"""Component-level area/power model of the LT-style PTA (eval_hw in Alg. 2).
+
+Open re-derivation of the paper's hardware evaluation (the paper uses the
+Lumerical-calibrated LT simulator, which is not public). Constants are
+literature-plausible per-device numbers *calibrated* so that the model's
+observable endpoints match the paper:
+
+  * LT-Base (Nt=4,Nc=2,12/12/12)  ->  ~60 mm^2, ~15 W      (paper Sec. V-A)
+  * LT-Large (Nt=8,Nc=2,12/12/12) ->  ~112 mm^2, ~28 W
+  * Alg.1 significance:  S_P(Nt)~1.26, S_A(Nt)~1.24, S_P(Nc)~1.23,
+    S_A(Nc)~1.20, and N_v/N_h/N_lambda bounded by ~1.16x power / ~1.06x area
+    per unit (paper Fig. 7 + Sec. III-B bullets)
+  * area dominated by memory/DAC/cores, power by MZM/DAC/PD/ADC (paper Fig.10)
+
+Validated in tests/test_calibration.py. Everything is written `xp`-agnostic
+(numpy for the paper-faithful sequential search, jax.numpy for the vectorized
+grid search and the Pallas-kernel oracle).
+
+Architecture accounting (per the coherent optical dataflow, Sec. III-A):
+
+  core  = N_h*N_v DDots (DC + phase shifter + balanced PD pair), the per-core
+          MZM operand modulators + DACs ((N_h+N_v)*N_lambda high-speed
+          channels — dynamic full-range encoding is what makes the DPTC
+          "dynamically operated"), and the accumulator lanes.
+  tile  = N_c cores + the *shared* tile-level ADC/TIA array (cores within a
+          tile split the contraction; their partial products are combined
+          before conversion), frequency-comb laser (N_lambda lines), control.
+  chip  = N_t tiles + inter-tile optical broadcast network (grows ~Nt^2),
+          derived global SRAM, off-chip interface + global control.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConstants:
+    # --- clock ---
+    f_clk_hz: float = 10e9         # photonic compute / conversion clock
+
+    # --- per-device area (mm^2) ---
+    a_mzm: float = 0.0095          # high-speed Mach-Zehnder modulator
+    a_dac: float = 0.0038          # 4-bit multi-GS/s DAC channel
+    a_ddot: float = 0.0040         # DC + phase shifter + 2 balanced PDs
+    a_acc: float = 0.0010          # analog accumulator lane per DDot output
+    a_core_fixed: float = 0.05
+    a_adc: float = 0.0052          # 4-bit ADC (tile-shared array)
+    a_tia: float = 0.0008
+    a_comb_base: float = 0.25      # frequency comb laser + mux
+    a_comb_per_lambda: float = 0.02
+    a_tile_fixed: float = 0.45     # tile control, clocking, local routing
+    a_inter_tile_net: float = 0.30  # * Nt^2 — global optical broadcast network
+    a_sram_per_mb: float = 0.55
+    a_chip_fixed: float = 5.60     # off-chip PHY, global control, I/O ring
+
+    # --- per-device power (W) ---
+    p_mzm: float = 1.5e-3          # modulator driver @ 4b/5GHz
+    p_dac: float = 2.3e-3
+    p_pd: float = 0.3e-3           # per photodiode (2 per DDot)
+    p_acc: float = 0.4e-3
+    p_core_fixed: float = 0.010
+    p_adc: float = 1.45e-3
+    p_tia: float = 0.15e-3
+    p_comb_base: float = 0.020
+    p_comb_per_lambda: float = 0.001
+    p_laser_split: float = 2.0e-5  # * N_lambda*N_h*N_v — optical power budget
+                                   # to overcome the splitting/insertion loss
+    p_tile_fixed: float = 0.005
+    p_inter_tile_net: float = 0.09  # * Nt^2 — clock/serdes + thermal tuning
+    p_sram_per_mb: float = 0.090   # leakage + refresh-equivalent static
+    p_chip_fixed: float = 1.66     # DRAM PHY, global control
+
+    # --- energy (J) per event, for eval_wload ---
+    e_dram_per_byte: float = 16e-12
+    e_sram_per_byte: float = 0.8e-12
+
+    # --- memory system ---
+    dram_bw_bytes: float = 64e9    # off-chip bandwidth
+    sram_min_mb: float = 4.0
+    sram_max_mb: float = 64.0
+
+    # --- electronic unit (softmax / LN / GELU / residual / scan) ---
+    elec_ops_per_s: float = 5e11   # elementwise-op throughput
+    p_elec: float = 0.15           # active power of the electronic unit (in
+                                   # p_chip_fixed's budget; kept for energy)
+
+    # --- operand precision (LT is a 4-bit design) ---
+    act_bits: int = 4
+    weight_bits: int = 4
+
+
+CONSTANTS = DeviceConstants()
+
+DEFAULT_SRAM_MB = 8.0  # used by eval_hw when no workload is attached (Alg. 1)
+
+
+def sram_mb_for_workload(max_act_bytes: float, c: DeviceConstants = CONSTANTS) -> float:
+    """Derived global SRAM size (Sec. III-A observation 2).
+
+    Minimum required: double-buffered largest layer activation plus an
+    off-chip staging region; clipped to practical bounds. Not a searched
+    parameter — growing it past the minimum only adds static power, shrinking
+    it below forces expensive off-chip traffic.
+    """
+    mb = 2.0 * max_act_bytes / 2**20 + 2.0
+    return float(np.clip(mb, c.sram_min_mb, c.sram_max_mb))
+
+
+def _counts(n_t, n_c, n_h, n_v, n_l, xp=np):
+    cores = n_t * n_c
+    mod_channels = cores * (n_h + n_v) * n_l   # MZM+DAC channels (per core)
+    ddots = cores * n_h * n_v
+    adc_chains = n_t * n_h * n_v               # shared per tile
+    return cores, mod_channels, ddots, adc_chains
+
+
+def area_breakdown(n_t, n_c, n_h, n_v, n_l, sram_mb=DEFAULT_SRAM_MB,
+                   c: DeviceConstants = CONSTANTS, xp=np):
+    """Per-component chip area in mm^2. All args broadcastable arrays or scalars."""
+    cores, mod_channels, ddots, adc_chains = _counts(n_t, n_c, n_h, n_v, n_l, xp)
+    return {
+        "mzm": mod_channels * c.a_mzm,
+        "dac": mod_channels * c.a_dac,
+        "core_optics": ddots * c.a_ddot + ddots * c.a_acc + cores * c.a_core_fixed,
+        "adc": adc_chains * (c.a_adc + c.a_tia),
+        "laser_comb": n_t * (c.a_comb_base + c.a_comb_per_lambda * n_l),
+        "tile_misc": n_t * c.a_tile_fixed,
+        "optical_network": c.a_inter_tile_net * n_t * n_t,
+        "memory": sram_mb * c.a_sram_per_mb,
+        "chip_misc": c.a_chip_fixed + 0.0 * n_t,  # broadcast helper
+    }
+
+
+def power_breakdown(n_t, n_c, n_h, n_v, n_l, sram_mb=DEFAULT_SRAM_MB,
+                    c: DeviceConstants = CONSTANTS, xp=np):
+    """Per-component chip power in W (peak active)."""
+    cores, mod_channels, ddots, adc_chains = _counts(n_t, n_c, n_h, n_v, n_l, xp)
+    laser = n_t * (c.p_comb_base + c.p_comb_per_lambda * n_l) \
+        + n_t * c.p_laser_split * n_l * n_h * n_v
+    return {
+        "mzm": mod_channels * c.p_mzm,
+        "dac": mod_channels * c.p_dac,
+        "pd": ddots * 2 * c.p_pd,
+        "adc": adc_chains * (c.p_adc + c.p_tia),
+        "accum": ddots * c.p_acc + cores * c.p_core_fixed,
+        "laser": laser,
+        "tile_misc": n_t * c.p_tile_fixed,
+        "network_clock": c.p_inter_tile_net * n_t * n_t,
+        "memory": sram_mb * c.p_sram_per_mb,
+        "chip_misc": c.p_chip_fixed + 0.0 * n_t,
+    }
+
+
+def eval_hw(n_t, n_c, n_h, n_v, n_l, sram_mb=DEFAULT_SRAM_MB,
+            c: DeviceConstants = CONSTANTS, xp=np):
+    """Alg. 2 line 11: (area_mm2, power_w) for config(s).
+
+    Vectorized: pass arrays for the five parameters to evaluate a whole grid.
+    """
+    area = sum(area_breakdown(n_t, n_c, n_h, n_v, n_l, sram_mb, c, xp).values())
+    power = sum(power_breakdown(n_t, n_c, n_h, n_v, n_l, sram_mb, c, xp).values())
+    return area, power
+
+
+def eval_hw_config(cfg, sram_mb=DEFAULT_SRAM_MB, c: DeviceConstants = CONSTANTS):
+    """Scalar convenience wrapper over a PTAConfig."""
+    return eval_hw(cfg.n_t, cfg.n_c, cfg.n_h, cfg.n_v, cfg.n_lambda, sram_mb, c)

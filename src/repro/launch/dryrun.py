@@ -1,0 +1,328 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable (e)): lower + compile every
+(architecture x input-shape x mesh) cell against the production meshes with
+512 placeholder host devices, then extract memory/cost/collective figures
+for the roofline analysis (deliverable (g)).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all \
+        --out results/dryrun.json
+
+Nothing here allocates model memory: params/optimizer/caches/batches are
+jax.ShapeDtypeStructs with NamedShardings; .lower().compile() proves the
+distribution (sharding propagation, collectives, per-device buffers) is
+coherent.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+import repro.models as models
+from repro.analysis.hlo import (collective_bytes, collective_bytes_scaled,
+                                collective_counts)
+from repro.analysis.jaxpr_cost import trace_flops
+from repro.analysis.roofline import Roofline, model_flops
+from repro.configs import SHAPES_BY_NAME, get_config, list_archs, reduced
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.parallel.specs import batch_specs, cache_specs, param_specs
+from repro.train.trainer import make_train_step
+
+# long_500k eligibility (DESIGN.md §5): sub-quadratic/bounded-KV archs only.
+LONG_OK = {"zamba2-7b", "rwkv6-7b", "gemma3-4b", "h2o-danube-1.8b"}
+
+_CONTEXT_PARALLEL = False  # set by apply_perf_flags (hillclimb)
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig, mesh) -> shd.Rules:
+    if shape.kind == "train":
+        rules = shd.TRAIN_RULES
+    elif shape.kind == "prefill":
+        rules = shd.PREFILL_RULES
+    elif shape.name.startswith("long"):
+        rules = shd.LONG_DECODE_RULES
+    else:
+        rules = shd.DECODE_RULES
+    rules = shd.for_mesh(rules, mesh)
+    # Huge-expert MoE *decode*: EP across the whole non-pod mesh
+    # (DeepSeek-V3: 256 experts over 256 chips/pod — the weights dominate).
+    # Prefill keeps model-only EP so the cumsum dispatch can group tokens
+    # over the data axis (full-mesh EP at 1M prefill tokens re-creates the
+    # global-scatter pathology; see EXPERIMENTS §Perf).
+    if cfg.moe and cfg.moe.n_experts >= 64 and shape.kind == "decode":
+        ep = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+        rules = dataclasses.replace(rules, expert_axes=ep)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    groups = 1
+    if not rules.expert_axes:  # full-mesh EP owns the data axis: one group
+        for a in rules.data_axes:
+            groups *= sizes.get(a, 1)
+    rules = dataclasses.replace(rules, moe_groups=groups)
+    if _CONTEXT_PARALLEL and shape.kind in ("prefill", "train"):
+        rules = dataclasses.replace(rules, context_parallel=True)
+    return rules
+
+
+def _sds(tree_shapes, tree_specs, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree. Specs are
+    sanitized per-leaf (input arrays must divide evenly; e.g. a 2-KV-head
+    axis moves its 'model' sharding onto head_dim)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def f(s, spec):
+        spec = shd.sanitize_spec(s.shape, spec if spec is not None else P(),
+                                 sizes)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(f, tree_shapes, tree_specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                rules) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    bspec = batch_specs(cfg, rules)
+    out = {}
+    if shape.kind == "decode":
+        toks = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        out["tokens"] = _sds(toks, P(rules._d(), None), mesh)
+        return out
+    n_text = s
+    if cfg.family == "vlm":
+        p = cfg.n_prefix_embeds
+        n_text = s - p
+        out["embeds"] = _sds(jax.ShapeDtypeStruct((b, p, cfg.d_model),
+                                                  jnp.float32),
+                             bspec["embeds"], mesh)
+    if cfg.family == "encdec":
+        n_text = s // 2
+        out["src_embeds"] = _sds(
+            jax.ShapeDtypeStruct((b, s - n_text, cfg.d_model), jnp.float32),
+            bspec["src_embeds"], mesh)
+    out["tokens"] = _sds(jax.ShapeDtypeStruct((b, n_text), jnp.int32),
+                         bspec["tokens"], mesh)
+    return out
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Returns (step_fn, abstract_args tuple) for lowering."""
+    rules = rules_for(cfg, shape, mesh)
+    params_shapes = jax.eval_shape(
+        lambda: models.init_params(jax.random.key(0), cfg))
+    pspecs = param_specs(cfg, rules, params_tree=params_shapes)
+    params = _sds(params_shapes, pspecs, mesh)
+    batch = input_specs(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        # bf16 moments for the 671B config: fp32 moments do not fit a
+        # single pod (see EXPERIMENTS §Dry-run).
+        mdt = jnp.bfloat16 if cfg.param_count() > 1e11 else jnp.float32
+        opt_cfg = adamw.AdamWConfig(moment_dtype=mdt)
+        opt_shapes = jax.eval_shape(partial(adamw.init, opt_cfg),
+                                    params_shapes)
+        ospecs = adamw.OptState(step=P(), mu=pspecs, nu=pspecs)
+        opt = _sds(opt_shapes, ospecs, mesh)
+        fn = make_train_step(cfg, opt_cfg, rules)
+        return fn, (params, opt, batch)
+
+    if shape.kind == "prefill":
+        fn = lambda p, b: models.prefill(p, cfg, b, rules=rules)
+        return fn, (params, batch)
+
+    # decode
+    cache_shapes = jax.eval_shape(
+        lambda: models.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                  src_len=shape.seq_len // 2))
+    cspecs = cache_specs(cfg, rules)
+    cache = _sds(cache_shapes, cspecs, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    fn = lambda p, t, pos_, c: models.decode_step(p, cfg, t, pos_, c,
+                                                  rules=rules)
+    return fn, (params, batch["tokens"], pos, cache)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = {"arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "chips": mesh.size}
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        cell.update(status="skipped",
+                    reason="pure full-attention arch: no sub-quadratic path "
+                           "(DESIGN.md §5)")
+        return cell
+    t0 = time.perf_counter()
+    try:
+        shd.set_active_axis_sizes(dict(zip(mesh.axis_names,
+                                           mesh.devices.shape)))
+        fn, args = build_cell(cfg, shape, mesh)
+        # donate the state that is consumed (params+opt in train, the KV
+        # cache in decode) so memory_analysis reflects in-place aliasing
+        donate = {"train": (0, 1), "prefill": (), "decode": (3,)}[shape.kind]
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+            # FLOPs: jaxpr-level accounting with scan trip counts (traced
+            # under the mesh: sharding constraints need the context)
+            flops = trace_flops(fn, *args)
+            hbm = _state_traffic_bytes(cfg, shape, args, fn)
+        t_compile = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # Collectives: while-bodies (layer scans) multiplied by trip count.
+        coll = collective_bytes_scaled(hlo)
+        counts = collective_counts(hlo)
+        mf = model_flops(cfg, shape)
+        rl = Roofline(flops=flops, hbm_bytes=hbm,
+                      collective_bytes_per_chip=coll.get("total", 0.0),
+                      chips=mesh.size, model_flops=mf)
+        cell.update(
+            status="ok", compile_s=t_compile,
+            memory=_mem_dict(mem),
+            xla_cost={k: cost[k] for k in ("flops", "bytes accessed")
+                      if k in cost},  # raw (per-scan-body) reference only
+            collectives={k: v for k, v in coll.items()},
+            collective_counts=counts,
+            roofline=rl.as_dict())
+        if verbose:
+            print(f"[ok] {arch} x {shape_name} x {cell['mesh']}  "
+                  f"compile={t_compile:.1f}s  bottleneck="
+                  f"{rl.bottleneck}  frac={rl.roofline_fraction}")
+    except Exception as e:  # noqa: BLE001 — cell failures are data
+        cell.update(status="error", error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc(limit=8),
+                    compile_s=time.perf_counter() - t0)
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {cell['mesh']}: "
+                  f"{cell['error']}")
+    return cell
+
+
+def _bytes_of(tree) -> float:
+    return float(sum(np.prod(l.shape) * l.dtype.itemsize
+                     for l in jax.tree.leaves(tree)))
+
+
+def _state_traffic_bytes(cfg, shape, args, fn) -> float:
+    """Per-step whole-program HBM traffic (analytic lower bound): every
+    input read once + every output written once + the activation stream
+    (layers x tokens x d_model, forward write/read and — for training —
+    remat recompute)."""
+    in_bytes = _bytes_of(args)
+    out_bytes = _bytes_of(jax.eval_shape(fn, *args))
+    tokens = shape.global_batch * shape.seq_len
+    layers = (cfg.enc_layers + cfg.dec_layers) or cfg.n_layers
+    passes = {"train": 4.0, "prefill": 2.0, "decode": 0.0}[shape.kind]
+    act = passes * layers * tokens * cfg.d_model * 2.0
+    return in_bytes + out_bytes + act
+
+
+def _mem_dict(mem) -> Dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr] = int(getattr(mem, attr))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(SHAPES_BY_NAME))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--moe-dispatch", choices=["sort", "cumsum"],
+                    default=None)
+    ap.add_argument("--wkv-mode", choices=["scan", "chunked"], default=None)
+    ap.add_argument("--context-parallel", action="store_true")
+    ap.add_argument("--gqa-mode", choices=["grouped", "repeat_kv"],
+                    default=None)
+    ap.add_argument("--xent-mode", choices=["gather", "onehot"],
+                    default=None)
+    args = ap.parse_args()
+    apply_perf_flags(args.moe_dispatch, args.wkv_mode,
+                     args.context_parallel, args.gqa_mode, args.xent_mode)
+
+    cells = []
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        targets = [(a, s) for a in list_archs() for s in SHAPES_BY_NAME]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        targets = [(args.arch, args.shape)]
+    for arch, shape in targets:
+        for mp in meshes:
+            cells.append(run_cell(arch, shape, mp))
+            jax.clear_caches()  # keep 80-cell sweeps within host RAM
+            if args.out:        # incremental save: long sweeps are resumable
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as fh:
+                    json.dump(cells, fh, indent=1)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as fh:
+            json.dump(cells, fh, indent=1)
+        print(f"wrote {len(cells)} cells -> {args.out}")
+    ok = sum(c["status"] == "ok" for c in cells)
+    skip = sum(c["status"] == "skipped" for c in cells)
+    err = sum(c["status"] == "error" for c in cells)
+    print(f"cells: {ok} ok, {skip} skipped, {err} failed")
+    return 1 if err else 0
+
+
+
+
+# ---------------------------------------------------------------------------
+# Hillclimb knobs (EXPERIMENTS §Perf): every optimization is a CLI flag so
+# each hypothesis -> change -> re-lower -> measure cycle is reproducible.
+# ---------------------------------------------------------------------------
+
+def apply_perf_flags(moe_dispatch=None, wkv_mode=None,
+                     context_parallel=False, gqa_mode=None, xent_mode=None):
+    from repro.models import layers as layers_mod
+    from repro.models import moe as moe_mod
+    from repro.models import rwkv as rwkv_mod
+    if moe_dispatch:
+        moe_mod.DISPATCH_MODE = moe_dispatch
+    if wkv_mode:
+        rwkv_mod.WKV_MODE = wkv_mode
+    if gqa_mode:
+        layers_mod.set_gqa_mode(gqa_mode)
+    if xent_mode:
+        layers_mod.set_xent_mode(xent_mode)
+    global _CONTEXT_PARALLEL
+    _CONTEXT_PARALLEL = context_parallel
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,25 @@
+"""Production mesh definitions.
+
+Single pod: (data=16, model=16) — 256 v5e chips.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the pod axis is pure
+data parallelism (one cross-pod gradient all-reduce per step; DCN-friendly).
+
+`make_production_mesh` is a function (never a module constant) so importing
+this module touches no jax device state — required because the dry-run must
+set XLA_FLAGS before any backend initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has — used by examples/tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

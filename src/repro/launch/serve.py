@@ -1,0 +1,44 @@
+"""Serving launcher: batched greedy generation + DxPTA co-design report.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+import repro.models as M
+from repro.configs import get_config, list_archs, reduced
+from repro.models.layers import set_exec_safe
+from repro.train.serve import Request, Server, photonic_report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+        set_exec_safe(True)
+    params = M.init_params(jax.random.key(0), cfg)
+    srv = Server(cfg, params, batch_size=args.batch, max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(1, cfg.vocab, size=8).astype(np.int32),
+                    max_new=args.max_new) for _ in range(args.batch)]
+    stats = srv.generate(reqs)
+    print(f"{stats['tokens']} tokens: ttft={stats['ttft_s']*1e3:.1f}ms "
+          f"decode={stats['decode_s_per_tok']*1e3:.2f}ms/tok")
+    print(photonic_report(get_config(args.arch), seq_len=args.max_len,
+                          batch=args.batch, new_tokens=args.max_new))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Training launcher.
+
+On this host:  PYTHONPATH=src python -m repro.launch.train --arch <id> \
+                   --steps 30 --reduced
+On a fleet: every worker runs the same command after jax.distributed
+initialization (--coordinator); the mesh spans all chips, shardings come
+from repro.parallel, and checkpoints land in --ckpt-dir (auto-resume).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import SHAPES_BY_NAME, get_config, list_archs, reduced
+from repro.configs.base import ShapeConfig
+from repro.models.layers import set_exec_safe
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES_BY_NAME))
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config + tiny shape (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port for jax.distributed (multi-host)")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.coordinator:
+        jax.distributed.initialize(args.coordinator, args.num_processes,
+                                   args.process_id)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+        shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+        set_exec_safe(True)
+    else:
+        shape = SHAPES_BY_NAME[args.shape or "train_4k"]
+
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(cfg, shape, tcfg=tcfg,
+                      opt_cfg=adamw.AdamWConfig(lr=args.lr,
+                                                total_steps=args.steps))
+    out = trainer.run()
+    print(f"done: step {out['final_step']}, loss {out['losses'][-1]:.4f}, "
+          f"stragglers {out['straggler_steps']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Model zoo facade: dispatch on cfg.family to the LM or enc-dec assembly."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import encdec, lm
+from .layers import DTYPE
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg)
+    return lm.init_params(key, cfg)
+
+
+def forward(params, cfg, batch, rules=None, remat=True):
+    from repro.parallel.sharding import NULL_RULES
+    rules = rules or NULL_RULES
+    fn = encdec.forward if cfg.family == "encdec" else lm.forward
+    return fn(params, cfg, batch, rules, remat)
+
+
+def lm_loss(params, cfg, batch, rules=None, remat=True, **kw):
+    from repro.parallel.sharding import NULL_RULES
+    rules = rules or NULL_RULES
+    fn = encdec.lm_loss if cfg.family == "encdec" else lm.lm_loss
+    return fn(params, cfg, batch, rules, remat, **kw)
+
+
+def prefill(params, cfg, batch, rules=None):
+    from repro.parallel.sharding import NULL_RULES
+    rules = rules or NULL_RULES
+    fn = encdec.prefill if cfg.family == "encdec" else lm.prefill
+    return fn(params, cfg, batch, rules)
+
+
+def decode_step(params, cfg, tokens, pos, cache, rules=None):
+    from repro.parallel.sharding import NULL_RULES
+    rules = rules or NULL_RULES
+    fn = encdec.decode_step if cfg.family == "encdec" else lm.decode_step
+    return fn(params, cfg, tokens, pos, cache, rules)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0):
+    if cfg.family == "encdec":
+        dh = cfg.resolved_head_dim
+        return {
+            "k": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.n_kv_heads,
+                            dh), DTYPE),
+            "v": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.n_kv_heads,
+                            dh), DTYPE),
+            "cross_k": jnp.zeros((cfg.dec_layers, batch, src_len,
+                                  cfg.n_kv_heads, dh), DTYPE),
+            "cross_v": jnp.zeros((cfg.dec_layers, batch, src_len,
+                                  cfg.n_kv_heads, dh), DTYPE),
+        }
+    return lm.init_cache(cfg, batch, max_len)
+
+
+__all__ = ["init_params", "forward", "lm_loss", "prefill", "decode_step",
+           "init_cache"]

@@ -1,0 +1,282 @@
+"""Common transformer layers: RMSNorm, RoPE, GQA attention (global / sliding
+window / softcap / bias), gated MLP, embeddings, losses.
+
+Functional style: every module has `init_*(key, cfg) -> params` (a dict) and
+an apply function. Mixed precision: params and activations bf16, norms and
+softmax in f32, matmuls accumulate in f32. Sharding is expressed through
+`rules` (repro.parallel.sharding.Rules) — pass NULL_RULES on a single device.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import NULL_RULES, shard
+
+DTYPE = jnp.bfloat16
+
+# XLA's CPU thunk runtime lacks several bf16 x bf16 -> f32 dot kernels. When
+# executing on CPU (smoke tests, examples), enable exec-safe mode: operands
+# are cast to f32 (bit-identical accumulation, since bf16 embeds exactly in
+# f32). The dry-run leaves this OFF so the lowered HLO is the TPU-intended
+# mixed-precision program.
+_EXEC_SAFE = False
+
+
+def set_exec_safe(v: bool) -> None:
+    global _EXEC_SAFE
+    _EXEC_SAFE = bool(v)
+
+
+def einsum32(eq, *ops):
+    """einsum with f32 accumulation (MXU-native on TPU; exec-safe on CPU)."""
+    if _EXEC_SAFE:
+        return jnp.einsum(eq, *(o.astype(jnp.float32) for o in ops))
+    return jnp.einsum(eq, *ops, preferred_element_type=jnp.float32)
+
+
+def matmul32(a, b):
+    if _EXEC_SAFE:
+        return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def _normal(key, shape, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(DTYPE)
+
+
+def dense(x, w):
+    """x @ w with f32 accumulation, output in x.dtype."""
+    return matmul32(x, w).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), DTYPE)}
+
+
+def rms_norm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta=10000.0):
+    """x: (B, S, H, D), positions: (B, S) int."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA; global or sliding-window; optional logit softcap / bias)
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg, d_model=None):
+    d = d_model or cfg.d_model
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "wq": _normal(ks[0], (d, cfg.n_heads, dh), scale),
+        "wk": _normal(ks[1], (d, cfg.n_kv_heads, dh), scale),
+        "wv": _normal(ks[2], (d, cfg.n_kv_heads, dh), scale),
+        "wo": _normal(ks[3], (cfg.n_heads, dh, d), (cfg.n_heads * dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, dh), DTYPE)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, dh), DTYPE)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, dh), DTYPE)
+    return p
+
+
+def attention_specs(rules):
+    return {"wq": rules.w_qkv, "wk": rules.w_qkv, "wv": rules.w_qkv,
+            "wo": rules.w_out, "bq": rules.b_model, "bk": rules.replicated,
+            "bv": rules.replicated}
+
+
+def attn_mask(q_pos, kv_pos, window: int = 0, is_local=None):
+    """(B, Sq, Skv) bool. Causal, optionally sliding-window.
+
+    `is_local` may be a traced scalar bool (per-layer flag inside a scan):
+    the window constraint is applied via where(), keeping one code path.
+    """
+    causal = kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window <= 0:
+        return causal
+    in_win = kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if is_local is None:
+        return causal & in_win
+    return causal & jnp.where(is_local, in_win, True)
+
+
+# GQA evaluation mode: "grouped" computes on the (B,S,Hkv,G,D) view (no KV
+# duplication, but the 5-D grouped tensors reshard poorly under GSPMD —
+# "involuntary full rematerialization" in the backward); "repeat_kv"
+# broadcasts K/V to the full head count first (plain MHA einsums, clean
+# head sharding, G x more KV activation). See EXPERIMENTS §Perf (H2).
+GQA_MODE = "grouped"
+
+
+def set_gqa_mode(mode: str) -> None:
+    global GQA_MODE
+    assert mode in ("grouped", "repeat_kv")
+    GQA_MODE = mode
+
+
+def gqa_attend(q, k, v, mask, softcap: float = 0.0):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); mask: (B, Sq, Skv) bool."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if GQA_MODE == "repeat_kv" and g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        g, hkv = 1, hq
+    if g == 1:
+        scores = einsum32("bqhd,bkhd->bhqk", q, k) * (d ** -0.5)
+        if softcap > 0.0:
+            scores = softcap * jnp.tanh(scores / softcap)
+        scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = einsum32("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+        return out.astype(v.dtype)
+    q = q.reshape(b, sq, hkv, g, d)
+    scores = einsum32("bqhgd,bkhd->bhgqk", q, k)
+    scores = scores * (d ** -0.5)
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = einsum32("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, d).astype(v.dtype)
+
+
+def apply_attention(params, cfg, x, positions, *, kv=None, kv_positions=None,
+                    is_local=None, rules=NULL_RULES, causal=True):
+    """Self-attention over x, or incremental attention against provided kv.
+
+    kv: optional (k, v) tensors (decode path: the full cache); when given,
+    `kv_positions` masks out unwritten cache slots.
+    """
+    q = einsum32("bsd,dhk->bshk", x, params["wq"]).astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"]
+    q = rope(q, positions, cfg.rope_theta)
+    q = shard(q, rules.heads)
+    if kv is None:
+        k = einsum32("bsd,dhk->bshk", x, params["wk"]).astype(x.dtype)
+        v = einsum32("bsd,dhk->bshk", x, params["wv"]).astype(x.dtype)
+        if "bk" in params:
+            k = k + params["bk"]
+            v = v + params["bv"]
+        k = rope(k, positions, cfg.rope_theta)
+        kv_spec = getattr(rules, "kv_heads", None) or rules.heads
+        k = shard(k, kv_spec)
+        v = shard(v, kv_spec)
+        kv_positions = positions
+    else:
+        k, v = kv
+    if causal:
+        mask = attn_mask(positions, kv_positions, cfg.sliding_window, is_local)
+    else:  # encoder: bidirectional over valid positions
+        mask = (kv_positions >= 0)[:, None, :] & jnp.ones(
+            (x.shape[0], x.shape[1], 1), bool)
+    out = gqa_attend(q, k, v, mask, cfg.attn_logit_softcap)
+    out = einsum32("bshk,hkd->bsd", out, params["wo"]).astype(x.dtype)
+    return out
+
+
+def project_kv(params, cfg, x, positions):
+    """K/V for cache population (prefill) or appending (decode)."""
+    k = einsum32("bsd,dhk->bshk", x, params["wk"]).astype(x.dtype)
+    v = einsum32("bsd,dhk->bshk", x, params["wv"]).astype(x.dtype)
+    if "bk" in params:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    k = rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d, d_ff):
+    ks = jax.random.split(key, 3)
+    return {"wi": _normal(ks[0], (d, d_ff), d ** -0.5),
+            "wg": _normal(ks[1], (d, d_ff), d ** -0.5),
+            "wo": _normal(ks[2], (d_ff, d), d_ff ** -0.5)}
+
+
+def mlp_specs(rules):
+    return {"wi": rules.w_col, "wg": rules.w_col, "wo": rules.w_row}
+
+
+def apply_mlp(params, x, act="silu", rules=NULL_RULES):
+    h = dense(x, params["wi"])
+    g = dense(x, params["wg"])
+    h = shard(h, rules.ffn_hidden)
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return dense(h * a, params["wo"])
+
+
+# --------------------------------------------------------------------------
+# Embedding + LM head + loss
+# --------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d):
+    return {"table": _normal(key, (vocab, d), 0.02)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """(B, S, D) -> logits (B, S, V) against the (possibly tied) table."""
+    return einsum32("bsd,vd->bsv", x, params["table"])
+
+
+# Gold-logit extraction: "gather" (take_along_axis — all-gathers the full
+# vocab-sharded logits under GSPMD) vs "onehot" (masked local sum + psum —
+# vocab-sharding friendly). See EXPERIMENTS §Perf (H2).
+XENT_MODE = "gather"
+
+
+def set_xent_mode(mode: str) -> None:
+    global XENT_MODE
+    assert mode in ("gather", "onehot")
+    XENT_MODE = mode
+
+
+def softmax_xent(logits, targets, mask=None):
+    """Mean next-token cross-entropy; logits f32 (B, S, V)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    if XENT_MODE == "onehot":
+        vocab_ids = jnp.arange(logits.shape[-1])
+        gold = jnp.sum(jnp.where(vocab_ids == targets[..., None], logits,
+                                 0.0), axis=-1)
+    else:
+        gold = jnp.take_along_axis(logits, targets[..., None],
+                                   axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,649 @@
+"""Decoder-LM assembly for all assigned families.
+
+Layer stacks are *stacked pytrees* scanned with `lax.scan` (small HLO ->
+fast 512-way SPMD compiles) and wrapped in `jax.checkpoint` for training
+(only the sequence-sharded residual carry is saved). Heterogeneity:
+
+  * gemma3 5:1 SWA        — per-layer `is_local` flag threaded through scan
+  * deepseek dense-first   — two stacks (dense FFN, then MoE) scanned in turn
+  * zamba2 shared attention — scan over macro-groups: one shared transformer
+    block application + `attn_every` Mamba2 layers per group (+ tail stack)
+  * rwkv                   — time-mix/channel-mix stacks with shift state
+
+Public API: init_params, forward (train), prefill, decode_step, init_cache.
+Cache layouts are stacked over layers so decode is also a layer scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import NULL_RULES, shard
+
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssd as ssd_mod
+from .layers import (DTYPE, apply_attention, apply_mlp, attention_specs,
+                     embed, init_attention, init_embedding, init_mlp,
+                     init_rmsnorm, mlp_specs, project_kv, rms_norm,
+                     softmax_xent, unembed)
+
+
+# --------------------------------------------------------------------------
+# Single transformer block (dense families + zamba shared block + deepseek)
+# --------------------------------------------------------------------------
+
+def _init_block(key, cfg, kind: str):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": init_rmsnorm(cfg.d_model), "ln2": init_rmsnorm(cfg.d_model)}
+    if kind in ("attn", "mla"):
+        p["attn"] = (mla_mod.init_mla(ks[0], cfg) if kind == "mla"
+                     else init_attention(ks[0], cfg))
+    if kind == "mla":
+        pass
+    p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _init_moe_block(key, cfg, mla: bool):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model), "ln2": init_rmsnorm(cfg.d_model),
+        "attn": (mla_mod.init_mla(ks[0], cfg) if mla
+                 else init_attention(ks[0], cfg)),
+        "moe": moe_mod.init_moe(ks[1], cfg),
+    }
+
+
+def _moe_groups(rules):
+    return getattr(rules, "moe_groups", 1) or 1
+
+
+def _attn_or_mla(params, cfg, x, positions, *, is_local, rules, mla):
+    if mla:
+        return mla_mod.apply_mla(params, cfg, x, positions, rules)
+    return apply_attention(params, cfg, x, positions, is_local=is_local,
+                           rules=rules)
+
+
+def _block_fwd(params, cfg, x, positions, *, is_local=None, rules=NULL_RULES,
+               mla=False, moe=False):
+    h = rms_norm(params["ln1"], x, cfg.norm_eps)
+    x = x + _attn_or_mla(params["attn"], cfg, h, positions,
+                         is_local=is_local, rules=rules, mla=mla)
+    x = shard(x, rules.resid)
+    h = rms_norm(params["ln2"], x, cfg.norm_eps)
+    if moe:
+        y, aux = moe_mod.apply_moe_dispatch(params["moe"], cfg, h, rules,
+                                         groups=_moe_groups(rules))
+    else:
+        y, aux = apply_mlp(params["mlp"], h, cfg.act, rules), 0.0
+    x = shard(x + y, rules.resid)
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# init_params
+# --------------------------------------------------------------------------
+
+def _stacked(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.vocab, cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_embedding(ks[1], cfg.vocab, cfg.d_model)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["layers"] = _stacked(
+            ks[2], cfg.n_layers, lambda k: _init_block(k, cfg, "attn"))
+    elif fam == "moe":
+        params["layers"] = _stacked(
+            ks[2], cfg.n_layers, lambda k: _init_moe_block(k, cfg, False))
+    elif fam == "mla_moe":
+        nd = cfg.moe.first_dense_layers
+        params["dense_layers"] = _stacked(
+            ks[2], nd, lambda k: _init_block(k, cfg, "mla"))
+        params["moe_layers"] = _stacked(
+            ks[3], cfg.n_layers - nd, lambda k: _init_moe_block(k, cfg, True))
+        if cfg.mtp_depth:
+            params["mtp"] = {
+                "proj": jax.random.normal(ks[4], (2 * cfg.d_model,
+                                                  cfg.d_model),
+                                          jnp.float32).astype(DTYPE)
+                * cfg.d_model ** -0.5,
+                "block": _init_block(ks[5], cfg, "mla"),
+                "norm_h": init_rmsnorm(cfg.d_model),
+                "norm_e": init_rmsnorm(cfg.d_model),
+            }
+    elif fam == "hybrid_ssm":
+        a = cfg.ssm.attn_every
+        g = cfg.n_layers // a
+        tail = cfg.n_layers - g * a
+
+        def init_mamba_layer(k):
+            return {"ln": init_rmsnorm(cfg.d_model),
+                    "m": ssd_mod.init_mamba(k, cfg)}
+
+        grouped = _stacked(ks[2], g * a, init_mamba_layer)
+        params["mamba_groups"] = jax.tree.map(
+            lambda t: t.reshape(g, a, *t.shape[1:]), grouped)
+        if tail:
+            params["mamba_tail"] = _stacked(ks[3], tail, init_mamba_layer)
+        params["shared_attn"] = _init_block(ks[4], cfg, "attn")
+    elif fam == "rwkv":
+        params["layers"] = _stacked(
+            ks[2], cfg.n_layers,
+            lambda k: {"ln1": init_rmsnorm(cfg.d_model),
+                       "time": rwkv_mod.init_rwkv_time(k, cfg),
+                       "ln2": init_rmsnorm(cfg.d_model),
+                       "channel": rwkv_mod.init_rwkv_channel(
+                           jax.random.fold_in(k, 1), cfg)})
+    else:
+        raise ValueError(f"init_params: family {fam} handled in encdec.py")
+    return params
+
+
+def swa_flags(cfg) -> Optional[jnp.ndarray]:
+    """(L,) bool: True where the layer uses the sliding window."""
+    if cfg.sliding_window <= 0:
+        return None
+    if cfg.swa_pattern <= 0:
+        return jnp.ones((cfg.n_layers,), bool)
+    idx = jnp.arange(cfg.n_layers)
+    return (idx + 1) % cfg.swa_pattern != 0
+
+
+# --------------------------------------------------------------------------
+# Forward (training / scoring)
+# --------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch):
+    """tokens (+ stub modality embeddings) -> (x, positions, n_prefix)."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens)
+    n_prefix = 0
+    if cfg.n_prefix_embeds and "embeds" in batch:
+        x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+        n_prefix = batch["embeds"].shape[1]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, positions, n_prefix
+
+
+def _scan_layers(stack, body, x, xs_extra=None, remat=True):
+    fn = jax.checkpoint(body) if remat else body
+    xs = stack if xs_extra is None else (stack, xs_extra)
+    x, _ = jax.lax.scan(fn, x, xs)
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch, rules=NULL_RULES, remat=True):
+    """Full-sequence forward. Returns dict(logits, aux_moe, n_prefix,
+    mtp_logits?)."""
+    x, positions, n_prefix = _embed_inputs(params, cfg, batch)
+    x = shard(x, rules.resid)
+    fam = cfg.family
+    aux_total = 0.0
+
+    if fam in ("dense", "vlm"):
+        flags = swa_flags(cfg)
+
+        def body(carry, layer):
+            if flags is None:
+                p, fl = layer, None
+            else:
+                p, fl = layer
+            h, _ = _block_fwd(p, cfg, carry, positions, is_local=fl,
+                              rules=rules)
+            return h, 0.0
+
+        x = _scan_layers(params["layers"], body, x,
+                         xs_extra=flags, remat=remat)
+
+    elif fam == "moe":
+        def body(carry, p):
+            h, aux = _block_fwd(p, cfg, carry, positions, rules=rules,
+                                moe=True)
+            return h, aux
+
+        fn = jax.checkpoint(body) if remat else body
+        x, auxs = jax.lax.scan(fn, x, params["layers"])
+        aux_total = jnp.sum(auxs)
+
+    elif fam == "mla_moe":
+        def dense_body(carry, p):
+            h, _ = _block_fwd(p, cfg, carry, positions, rules=rules, mla=True)
+            return h, 0.0
+
+        def moe_body(carry, p):
+            h, aux = _block_fwd(p, cfg, carry, positions, rules=rules,
+                                mla=True, moe=True)
+            return h, aux
+
+        x = _scan_layers(params["dense_layers"], dense_body, x, remat=remat)
+        fn = jax.checkpoint(moe_body) if remat else moe_body
+        x, auxs = jax.lax.scan(fn, x, params["moe_layers"])
+        aux_total = jnp.sum(auxs)
+
+    elif fam == "hybrid_ssm":
+        def mamba_body(c, p):
+            y = ssd_mod.apply_mamba(
+                p["m"], cfg, rms_norm(p["ln"], c, cfg.norm_eps), rules=rules)
+            return shard(c + y, rules.resid), 0.0
+
+        def group_body(carry, gparams):
+            h, _ = _block_fwd(params["shared_attn"], cfg, carry, positions,
+                              rules=rules)
+            h = _scan_layers(gparams, mamba_body, h, remat=False)
+            return h, 0.0
+
+        fn = jax.checkpoint(group_body) if remat else group_body
+        x, _ = jax.lax.scan(fn, x, params["mamba_groups"])
+        if "mamba_tail" in params:
+            x = _scan_layers(params["mamba_tail"], mamba_body, x, remat=remat)
+
+    elif fam == "rwkv":
+        def body(carry, p):
+            h = rms_norm(p["ln1"], carry, cfg.norm_eps)
+            y, _ = rwkv_mod.apply_rwkv_time(p["time"], cfg, h, rules=rules)
+            carry = shard(carry + y, rules.resid)
+            h = rms_norm(p["ln2"], carry, cfg.norm_eps)
+            y, _ = rwkv_mod.apply_rwkv_channel(p["channel"], cfg, h,
+                                               rules=rules)
+            return shard(carry + y, rules.resid), 0.0
+
+        x = _scan_layers(params["layers"], body, x, remat=remat)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = shard(unembed(table, x), rules.logits)
+    out = {"logits": logits, "aux_moe": aux_total, "n_prefix": n_prefix}
+
+    if cfg.family == "mla_moe" and cfg.mtp_depth and "mtp" in params:
+        # DeepSeek-V3 MTP: one extra depth — combine the trunk state with the
+        # embedding of the *next* token and predict token t+2.
+        mtp = params["mtp"]
+        emb_next = jnp.roll(embed(params["embed"], batch["tokens"]), -1,
+                            axis=1)
+        h = jnp.concatenate([rms_norm(mtp["norm_h"], x, cfg.norm_eps),
+                             rms_norm(mtp["norm_e"], emb_next, cfg.norm_eps)],
+                            axis=-1) @ mtp["proj"]
+        h, _ = _block_fwd(mtp["block"], cfg, h.astype(x.dtype), positions,
+                          rules=rules, mla=True)
+        out["mtp_logits"] = shard(unembed(table, h), rules.logits)
+    return out
+
+
+def lm_loss(params, cfg, batch, rules=NULL_RULES, remat=True,
+            aux_coeff=0.01, mtp_coeff=0.3):
+    """Next-token loss (+ MoE aux + MTP)."""
+    out = forward(params, cfg, batch, rules, remat)
+    logits = out["logits"]
+    tokens = batch["tokens"]
+    npre = out["n_prefix"]
+    # predict tokens[:, 1:] from positions [npre : -1]
+    pred = logits[:, npre:-1]
+    tgt = tokens[:, 1:]
+    loss = softmax_xent(pred, tgt, batch.get("loss_mask"))
+    if "mtp_logits" in out:
+        pred2 = out["mtp_logits"][:, npre:-2]
+        loss = loss + mtp_coeff * softmax_xent(pred2, tokens[:, 2:])
+    loss = loss + aux_coeff * out["aux_moe"]
+    return loss, out
+
+
+# --------------------------------------------------------------------------
+# KV cache: prefill + decode (layer-stacked, scanned)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Zeroed cache pytree (shapes only matter for the dry-run)."""
+    fam = cfg.family
+    dh = cfg.resolved_head_dim
+    if fam in ("dense", "vlm"):
+        return {"k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                                dh), DTYPE),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                                dh), DTYPE)}
+    if fam == "moe":
+        return {"k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                                dh), DTYPE),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                                dh), DTYPE)}
+    if fam == "mla_moe":
+        m = cfg.mla
+        return {"c": jnp.zeros((cfg.n_layers, batch, max_len,
+                                m.kv_lora_rank), DTYPE),
+                "rope": jnp.zeros((cfg.n_layers, batch, max_len,
+                                   m.rope_head_dim), DTYPE)}
+    if fam == "hybrid_ssm":
+        s = cfg.ssm
+        g = cfg.n_layers // s.attn_every
+        tail = cfg.n_layers - g * s.attn_every
+        d_in = s.expand * cfg.d_model
+        nh = d_in // s.head_dim
+        conv_dim = d_in + 2 * s.d_state
+        cache = {
+            "h": jnp.zeros((g * s.attn_every, batch, nh, s.d_state,
+                            s.head_dim), jnp.float32),
+            "conv": jnp.zeros((g * s.attn_every, batch, s.d_conv - 1,
+                               conv_dim), DTYPE),
+            "k": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, dh), DTYPE),
+            "v": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, dh), DTYPE),
+        }
+        if tail:
+            cache["h_tail"] = jnp.zeros((tail, batch, nh, s.d_state,
+                                         s.head_dim), jnp.float32)
+            cache["conv_tail"] = jnp.zeros((tail, batch, s.d_conv - 1,
+                                            conv_dim), DTYPE)
+        return cache
+    if fam == "rwkv":
+        kd = cfg.d_model // cfg.n_heads
+        return {"s": jnp.zeros((cfg.n_layers, batch, cfg.n_heads, kd, kd),
+                               jnp.float32),
+                "last_t": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model),
+                                    DTYPE),
+                "last_c": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model),
+                                    DTYPE)}
+    raise ValueError(fam)
+
+
+def _decode_positions(batch_size, max_len, pos):
+    q_pos = jnp.full((batch_size, 1), pos, jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(max_len, dtype=jnp.int32),
+                              (batch_size, max_len))
+    return q_pos, kv_pos
+
+
+def _attn_decode(p, cfg, x, pos, k_row, v_row, is_local, rules):
+    """One decode step of a GQA attention block against its cache row."""
+    b = x.shape[0]
+    max_len = k_row.shape[1]
+    q_pos, kv_pos = _decode_positions(b, max_len, pos)
+    k1, v1 = project_kv(p, cfg, x, q_pos)
+    k_row = jax.lax.dynamic_update_slice(k_row, k1, (0, pos, 0, 0))
+    v_row = jax.lax.dynamic_update_slice(v_row, v1, (0, pos, 0, 0))
+    k_row = shard(k_row, rules.kv_cache)
+    v_row = shard(v_row, rules.kv_cache)
+    out = apply_attention(p, cfg, x, q_pos, kv=(k_row, v_row),
+                          kv_positions=kv_pos, is_local=is_local, rules=rules)
+    return out, k_row, v_row
+
+
+def _block_decode(p, cfg, x, pos, k_row, v_row, *, is_local=None,
+                  rules=NULL_RULES, moe=False):
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    a, k_row, v_row = _attn_decode(p["attn"], cfg, h, pos, k_row, v_row,
+                                   is_local, rules)
+    x = x + a
+    h = rms_norm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        y, _ = moe_mod.apply_moe_dispatch(p["moe"], cfg, h, rules,
+                                       groups=_moe_groups(rules))
+    else:
+        y = apply_mlp(p["mlp"], h, cfg.act, rules)
+    return x + y, k_row, v_row
+
+
+def _mla_block_decode(p, cfg, x, pos, c_row, r_row, *, rules=NULL_RULES,
+                      moe=False):
+    b = x.shape[0]
+    max_len = c_row.shape[1]
+    q_pos, kv_pos = _decode_positions(b, max_len, pos)
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    c1, r1 = mla_mod.latent_kv(p["attn"], cfg, h, q_pos)
+    c_row = jax.lax.dynamic_update_slice(c_row, c1, (0, pos, 0))
+    r_row = jax.lax.dynamic_update_slice(r_row, r1, (0, pos, 0))
+    a = mla_mod.decode_mla(p["attn"], cfg, h, q_pos, c_row, r_row, kv_pos,
+                           rules)
+    x = x + a
+    h = rms_norm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        y, _ = moe_mod.apply_moe_dispatch(p["moe"], cfg, h, rules,
+                                       groups=_moe_groups(rules))
+    else:
+        y = apply_mlp(p["mlp"], h, cfg.act, rules)
+    return x + y, c_row, r_row
+
+
+# --------------------------------------------------------------------------
+# Prefill: full-sequence forward that also emits the cache
+# --------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch, rules=NULL_RULES):
+    """Returns (last-position logits (B, V), cache)."""
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    x = shard(x, rules.resid)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        flags = swa_flags(cfg)
+        moe = fam == "moe"
+
+        def body(carry, layer):
+            if flags is None:
+                p, fl = layer, None
+            else:
+                p, fl = layer
+            h = rms_norm(p["ln1"], carry, cfg.norm_eps)
+            k, v = project_kv(p["attn"], cfg, h, positions)
+            k = shard(k, rules.kv_cache)
+            v = shard(v, rules.kv_cache)
+            a = apply_attention(p["attn"], cfg, h, positions, kv=(k, v),
+                                kv_positions=positions, is_local=fl,
+                                rules=rules)
+            carry = carry + a
+            h = rms_norm(p["ln2"], carry, cfg.norm_eps)
+            if moe:
+                y, _ = moe_mod.apply_moe_dispatch(p["moe"], cfg, h, rules,
+                                       groups=_moe_groups(rules))
+            else:
+                y = apply_mlp(p["mlp"], h, cfg.act, rules)
+            return shard(carry + y, rules.resid), (k, v)
+
+        xs = params["layers"] if flags is None else (params["layers"], flags)
+        x, (ks, vs) = jax.lax.scan(body, x, xs)
+        cache = {"k": ks, "v": vs}
+
+    elif fam == "mla_moe":
+        def body_factory(moe):
+            def body(carry, p):
+                h = rms_norm(p["ln1"], carry, cfg.norm_eps)
+                c, r = mla_mod.latent_kv(p["attn"], cfg, h, positions)
+                a = mla_mod.apply_mla(p["attn"], cfg, h, positions, rules)
+                carry = carry + a
+                h = rms_norm(p["ln2"], carry, cfg.norm_eps)
+                if moe:
+                    y, _ = moe_mod.apply_moe_dispatch(p["moe"], cfg, h, rules,
+                                       groups=_moe_groups(rules))
+                else:
+                    y = apply_mlp(p["mlp"], h, cfg.act, rules)
+                return shard(carry + y, rules.resid), (c, r)
+            return body
+
+        x, (c1, r1) = jax.lax.scan(body_factory(False), x,
+                                   params["dense_layers"])
+        x, (c2, r2) = jax.lax.scan(body_factory(True), x,
+                                   params["moe_layers"])
+        cache = {"c": jnp.concatenate([c1, c2]),
+                 "rope": jnp.concatenate([r1, r2])}
+
+    elif fam == "hybrid_ssm":
+        def mamba_body(c, p):
+            y, st = ssd_mod.apply_mamba(
+                p["m"], cfg, rms_norm(p["ln"], c, cfg.norm_eps), rules=rules,
+                return_state=True)
+            return shard(c + y, rules.resid), st
+
+        def group_body(carry, gparams):
+            p = params["shared_attn"]
+            h = rms_norm(p["ln1"], carry, cfg.norm_eps)
+            k, v = project_kv(p["attn"], cfg, h, positions)
+            a = apply_attention(p["attn"], cfg, h, positions, kv=(k, v),
+                                kv_positions=positions, rules=rules)
+            carry = carry + a
+            h = rms_norm(p["ln2"], carry, cfg.norm_eps)
+            carry = shard(carry + apply_mlp(p["mlp"], h, cfg.act, rules),
+                          rules.resid)
+            carry, sts = jax.lax.scan(mamba_body, carry, gparams)
+            return carry, (sts, k, v)
+
+        x, (sts, ks, vs) = jax.lax.scan(group_body, x,
+                                        params["mamba_groups"])
+        g, a = sts["h"].shape[:2]
+        cache = {"h": sts["h"].reshape(g * a, *sts["h"].shape[2:]),
+                 "conv": sts["conv"].reshape(g * a, *sts["conv"].shape[2:]),
+                 "k": ks, "v": vs}
+        if "mamba_tail" in params:
+            x, tail_sts = jax.lax.scan(mamba_body, x, params["mamba_tail"])
+            cache["h_tail"] = tail_sts["h"]
+            cache["conv_tail"] = tail_sts["conv"]
+
+    elif fam == "rwkv":
+        def body(carry, p):
+            h = rms_norm(p["ln1"], carry, cfg.norm_eps)
+            y, (last_t, s) = rwkv_mod.apply_rwkv_time(p["time"], cfg, h,
+                                                      rules=rules)
+            carry = shard(carry + y, rules.resid)
+            h = rms_norm(p["ln2"], carry, cfg.norm_eps)
+            y, last_c = rwkv_mod.apply_rwkv_channel(p["channel"], cfg, h,
+                                                    rules=rules)
+            return shard(carry + y, rules.resid), (s, last_t, last_c)
+
+        x, (s, last_t, last_c) = jax.lax.scan(body, x, params["layers"])
+        cache = {"s": s, "last_t": last_t, "last_c": last_c}
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(table, x[:, -1:])[:, 0]
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# Decode: one token for the whole stack
+# --------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, cache,
+                rules=NULL_RULES):
+    """tokens: (B, 1) int32; pos: scalar int32 (current write index).
+    Returns (logits (B, V), new_cache)."""
+    x = embed(params["embed"], tokens)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        flags = swa_flags(cfg)
+        moe = fam == "moe"
+
+        def body(carry, layer):
+            if flags is None:
+                (p, k_row, v_row), fl = layer, None
+            else:
+                p, k_row, v_row, fl = layer
+            carry, k_row, v_row = _block_decode(p, cfg, carry, pos, k_row,
+                                                v_row, is_local=fl,
+                                                rules=rules, moe=moe)
+            return carry, (k_row, v_row)
+
+        xs = ((params["layers"], cache["k"], cache["v"]) if flags is None
+              else (params["layers"], cache["k"], cache["v"], flags))
+        x, (ks, vs) = jax.lax.scan(body, x, xs)
+        cache = {"k": ks, "v": vs}
+
+    elif fam == "mla_moe":
+        nd = cfg.moe.first_dense_layers
+
+        def body_factory(moe):
+            def body(carry, layer):
+                p, c_row, r_row = layer
+                carry, c_row, r_row = _mla_block_decode(
+                    p, cfg, carry, pos, c_row, r_row, rules=rules, moe=moe)
+                return carry, (c_row, r_row)
+            return body
+
+        x, (c1, r1) = jax.lax.scan(
+            body_factory(False), x,
+            (params["dense_layers"], cache["c"][:nd], cache["rope"][:nd]))
+        x, (c2, r2) = jax.lax.scan(
+            body_factory(True), x,
+            (params["moe_layers"], cache["c"][nd:], cache["rope"][nd:]))
+        cache = {"c": jnp.concatenate([c1, c2]),
+                 "rope": jnp.concatenate([r1, r2])}
+
+    elif fam == "hybrid_ssm":
+        s = cfg.ssm
+        g = cfg.n_layers // s.attn_every
+
+        def mamba_body(carry, layer):
+            p, h_row, conv_row = layer
+            y, st = ssd_mod.decode_mamba(
+                p["m"], cfg, rms_norm(p["ln"], carry, cfg.norm_eps),
+                {"h": h_row, "conv": conv_row}, rules=rules)
+            return carry + y, (st["h"], st["conv"])
+
+        def reshape_g(t):
+            return t.reshape(g, s.attn_every, *t.shape[1:])
+
+        def group_body(carry, layer):
+            gparams, k_row, v_row, h_rows, conv_rows = layer
+            carry, k_row, v_row = _block_decode(
+                params["shared_attn"], cfg, carry, pos, k_row, v_row,
+                rules=rules)
+            carry, (h_rows, conv_rows) = jax.lax.scan(
+                mamba_body, carry, (gparams, h_rows, conv_rows))
+            return carry, (k_row, v_row, h_rows, conv_rows)
+
+        x, (ks, vs, hs, convs) = jax.lax.scan(
+            group_body, x,
+            (params["mamba_groups"], cache["k"], cache["v"],
+             reshape_g(cache["h"]), reshape_g(cache["conv"])))
+        new_cache = {"k": ks, "v": vs,
+                     "h": hs.reshape(g * s.attn_every, *hs.shape[2:]),
+                     "conv": convs.reshape(g * s.attn_every,
+                                           *convs.shape[2:])}
+        if "mamba_tail" in params:
+            x, (ht, ct) = jax.lax.scan(
+                mamba_body, x,
+                (params["mamba_tail"], cache["h_tail"], cache["conv_tail"]))
+            new_cache["h_tail"] = ht
+            new_cache["conv_tail"] = ct
+        cache = new_cache
+
+    elif fam == "rwkv":
+        def body(carry, layer):
+            p, s_row, lt, lc = layer
+            h = rms_norm(p["ln1"], carry, cfg.norm_eps)
+            y, (lt2, s_new) = rwkv_mod.apply_rwkv_time(
+                p["time"], cfg, h, last=lt, state=s_row, rules=rules)
+            carry = carry + y
+            h = rms_norm(p["ln2"], carry, cfg.norm_eps)
+            y, lc2 = rwkv_mod.apply_rwkv_channel(p["channel"], cfg, h,
+                                                 last=lc, rules=rules)
+            return carry + y, (s_new, lt2, lc2)
+
+        x, (s, lt, lc) = jax.lax.scan(
+            body, x, (params["layers"], cache["s"], cache["last_t"],
+                      cache["last_c"]))
+        cache = {"s": s, "last_t": lt, "last_c": lc}
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(table, x)[:, 0]
+    return logits, cache

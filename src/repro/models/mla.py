@@ -1,0 +1,113 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill: expand the compressed KV latent to per-head K/V and run
+standard attention. Decode: the *absorbed* form — W_UK folds into the query
+and W_UV into the output, so attention runs directly against the cached
+(B, S, kv_lora_rank) latent + (B, S, rope_dim) shared rope key. The decode KV
+cache is rank-compressed (the whole point of MLA) and sequence-shardable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import NULL_RULES, shard
+
+from .layers import DTYPE, _normal, attn_mask, einsum32, init_rmsnorm, matmul32, rms_norm, rope
+
+
+def init_mla(key, cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    qd = m.nope_head_dim + m.rope_head_dim
+    p = {
+        "wkv_a": _normal(ks[0], (d, m.kv_lora_rank + m.rope_head_dim),
+                         d ** -0.5),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank),
+        "wk_b": _normal(ks[1], (m.kv_lora_rank, h, m.nope_head_dim),
+                        m.kv_lora_rank ** -0.5),
+        "wv_b": _normal(ks[2], (m.kv_lora_rank, h, m.v_head_dim),
+                        m.kv_lora_rank ** -0.5),
+        "wo": _normal(ks[3], (h, m.v_head_dim, d), (h * m.v_head_dim) ** -0.5),
+    }
+    if m.q_lora_rank:
+        p["wq_a"] = _normal(ks[4], (d, m.q_lora_rank), d ** -0.5)
+        p["q_norm"] = init_rmsnorm(m.q_lora_rank)
+        p["wq_b"] = _normal(ks[5], (m.q_lora_rank, h, qd),
+                            m.q_lora_rank ** -0.5)
+    else:
+        p["wq"] = _normal(ks[6], (d, h, qd), d ** -0.5)
+    return p
+
+
+def mla_specs(cfg, rules):
+    return {"wkv_a": rules.w_col, "kv_norm": {"scale": rules.replicated},
+            "wk_b": rules.w_qkv, "wv_b": rules.w_qkv, "wo": rules.w_out,
+            "wq_a": rules.w_col, "q_norm": {"scale": rules.replicated},
+            "wq_b": rules.w_qkv, "wq": rules.w_qkv}
+
+
+def _queries(params, cfg, x, positions, rules):
+    m = cfg.mla
+    if m.q_lora_rank:
+        ql = rms_norm(params["q_norm"],
+                      matmul32(x, params["wq_a"]).astype(x.dtype), cfg.norm_eps)
+        q = einsum32("bsr,rhk->bshk", ql, params["wq_b"]).astype(x.dtype)
+    else:
+        q = einsum32("bsd,dhk->bshk", x, params["wq"]).astype(x.dtype)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return shard(q_nope, rules.heads), shard(q_rope, rules.heads)
+
+
+def latent_kv(params, cfg, x, positions):
+    """(c_kv (B, S, R) normalized latent, k_rope (B, S, rope_dim))."""
+    m = cfg.mla
+    kv_a = matmul32(x, params["wkv_a"]).astype(x.dtype)
+    c_kv = rms_norm(params["kv_norm"], kv_a[..., :m.kv_lora_rank],
+                    cfg.norm_eps)
+    k_rope = rope(kv_a[..., None, m.kv_lora_rank:], positions,
+                  cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def apply_mla(params, cfg, x, positions, rules=NULL_RULES):
+    """Train/prefill full-sequence MLA (expanded form)."""
+    m = cfg.mla
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    q_nope, q_rope = _queries(params, cfg, x, positions, rules)
+    c_kv, k_rope = latent_kv(params, cfg, x, positions)
+    k_nope = einsum32("bsr,rhk->bshk", c_kv, params["wk_b"]).astype(x.dtype)
+    v = einsum32("bsr,rhk->bshk", c_kv, params["wv_b"]).astype(x.dtype)
+    k_nope = shard(k_nope, rules.heads)
+    v = shard(v, rules.heads)
+    mask = attn_mask(positions, positions)
+    scores = (einsum32("bqhn,bkhn->bhqk", q_nope, k_nope)
+              + einsum32("bqhr,bkr->bhqk", q_rope, k_rope)) * scale
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    ctx = einsum32("bhqk,bkhd->bqhd", probs, v).astype(v.dtype)
+    return einsum32("bqhd,hdm->bqm", ctx, params["wo"]).astype(x.dtype)
+
+
+def decode_mla(params, cfg, x, positions, cache_c, cache_rope, kv_positions,
+               rules=NULL_RULES):
+    """Absorbed-form decode against the rank-compressed cache.
+
+    cache_c: (B, Smax, R); cache_rope: (B, Smax, rope_dim); x: (B, 1, D).
+    """
+    m = cfg.mla
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    q_nope, q_rope = _queries(params, cfg, x, positions, rules)
+    # Absorb W_UK: query in latent space.
+    q_c = einsum32("bqhn,rhn->bqhr", q_nope, params["wk_b"]).astype(x.dtype)
+    scores = (einsum32("bqhr,bkr->bhqk", q_c, cache_c)
+              + einsum32("bqhr,bkr->bhqk", q_rope, cache_rope)) * scale
+    mask = attn_mask(positions, kv_positions)
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_c = einsum32("bhqk,bkr->bqhr", probs, cache_c).astype(x.dtype)
+    # Absorb W_UV on the way out.
+    ctx = einsum32("bqhr,rhd->bqhd", ctx_c, params["wv_b"]).astype(x.dtype)
+    return einsum32("bqhd,hdm->bqm", ctx, params["wo"]).astype(x.dtype)

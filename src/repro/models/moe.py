@@ -1,0 +1,213 @@
+"""Mixture-of-Experts FFN with sort-based expert-parallel dispatch.
+
+Routing: softmax top-k (OLMoE) or sigmoid + aux-loss-free bias top-k with a
+shared expert (DeepSeek-V3). Dispatch: token->expert assignment is flattened,
+sorted by expert id, packed into a capacity-bounded (E, C, D) tensor (tokens
+over capacity drop to the residual path, standard GShard semantics), run
+through batched expert GEMMs (einsum over the expert axis — shards cleanly
+as EP over the model axis), and scattered back with routing weights.
+
+No torch.distributed-style all-to-all is written by hand: the gather/scatter
+with globally-sharded indices lowers to XLA collectives under GSPMD
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import NULL_RULES, shard
+
+from .layers import DTYPE, _normal, apply_mlp, dense, einsum32, init_mlp, mlp_specs
+
+
+def _round_up(x, m):
+    return ((x + m - 1) // m) * m
+
+
+def init_moe(key, cfg):
+    mo = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _normal(ks[0], (d, mo.n_experts), d ** -0.5).astype(jnp.float32),
+        "wi": _normal(ks[1], (mo.n_experts, d, mo.d_expert), d ** -0.5),
+        "wg": _normal(ks[2], (mo.n_experts, d, mo.d_expert), d ** -0.5),
+        "wo": _normal(ks[3], (mo.n_experts, mo.d_expert, d),
+                      mo.d_expert ** -0.5),
+    }
+    if mo.aux_free_bias:
+        p["route_bias"] = jnp.zeros((mo.n_experts,), jnp.float32)
+    if mo.n_shared:
+        p["shared"] = init_mlp(ks[4], d, (mo.d_shared or mo.d_expert)
+                               * mo.n_shared)
+    return p
+
+
+def moe_specs(cfg, rules):
+    s = {"router": rules.replicated, "wi": rules.w_expert_in,
+         "wg": rules.w_expert_in, "wo": rules.w_expert_out,
+         "route_bias": rules.replicated}
+    if cfg.moe.n_shared:
+        s["shared"] = mlp_specs(rules)
+    return s
+
+
+def route(params, cfg, xf):
+    """xf: (T, D) f32 -> (weights (T, k) f32, expert_ids (T, k) i32, aux)."""
+    mo = cfg.moe
+    logits = xf @ params["router"]                      # (T, E) f32
+    if mo.aux_free_bias:
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params["route_bias"]             # bias steers routing
+        _, ids = jax.lax.top_k(sel, mo.top_k)
+        w = jnp.take_along_axis(scores, ids, axis=-1)   # weights exclude bias
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+        w = w * mo.route_scale
+        probs = scores / jnp.maximum(scores.sum(-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(probs, mo.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss (monitored; optional in training).
+    load = jnp.mean(jax.nn.one_hot(ids[:, 0], mo.n_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    aux = mo.n_experts * jnp.sum(load * imp)
+    return w, ids, aux
+
+
+def apply_moe(params, cfg, x, rules=NULL_RULES):
+    """x: (B, S, D) -> (B, S, D), aux scalar."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    w, ids, aux = route(params, cfg, xf.astype(jnp.float32))
+
+    k = mo.top_k
+    e_flat = ids.reshape(t * k)
+    tok_flat = jnp.repeat(jnp.arange(t), k)
+    w_flat = w.reshape(t * k).astype(DTYPE)
+
+    order = jnp.argsort(e_flat)
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    w_sorted = w_flat[order]
+
+    cap = _round_up(int(t * k / mo.n_experts * mo.capacity_factor) or 1, 8)
+    starts = jnp.searchsorted(e_sorted, jnp.arange(mo.n_experts))
+    pos_in_e = jnp.arange(t * k) - starts[e_sorted]
+    keep = pos_in_e < cap
+    dest = e_sorted * cap + jnp.clip(pos_in_e, 0, cap - 1)
+
+    xg = jnp.take(xf, tok_sorted, axis=0) * keep[:, None].astype(xf.dtype)
+    buf = jnp.zeros((mo.n_experts * cap, d), xf.dtype).at[dest].add(
+        jnp.where(keep[:, None], xg, 0))
+    buf = shard(buf.reshape(mo.n_experts, cap, d), rules.expert_tokens)
+
+    h = einsum32("ecd,edf->ecf", buf, params["wi"]).astype(buf.dtype)
+    g = einsum32("ecd,edf->ecf", buf, params["wg"]).astype(buf.dtype)
+    y = einsum32("ecf,efd->ecd", h * jax.nn.silu(g),
+                 params["wo"]).astype(buf.dtype)
+    y = shard(y, rules.expert_tokens).reshape(mo.n_experts * cap, d)
+
+    y_sorted = jnp.take(y, dest, axis=0) * (w_sorted * keep)[:, None]
+    out = jnp.zeros((t, d), y.dtype).at[tok_sorted].add(y_sorted)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    if mo.n_shared:
+        out = out + apply_mlp(params["shared"], x, rules=rules)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Cumsum (sort-free) dispatch — hillclimb alternative (EXPERIMENTS §Perf)
+# ---------------------------------------------------------------------------
+
+DISPATCH_MODE = "sort"  # "sort" (baseline) | "cumsum" (GShard-style)
+
+
+def apply_moe_cumsum(params, cfg, x, rules=NULL_RULES, groups: int = 1):
+    """GShard-style capacity dispatch: tokens stay in `groups` fixed groups
+    (one per data shard), position-in-expert comes from a per-group cumsum
+    over one-hot assignments — no global sort, so the only cross-device
+    traffic is the expert-parallel redistribution of the (G, E, C, D)
+    buffer itself.
+    """
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    w, ids, aux = route(params, cfg, xf.astype(jnp.float32))
+
+    k = mo.top_k
+    if t % groups:
+        groups = 1
+    g_sz = t * k // groups
+    cap = _round_up(int(g_sz / mo.n_experts * mo.capacity_factor) or 1, 8)
+
+    onehot = jax.nn.one_hot(ids.reshape(groups, g_sz), mo.n_experts,
+                            dtype=jnp.int32)                  # (G, gk, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                      # pos in expert
+    pos = jnp.sum(pos * onehot, axis=-1)                      # (G, gk)
+    e_flat = ids.reshape(groups, g_sz)
+    keep = pos < cap
+    dest = e_flat * cap + jnp.clip(pos, 0, cap - 1)           # (G, gk)
+
+    tok_local = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(t // groups), k)[None], (groups, g_sz))
+    xg = xf.reshape(groups, t // groups, d)
+    gathered = jnp.take_along_axis(
+        xg, tok_local[..., None], axis=1) * keep[..., None].astype(xf.dtype)
+
+    buf = jnp.zeros((groups, mo.n_experts * cap, d), xf.dtype)
+    buf = jax.vmap(lambda bb, dd, vv: bb.at[dd].add(vv))(buf, dest, gathered)
+    buf = buf.reshape(groups, mo.n_experts, cap, d)
+    buf = shard(buf, _group_spec(rules))
+
+    h = einsum32("gecd,edf->gecf", buf, params["wi"]).astype(buf.dtype)
+    gate = einsum32("gecd,edf->gecf", buf, params["wg"]).astype(buf.dtype)
+    y = einsum32("gecf,efd->gecd", h * jax.nn.silu(gate),
+                 params["wo"]).astype(buf.dtype)
+    y = shard(y, _group_spec(rules)).reshape(groups, mo.n_experts * cap, d)
+
+    y_tok = jax.vmap(lambda yy, dd: jnp.take(yy, dd, axis=0))(y, dest)
+    y_tok = y_tok * (w.reshape(groups, g_sz).astype(y.dtype)
+                     * keep.astype(y.dtype))[..., None]
+    out = jnp.zeros((groups, t // groups, d), y.dtype)
+    out = jax.vmap(lambda oo, tt, vv: oo.at[tt].add(vv))(out, tok_local,
+                                                         y_tok)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    if mo.n_shared:
+        out = out + apply_mlp(params["shared"], x, rules=rules)
+    return out, aux
+
+
+def _group_spec(rules):
+    """(G, E, C, D) spec: groups over data, experts over EP axes. Axes used
+    by EP are excluded from the group dim (serving-time EP can span the
+    whole mesh, and a mesh axis may shard only one dim)."""
+    if rules.__class__.__name__ == "_NullRules":
+        return None
+    from jax.sharding import PartitionSpec as P
+    ep = rules.ep_axes
+    d_axes = tuple(a for a in (rules._d() or ()) if a not in ep)
+    return P(d_axes or None, ep, None, None)
+
+
+def _group_local_spec(rules):
+    """(G, E, C, D) group-local layout. NOTE: forcing scatter/gather onto
+    this layout with an extra reshard was tried and REFUTED (EXPERIMENTS
+    §Perf H1-iter5): GSPMD lowers the reshard as all-gather, a net loss.
+    Kept for reference."""
+    if rules.__class__.__name__ == "_NullRules":
+        return None
+    from jax.sharding import PartitionSpec as P
+    return P(rules._d(), None, None, None)
+
+
+def apply_moe_dispatch(params, cfg, x, rules=NULL_RULES, groups: int = 1,
+                       mode=None):
+    mode = mode or DISPATCH_MODE
+    if mode == "cumsum":
+        return apply_moe_cumsum(params, cfg, x, rules, groups)
+    return apply_moe(params, cfg, x, rules)

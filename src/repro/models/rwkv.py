@@ -1,0 +1,196 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free token mixing with
+data-dependent per-channel decay.
+
+Recurrence (per head, K = key dim, V = value dim):
+    out_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t in (0,1) produced by a LoRA on the token-shifted input.
+
+Two WKV evaluation modes:
+  * "scan"    — exact sequential lax.scan over time (baseline; numerically
+                robust; tiny HLO; dominates step latency at long seq).
+  * "chunked" — GLA-style chunked form: intra-chunk factored decay GEMMs +
+                inter-chunk state scan. MXU-friendly; requires bounded
+                per-chunk decay (we clamp log w; see EXPERIMENTS §Perf for
+                the hillclimb where this path replaces "scan").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import NULL_RULES, shard
+
+from .layers import DTYPE, _normal, init_rmsnorm, matmul32, rms_norm
+
+WKV_MODE = "scan"  # module default; overridden per-call
+_LOG_W_MIN = -8.0  # chunked-mode decay clamp (exp(-8)/token floor)
+
+
+def init_rwkv_time(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    k = d // h
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": _normal(ks[0], (5, d), 0.02),            # r, k, v, g, w shifts
+        "wr": _normal(ks[1], (d, d), d ** -0.5),
+        "wk": _normal(ks[2], (d, d), d ** -0.5),
+        "wv": _normal(ks[3], (d, d), d ** -0.5),
+        "wg": _normal(ks[4], (d, d), d ** -0.5),
+        "w_base": jnp.full((h, k), -1.0, jnp.float32),  # decay bias
+        "w_lora_a": _normal(ks[5], (d, 64), d ** -0.5),
+        "w_lora_b": _normal(ks[6], (64, d), 64 ** -0.5),
+        "u": jnp.zeros((h, k), jnp.float32),            # current-token bonus
+        "ln_out": init_rmsnorm(d),
+        "wo": _normal(ks[7], (d, d), d ** -0.5),
+    }
+
+
+def init_rwkv_channel(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": _normal(ks[0], (2, d), 0.02),            # k, r shifts
+        "wk": _normal(ks[1], (d, cfg.d_ff), d ** -0.5),
+        "wv": _normal(ks[2], (cfg.d_ff, d), cfg.d_ff ** -0.5),
+        "wr": _normal(jax.random.fold_in(key, 9), (d, d), d ** -0.5),
+    }
+
+
+def rwkv_time_specs(rules):
+    return {"mu": rules.replicated, "wr": rules.w_col, "wk": rules.w_col,
+            "wv": rules.w_col, "wg": rules.w_col, "w_base": rules.replicated,
+            "w_lora_a": rules.replicated, "w_lora_b": rules.replicated,
+            "u": rules.replicated, "ln_out": {"scale": rules.replicated},
+            "wo": rules.w_row}
+
+
+def rwkv_channel_specs(rules):
+    return {"mu": rules.replicated, "wk": rules.w_col, "wv": rules.w_row,
+            "wr": rules.w_col}
+
+
+def _shift(x, last):
+    """Token shift: x_{t-1} with `last` (B, 1, D) filling t=0."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Exact recurrence. r/k/w: (B, T, H, K); v: (B, T, H, V).
+    Returns (out (B, T, H, V), s_final (B, H, K, V))."""
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]           # (B, H, K, V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32) for t in (r, k, v, w))
+    s_final, out = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(out, 0, 1), s_final
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk=64):
+    """GLA-style chunked evaluation (MXU-friendly). Same contract as
+    _wkv_scan; requires T % chunk == 0. Decay is clamped for stability."""
+    b, t, h, kd = k.shape
+    vd = v.shape[-1]
+    q = chunk
+    n = t // q
+    r, k, v = (x.astype(jnp.float32) for x in (r, k, v))
+    lw = jnp.clip(jnp.log(w.astype(jnp.float32)), _LOG_W_MIN, 0.0)
+    rc = r.reshape(b, n, q, h, kd)
+    kc = k.reshape(b, n, q, h, kd)
+    vc = v.reshape(b, n, q, h, vd)
+    lcum = jnp.cumsum(lw.reshape(b, n, q, h, kd), axis=2)   # incl. own w
+    p_t = lcum - lw.reshape(b, n, q, h, kd)                 # sum_{s<t} lw_s
+
+    # Factored intra-chunk attention: coeff(t, tau) = exp(p_t - lcum_tau),
+    # valid/used for tau < t. |p_t| bounded by chunk * |LOG_W_MIN|.
+    r_dec = rc * jnp.exp(p_t)
+    k_dec = kc * jnp.exp(-lcum)
+    scores = jnp.einsum("bnqhk,bnthk->bnhqt", r_dec, k_dec)
+    mask = jnp.tril(jnp.ones((q, q), bool), k=-1)           # strictly past
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    bonus = jnp.einsum("bnqhk,hk,bnqhk->bnqh", rc, u, kc)   # current token
+    y = jnp.einsum("bnhqt,bnthv->bnqhv", scores, vc) \
+        + bonus[..., None] * vc
+
+    # Chunk summary: S_chunk = sum_t exp(lcum_end - lcum_t) k_t v_t^T
+    kw = kc * jnp.exp(lcum[:, :, -1:, :, :] - lcum)
+    s_chunk = jnp.einsum("bnthk,bnthv->bnhkv", kw, vc)
+    a_chunk = jnp.exp(lcum[:, :, -1])                       # (B, N, H, K)
+
+    def step(s, inp):
+        sc, ac, r_d = inp
+        y_inter = jnp.einsum("bqhk,bhkv->bqhv", r_d, s)
+        s = ac[..., None] * s + sc
+        return s, y_inter
+
+    s_final, y_inter = jax.lax.scan(
+        step, s0, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(a_chunk, 1, 0),
+                   jnp.moveaxis(r_dec, 1, 0)))
+    y = y + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(b, t, h, vd), s_final
+
+
+def _decay(params, xw):
+    lora = jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    h, kd = params["w_base"].shape
+    wl = params["w_base"] + lora.reshape(*lora.shape[:-1], h, kd)
+    return jnp.exp(-jnp.exp(wl.astype(jnp.float32)))        # (B,T,H,K) in (0,1)
+
+
+def apply_rwkv_time(params, cfg, x, *, last=None, state=None,
+                    wkv_mode=None, rules=NULL_RULES):
+    """Time-mix over a full sequence (or one step when x is (B, 1, D) and
+    state/last are provided). Returns (out, (last_x, state))."""
+    b, t, d = x.shape
+    h = cfg.n_heads
+    kd = d // h
+    wkv_mode = wkv_mode or WKV_MODE
+    xs = _shift(x, last)
+    mu = params["mu"]
+    xr, xk, xv, xg, xw = (_lerp(x, xs, mu[i]) for i in range(5))
+    r = (xr @ params["wr"]).reshape(b, t, h, kd)
+    k = (xk @ params["wk"]).reshape(b, t, h, kd)
+    v = (xv @ params["wv"]).reshape(b, t, h, kd)
+    g = xg @ params["wg"]
+    r = shard(r, rules.heads)
+    k = shard(k, rules.heads)
+    v = shard(v, rules.heads)
+    w = _decay(params, xw)
+    if state is None:
+        state = jnp.zeros((b, h, kd, kd), jnp.float32)
+    if t == 1:
+        out, s_new = _wkv_scan(r, k, v, w, params["u"], state)
+    elif wkv_mode == "chunked":
+        out, s_new = _wkv_chunked(r, k, v, w, params["u"], state)
+    else:
+        out, s_new = _wkv_scan(r, k, v, w, params["u"], state)
+    out = out.reshape(b, t, d).astype(x.dtype)
+    out = rms_norm(params["ln_out"], out, cfg.norm_eps)
+    out = (out * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype))
+    out = matmul32(out, params["wo"]).astype(x.dtype)
+    return out, (x[:, -1:], s_new)
+
+
+def apply_rwkv_channel(params, cfg, x, *, last=None, rules=NULL_RULES):
+    """Channel-mix (the RWKV FFN). Returns (out, last_x)."""
+    xs = _shift(x, last)
+    mu = params["mu"]
+    xk = _lerp(x, xs, mu[0])
+    xr = _lerp(x, xs, mu[1])
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    k = shard(k, rules.ffn_hidden)
+    kv = matmul32(k, params["wv"]).astype(x.dtype)
+    return jax.nn.sigmoid((xr @ params["wr"]).astype(jnp.float32)
+                          ).astype(x.dtype) * kv, x[:, -1:]

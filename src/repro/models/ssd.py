@@ -1,0 +1,195 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060), chunked.
+
+Recurrence (per head h, scalar decay):  H_t = a_t * H_{t-1} + dt_t * B_t x_t^T
+Output:                                  y_t = C_t @ H_t + D * x_t
+
+Train/prefill uses the chunked algorithm: quadratic attention-like math
+inside fixed-size chunks (MXU-friendly GEMMs) + a tiny `lax.scan` over chunk
+states for the inter-chunk recurrence. Decode carries (H, conv window)
+state — O(1) per token, which is what makes the hybrid arch long_500k-
+eligible. The elementwise recurrence stays on the "electronic" side of the
+DxPTA workload model; the in/out projections and intra-chunk GEMMs are the
+photonic-offloadable part (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import NULL_RULES, shard
+
+from .layers import DTYPE, _normal, init_rmsnorm, matmul32, rms_norm
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return s, d_in, n_heads, conv_dim
+
+
+def init_mamba(key, cfg):
+    s, d_in, n_heads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection -> [z (gate), x, B, C, dt]
+        "in_proj": _normal(ks[0], (d, 2 * d_in + 2 * s.d_state + n_heads),
+                           d ** -0.5),
+        "conv_w": _normal(ks[1], (s.d_conv, conv_dim), 0.2),
+        "conv_b": jnp.zeros((conv_dim,), DTYPE),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": init_rmsnorm(d_in),
+        "out_proj": _normal(ks[2], (d_in, d), d_in ** -0.5),
+    }
+
+
+def mamba_specs(rules):
+    return {"in_proj": rules.w_col, "conv_w": P_or_none(rules),
+            "conv_b": rules.b_model, "a_log": rules.replicated,
+            "d_skip": rules.replicated, "dt_bias": rules.replicated,
+            "norm": {"scale": rules.b_model},
+            "out_proj": rules.w_row}
+
+
+def P_or_none(rules):
+    from jax.sharding import PartitionSpec as P
+    if rules.__class__.__name__ == "_NullRules":
+        return None
+    return P(None, rules.model_axis)
+
+
+def _split_proj(cfg, proj):
+    s, d_in, n_heads, _ = _dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * s.d_state], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssm_inputs(cfg, params, xbc, dt):
+    s, d_in, n_heads, _ = _dims(cfg)
+    x, bmat, cmat = jnp.split(xbc, [d_in, d_in + s.d_state], axis=-1)
+    x = x.reshape(*x.shape[:2], n_heads, s.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])               # (B, S, H)
+    a = jnp.exp(-jnp.exp(params["a_log"]) * dt)             # decay in (0, 1)
+    return x, bmat, cmat, dt, a
+
+
+def apply_mamba(params, cfg, x, rules=NULL_RULES, return_state=False):
+    """Full-sequence chunked SSD. x: (B, S, D) -> (B, S, D)
+    (or (out, state) when return_state — for prefill)."""
+    s, d_in, n_heads, _ = _dims(cfg)
+    b, true_seq, _ = x.shape
+    q = s.chunk
+    # Pad to a chunk multiple with decay-neutral steps: dt -> 0 gives a = 1
+    # (state frozen) and zero input contribution, so the final state equals
+    # the state at the true sequence end.
+    pad = (-true_seq) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    seq = true_seq + pad
+    proj = matmul32(x, params["in_proj"]).astype(x.dtype)
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    if pad:
+        valid = (jnp.arange(seq) < true_seq)[None, :, None]
+        dt = jnp.where(valid, dt, -30.0)  # softplus(-30) ~ 0
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs, bmat, cmat, dt, a = _ssm_inputs(cfg, params, xbc, dt)
+    xs = shard(xs, rules.heads)
+
+    nch = seq // q
+    # chunk views
+    xs_c = xs.reshape(b, nch, q, n_heads, s.head_dim).astype(jnp.float32)
+    b_c = bmat.reshape(b, nch, q, s.d_state).astype(jnp.float32)
+    c_c = cmat.reshape(b, nch, q, s.d_state).astype(jnp.float32)
+    dt_c = dt.reshape(b, nch, q, n_heads)
+    la = jnp.log(a.reshape(b, nch, q, n_heads))
+    lcum = jnp.cumsum(la, axis=2)                           # (B, N, Q, H)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    # score[q_, t] = exp(lcum[q_] - lcum[t]) * (C_q . B_t) * dt_t,  t <= q_
+    cb = jnp.einsum("bnqs,bnts->bnqt", c_c, b_c)            # (B, N, Q, Q)
+    decay = jnp.exp(lcum[:, :, :, None, :] - lcum[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    score = jnp.where(tri[None, None, :, :, None],
+                      cb[..., None] * decay, 0.0)           # (B,N,Q,T,H)
+    y_intra = jnp.einsum("bnqth,bnth,bnthd->bnqhd", score, dt_c, xs_c)
+
+    # ---- chunk summary states ----
+    # S_n = sum_t exp(lcum_end - lcum_t) * dt_t * B_t x_t^T   (B,N,H,S,Dh)
+    wdec = jnp.exp(lcum[:, :, -1:, :] - lcum) * dt_c        # (B, N, Q, H)
+    state_c = jnp.einsum("bnth,bnts,bnthd->bnhsd", wdec, b_c, xs_c)
+    a_chunk = jnp.exp(lcum[:, :, -1, :])                    # (B, N, H)
+
+    # ---- inter-chunk recurrence over the N chunks ----
+    def step(h_prev, inp):
+        st, ac = inp                                        # (B,H,S,Dh), (B,H)
+        h_new = h_prev * ac[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((b, n_heads, s.d_state, s.head_dim), jnp.float32)
+    h_final, h_before = jax.lax.scan(
+        step, h0, (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(a_chunk, 1, 0)))
+    h_before = jnp.moveaxis(h_before, 0, 1)                 # (B,N,H,S,Dh)
+
+    # y_inter[t] = exp(lcum_t) * C_t @ H_{chunk_start}
+    y_inter = jnp.einsum("bnqs,bnhsd,bnqh->bnqhd", c_c, h_before,
+                         jnp.exp(lcum))
+    y = (y_intra + y_inter).reshape(b, seq, n_heads, s.head_dim)
+    y = y + params["d_skip"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, seq, d_in)
+
+    # gated RMSNorm + output projection
+    y = rms_norm(params["norm"],
+                 (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 cfg.norm_eps)
+    out = matmul32(y, params["out_proj"]).astype(x.dtype)
+    out = out[:, :true_seq]
+    if return_state:
+        state = {"h": h_final,
+                 "conv": xbc_raw[:, true_seq - (s.d_conv - 1):true_seq, :]}
+        return out, state
+    return out
+
+
+def init_mamba_state(cfg, batch):
+    s, d_in, n_heads, conv_dim = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, n_heads, s.d_state, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), DTYPE),
+    }
+
+
+def decode_mamba(params, cfg, x, state, rules=NULL_RULES):
+    """One-token step. x: (B, 1, D); state from init_mamba_state."""
+    s, d_in, n_heads, conv_dim = _dims(cfg)
+    proj = matmul32(x, params["in_proj"]).astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+    window = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) \
+        + params["conv_b"]
+    xbc1 = jax.nn.silu(conv_out.astype(jnp.float32)
+                       ).astype(x.dtype)[:, None, :]
+    xs, bmat, cmat, dtv, a = _ssm_inputs(cfg, params, xbc1, dt)
+    xf = xs[:, 0].astype(jnp.float32)                       # (B, H, Dh)
+    h = state["h"] * a[:, 0, :, None, None] + jnp.einsum(
+        "bh,bs,bhd->bhsd", dtv[:, 0], bmat[:, 0].astype(jnp.float32), xf)
+    y = jnp.einsum("bs,bhsd->bhd", cmat[:, 0].astype(jnp.float32), h) \
+        + params["d_skip"][:, None] * xf
+    y = y.reshape(x.shape[0], 1, d_in)
+    y = rms_norm(params["norm"],
+                 (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 cfg.norm_eps)
+    out = matmul32(y, params["out_proj"]).astype(x.dtype)
+    return out, {"h": h, "conv": window[:, 1:, :]}

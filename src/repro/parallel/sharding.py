@@ -1,0 +1,265 @@
+"""Logical sharding rules: DP / FSDP / TP / SP / EP over a (pod, data, model)
+or (data, model) mesh.
+
+Design (DESIGN.md §6):
+  * batch            -> ("pod", "data")   pure DP across pods (DCN-friendly)
+  * residual stream  -> sequence-parallel over "model" between blocks, so the
+                        scan-of-layers carry (the only remat-saved tensor) is
+                        1/16th per device (Megatron-SP expressed as GSPMD
+                        sharding constraints; XLA inserts the all-gathers)
+  * attention heads / FFN hidden / experts -> "model" (TP / EP)
+  * vocab (embedding + logits)            -> "model"
+  * params           -> TP axis + optionally FSDP over "data" (train)
+  * decode KV cache  -> sequence-sharded over "model" (distributed
+                        flash-decoding; works for any head count and is the
+                        only viable layout at 500k context)
+
+Activation constraints are no-ops when `rules=None` (single-device smoke
+tests) — every layer routes through `shard()`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    data_axes: Tuple[str, ...] = ("pod", "data")  # flattened batch axes
+    model_axis: str = "model"
+    fsdp: bool = True               # shard params over data axes too (train)
+    seq_parallel: bool = True       # sequence-shard the residual stream
+    seq_shard_kv: bool = True       # decode: shard KV cache along sequence
+    batch_over_model: bool = False  # long_500k (batch 1): the KV sequence
+                                    # shards over EVERY mesh axis, batch is
+                                    # replicated
+    all_axes: Tuple[str, ...] = ("pod", "data", "model")  # set by for_mesh
+    expert_axes: Optional[Tuple[str, ...]] = None  # EP axes; default: model
+                                    # only. Serving huge-E MoE sets this to
+                                    # the whole mesh (e.g. DeepSeek EP=256).
+    moe_groups: int = 1             # cumsum-dispatch token groups (= product
+                                    # of data-axis sizes; set by launchers)
+    context_parallel: bool = False  # prefill: shard the query sequence over
+                                    # "model" instead of heads (KV gathered
+                                    # per layer) — hillclimb alternative
+
+    def _d(self):
+        """Batch axes or None when batch is unsharded (long_500k)."""
+        return self.data_axes if self.data_axes else None
+
+    @property
+    def ep_axes(self) -> Tuple[str, ...]:
+        return self.expert_axes or (self.model_axis,)
+
+    # ---- activations ----
+    @property
+    def batch(self) -> P:
+        return P(self._d())
+
+    @property
+    def resid(self) -> P:          # (B, S, D) between blocks
+        if self.seq_parallel:
+            return P(self._d(), self.model_axis, None)
+        return P(self._d(), None, None)
+
+    @property
+    def heads(self) -> P:          # (B, S, H, Dh) inside attention
+        if self.context_parallel:
+            return P(self._d(), self.model_axis, None, None)
+        return P(self._d(), None, self.model_axis, None)
+
+    @property
+    def ffn_hidden(self) -> P:     # (B, S, F)
+        if self.context_parallel:
+            return P(self._d(), self.model_axis, None)
+        return P(self._d(), None, self.model_axis)
+
+    @property
+    def kv_heads(self) -> P:       # K/V in self-attention
+        if self.context_parallel:  # CP: queries seq-sharded, KV gathered
+            return P(self._d(), None, None, None)
+        return self.heads
+
+    @property
+    def logits(self) -> P:         # (B, S, V)
+        return P(self._d(), None, self.model_axis)
+
+    @property
+    def kv_cache(self) -> P:       # (B, S, Hkv, Dh) decode cache
+        if not self.seq_shard_kv:
+            return P(self._d(), None, self.model_axis, None)
+        if self.batch_over_model:
+            return P(None, self.all_axes, None, None)
+        return P(self._d(), self.model_axis, None, None)
+
+    @property
+    def ssm_state(self) -> P:      # (B, heads, Dh, N) recurrent state
+        return P(self._d(), self.model_axis, None, None)
+
+    @property
+    def expert_tokens(self) -> P:  # (E, C, D) grouped expert batches
+        if self.expert_axes:       # EP over the whole mesh: C unsharded
+            return P(self.ep_axes, None, None)
+        return P(self.model_axis, self._d(), None)
+
+    # ---- params (w: 2D (in, out) unless noted) ----
+    def _maybe_fsdp(self, *spec):
+        """Insert FSDP data-sharding on the first None axis if enabled."""
+        if not self.fsdp:
+            return P(*spec)
+        out = list(spec)
+        for i, s in enumerate(out):
+            if s is None:
+                out[i] = self.data_axes
+                break
+        return P(*out)
+
+    @property
+    def w_col(self) -> P:          # (D, F): output dim model-sharded
+        return self._maybe_fsdp(None, self.model_axis)
+
+    @property
+    def w_row(self) -> P:          # (F, D): input dim model-sharded
+        return self._maybe_fsdp(self.model_axis, None)
+
+    @property
+    def w_qkv(self) -> P:          # (D, H, Dh)
+        return self._maybe_fsdp(None, self.model_axis, None)
+
+    @property
+    def w_out(self) -> P:          # (H, Dh, D)
+        return self._maybe_fsdp(self.model_axis, None, None)
+
+    @property
+    def w_expert_in(self) -> P:    # (E, D, F)
+        return self._maybe_fsdp(self.ep_axes, None, None)
+
+    @property
+    def w_expert_out(self) -> P:   # (E, F, D)
+        return self._maybe_fsdp(self.ep_axes, None, None)
+
+    @property
+    def embed(self) -> P:          # (V, D)
+        return self._maybe_fsdp(self.model_axis, None)
+
+    @property
+    def b_model(self) -> P:        # (F,) bias on a model-sharded dim
+        return P(self.model_axis)
+
+    @property
+    def replicated(self) -> P:
+        return P()
+
+
+# Default rule sets per step kind.
+TRAIN_RULES = Rules(fsdp=True, seq_parallel=True)
+PREFILL_RULES = Rules(fsdp=False, seq_parallel=True)
+DECODE_RULES = Rules(fsdp=False, seq_parallel=False, seq_shard_kv=True)
+LONG_DECODE_RULES = Rules(fsdp=False, seq_parallel=False, seq_shard_kv=True,
+                          batch_over_model=True, data_axes=())
+
+SINGLE_POD_AXES: Tuple[str, ...] = ("data",)
+
+
+def for_mesh(rules: Rules, mesh) -> Rules:
+    """Restrict the axis names to the ones the mesh actually has."""
+    axes = tuple(a for a in rules.data_axes if a in mesh.axis_names)
+    ep = (tuple(a for a in rules.expert_axes if a in mesh.axis_names)
+          if rules.expert_axes else None)
+    return dataclasses.replace(
+        rules, data_axes=axes if rules.batch_over_model else (axes or ("data",)),
+        all_axes=tuple(mesh.axis_names), expert_axes=ep)
+
+
+_ACTIVE_AXIS_SIZES = None
+
+
+def set_active_axis_sizes(sizes) -> None:
+    """Trace-time mesh axis sizes for shard() sanitization (set by the
+    dry-run / launchers around lowering; None disables sanitization)."""
+    global _ACTIVE_AXIS_SIZES
+    _ACTIVE_AXIS_SIZES = dict(sizes) if sizes else None
+
+
+def shard(x, spec: Optional[P]):
+    """with_sharding_constraint that degrades to identity without rules.
+
+    When mesh axis sizes are active, the spec is sanitized against the
+    concrete shape (e.g. 'model' moves off a 2-KV-head axis onto head_dim)
+    to avoid GSPMD involuntary-padding/full-remat fallbacks."""
+    if spec is None:
+        return x
+    if _ACTIVE_AXIS_SIZES:
+        spec = sanitize_spec(x.shape, spec, _ACTIVE_AXIS_SIZES)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+class _NullRules:
+    """Stand-in for single-device runs: every spec resolves to None, so every
+    `shard()` call is the identity. Lets model code be written once."""
+
+    fsdp = False
+    seq_parallel = False
+    seq_shard_kv = False
+    batch_over_model = False
+
+    def __getattr__(self, name):
+        return None
+
+    def _maybe_fsdp(self, *spec):
+        return None
+
+
+NULL_RULES = _NullRules()
+
+
+def _prod(axes, sizes):
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+def sanitize_spec(shape, spec: P, axis_sizes) -> P:
+    """Make `spec` valid for `shape` under divisibility rules.
+
+    Input arrays (unlike with_sharding_constraint intermediates) must divide
+    evenly. For each dim whose sharded size doesn't divide it, axes are
+    dropped (last first) and re-homed onto the largest unsharded dim they
+    do divide (e.g. 2 KV heads can't split 16 ways -> shard head_dim
+    instead). Axes that fit nowhere are dropped (replicated).
+    """
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+
+    def axes_of(e):
+        if e is None:
+            return []
+        return [e] if isinstance(e, str) else list(e)
+
+    out = [axes_of(e) for e in parts]
+    # a mesh axis may shard only one dim: keep first occurrence
+    seen = set()
+    for axes in out:
+        for a in list(axes):
+            if a in seen:
+                axes.remove(a)
+            else:
+                seen.add(a)
+    homeless = []
+    for i, axes in enumerate(out):
+        while axes and shape[i] % _prod(axes, axis_sizes) != 0:
+            homeless.append(axes.pop())
+    for ax in homeless:
+        # prefer the trailing dim (head_dim / feature: usually 128-aligned),
+        # then the largest remaining dim
+        order = sorted(range(len(shape)),
+                       key=lambda j: (j != len(shape) - 1, -shape[j]))
+        for i in order:
+            if not out[i] and shape[i] % axis_sizes[ax] == 0:
+                out[i] = [ax]
+                break
+    return P(*[None if not a else (a[0] if len(a) == 1 else tuple(a))
+               for a in out])

@@ -1,0 +1,145 @@
+"""PartitionSpec trees mirroring the param / cache / batch pytrees.
+
+The dry-run and launchers attach these to jax.ShapeDtypeStructs (inputs) and
+to in_shardings. Stacked layer params carry a leading layer axis -> every
+per-layer spec gets a leading None.
+"""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import attention_specs, mlp_specs
+from repro.models.mla import mla_specs
+from repro.models.moe import moe_specs
+from repro.models.rwkv import rwkv_channel_specs, rwkv_time_specs
+from repro.parallel.sharding import Rules
+
+
+def _prepend(spec_tree, n=1):
+    """Add n leading None axes to every PartitionSpec in a tree."""
+    import jax
+
+    def f(s):
+        if s is None:
+            return None
+        return P(*([None] * n), *s)
+
+    return jax.tree.map(f, spec_tree, is_leaf=lambda x: isinstance(x, P)
+                        or x is None)
+
+
+def _ln(rules):
+    return {"scale": rules.replicated}
+
+
+def _block_specs(cfg, rules, kind="attn", moe=False):
+    s = {"ln1": _ln(rules), "ln2": _ln(rules)}
+    s["attn"] = mla_specs(cfg, rules) if kind == "mla" \
+        else attention_specs(rules)
+    if moe:
+        s["moe"] = moe_specs(cfg, rules)
+    else:
+        s["mlp"] = mlp_specs(rules)
+    return s
+
+
+def _prune(spec_tree, params_tree):
+    """Drop spec entries that don't exist in the actual params (e.g. no
+    qkv bias), and check nothing is missing."""
+    if isinstance(params_tree, dict):
+        out = {}
+        for k, v in params_tree.items():
+            if k not in spec_tree:
+                raise KeyError(f"no spec for param {k!r}")
+            out[k] = _prune(spec_tree[k], v)
+        return out
+    return spec_tree
+
+
+def param_specs(cfg: ModelConfig, rules: Rules, params_tree=None):
+    """Spec tree for init_params(cfg). If params_tree is given (a pytree or
+    its shape-struct), the spec tree is pruned to exactly match."""
+    r = rules
+    specs = {"embed": {"table": r.embed}, "final_norm": _ln(r)}
+    if not cfg.tie_embeddings:
+        specs["head"] = {"table": r.embed}
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        specs["layers"] = _prepend(_block_specs(cfg, r))
+    elif fam == "moe":
+        specs["layers"] = _prepend(_block_specs(cfg, r, moe=True))
+    elif fam == "mla_moe":
+        specs["dense_layers"] = _prepend(_block_specs(cfg, r, kind="mla"))
+        specs["moe_layers"] = _prepend(
+            _block_specs(cfg, r, kind="mla", moe=True))
+        if cfg.mtp_depth:
+            specs["mtp"] = {"proj": r.w_col,
+                            "block": _block_specs(cfg, r, kind="mla"),
+                            "norm_h": _ln(r), "norm_e": _ln(r)}
+    elif fam == "hybrid_ssm":
+        from repro.models.ssd import mamba_specs
+        layer = {"ln": _ln(r), "m": mamba_specs(r)}
+        specs["mamba_groups"] = _prepend(layer, n=2)
+        specs["mamba_tail"] = _prepend(layer)
+        specs["shared_attn"] = _block_specs(cfg, r)
+    elif fam == "rwkv":
+        specs["layers"] = _prepend({
+            "ln1": _ln(r), "time": rwkv_time_specs(r),
+            "ln2": _ln(r), "channel": rwkv_channel_specs(r)})
+    elif fam == "encdec":
+        enc = {"ln1": _ln(r), "attn": attention_specs(r), "ln2": _ln(r),
+               "mlp": mlp_specs(r)}
+        dec = {"ln1": _ln(r), "self_attn": attention_specs(r),
+               "ln2": _ln(r), "cross_attn": attention_specs(r),
+               "ln3": _ln(r), "mlp": mlp_specs(r)}
+        specs = {"adapter": r.w_col, "enc_layers": _prepend(enc),
+                 "enc_norm": _ln(r), "embed": {"table": r.embed},
+                 "dec_layers": _prepend(dec), "final_norm": _ln(r),
+                 "head": {"table": r.embed}}
+    else:
+        raise ValueError(fam)
+
+    if params_tree is not None:
+        specs = _prune(specs, params_tree)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, rules: Rules):
+    """Spec tree for models.init_cache(cfg, ...)."""
+    r = rules
+    kv = P(None, *r.kv_cache)          # leading layer axis
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return {"k": kv, "v": kv}
+    if fam == "mla_moe":
+        # latent cache (L, B, S, R): batch + sequence sharded like kv_cache
+        lat = P(None, r.kv_cache[0], r.kv_cache[1], None)
+        return {"c": lat, "rope": lat}
+    if fam == "hybrid_ssm":
+        st = P(None, *r.ssm_state)
+        conv = P(None, r.kv_cache[0], None, r.model_axis)
+        out = {"h": st, "conv": conv, "k": kv, "v": kv}
+        s = cfg.ssm
+        if cfg.n_layers % s.attn_every:
+            out["h_tail"] = st
+            out["conv_tail"] = conv
+        return out
+    if fam == "rwkv":
+        return {"s": P(None, *r.ssm_state),
+                "last_t": P(None, r.kv_cache[0], None, r.model_axis),
+                "last_c": P(None, r.kv_cache[0], None, r.model_axis)}
+    if fam == "encdec":
+        return {"k": kv, "v": kv, "cross_k": kv, "cross_v": kv}
+    raise ValueError(fam)
+
+
+def batch_specs(cfg: ModelConfig, rules: Rules, kind: str = "train"):
+    r = rules
+    specs = {"tokens": P(r.data_axes, None)}
+    if cfg.family == "vlm":
+        specs["embeds"] = P(r.data_axes, None, None)
+    if cfg.family == "encdec":
+        specs["src_embeds"] = P(r.data_axes, None, None)
+    return specs

@@ -1,0 +1,9 @@
+"""Test-session setup: exec-safe dots (XLA CPU lacks some bf16 dot thunks).
+
+Note: dryrun/roofline never enable exec-safe mode — the lowered HLO there is
+the TPU-intended mixed-precision program. Tests execute numerics on CPU, so
+they need the f32-cast dot path (bit-identical accumulation).
+"""
+from repro.models.layers import set_exec_safe
+
+set_exec_safe(True)

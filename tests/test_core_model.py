@@ -1,0 +1,162 @@
+"""Unit + property tests for the DxPTA cost model and search machinery."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CONSTANTS, Constraints, Gemm, PTAConfig, Workload,
+                        config_grid, dxpta_search, eval_full, eval_hw,
+                        eval_wload, eval_wload_arrays, evaluate_grid,
+                        gemm_cycles, grid_search_vectorized,
+                        progressive_candidates, sram_mb_for_workload,
+                        transformer_encoder_workload)
+from repro.core.pareto import pareto_front, pareto_mask
+from repro.core.paper_workloads import load
+
+params_st = st.tuples(st.integers(1, 12), st.integers(1, 12),
+                      st.integers(1, 16), st.integers(1, 16),
+                      st.integers(1, 16))
+
+
+def test_gemm_cycles_hand_example():
+    # (M=100, K=48, N=25) on Nt=2, Nc=2, Nh=12, Nv=12, Nl=12:
+    # ceil(100/24)=5, ceil(25/12)=3, ceil(48/24)=2 -> 30 cycles.
+    assert gemm_cycles(100, 48, 25, 2, 2, 12, 12, 12) == 30
+
+
+def test_perfect_utilization_when_divisible():
+    wl = Workload("u", (Gemm(48, 24, 12, 1),), 0.0, 0.0, 0.0, 1.0)
+    _, _, _, _, util = eval_full(PTAConfig(2, 2, 12, 12, 12), wl)
+    # M=48 = 2 tiles * 12 rows * 2 passes; N=12 = Nv; K=24 = Nc*Nl.
+    assert util == pytest.approx(1.0)
+
+
+@given(params_st)
+@settings(max_examples=60, deadline=None)
+def test_area_power_positive_and_finite(p):
+    area, power = eval_hw(*p)
+    assert np.isfinite(area) and area > 0
+    assert np.isfinite(power) and power > 0
+
+
+@given(params_st, st.integers(0, 4))
+@settings(max_examples=60, deadline=None)
+def test_area_power_monotone_in_each_param(p, which):
+    base = np.array(p)
+    up = base.copy()
+    up[which] += 1
+    a0, p0 = eval_hw(*base)
+    a1, p1 = eval_hw(*up)
+    assert a1 > a0
+    assert p1 > p0
+
+
+@given(params_st)
+@settings(max_examples=40, deadline=None)
+def test_utilization_bounded(p):
+    wl = load("deit-t")
+    *_, util = eval_full(PTAConfig(*p), wl)
+    assert 0.0 < util <= 1.0 + 1e-9
+
+
+@given(st.integers(2, 64), st.integers(2, 64), st.integers(2, 64), params_st)
+@settings(max_examples=60, deadline=None)
+def test_cycles_lower_bounded_by_peak_throughput(m, k, n, p):
+    cfg = PTAConfig(*p)
+    cyc = gemm_cycles(m, k, n, *p)
+    assert cyc * cfg.macs_per_cycle >= m * k * n
+
+
+def test_scalar_and_vectorized_eval_agree():
+    wl = load("bert-b")
+    rng = np.random.default_rng(0)
+    grid = rng.integers(1, 13, size=(64, 5))
+    m = evaluate_grid(grid, wl)
+    for i in range(0, 64, 7):
+        cfg = PTAConfig.from_array(grid[i])
+        a, p, e, l, _ = eval_full(cfg, wl)
+        assert a == pytest.approx(float(m["area"][i]), rel=1e-6)
+        assert p == pytest.approx(float(m["power"][i]), rel=1e-6)
+        assert e == pytest.approx(float(m["energy"][i]), rel=1e-6)
+        assert l == pytest.approx(float(m["latency"][i]), rel=1e-6)
+
+
+def test_jax_and_numpy_grid_eval_agree():
+    import jax.numpy as jnp
+    wl = load("deit-s")
+    rng = np.random.default_rng(1)
+    grid = rng.integers(1, 13, size=(128, 5))
+    m_np = evaluate_grid(grid, wl, xp=np)
+    m_jnp = evaluate_grid(grid, wl, xp=jnp)
+    for k in m_np:
+        np.testing.assert_allclose(np.asarray(m_jnp[k]), m_np[k], rtol=1e-4)
+
+
+def test_config_grid_shape_and_order():
+    g = config_grid([1, 2], [3], [4, 5], [6], [7])
+    assert g.shape == (4, 5)
+    # columns are (n_t, n_c, n_h, n_v, n_lambda); V candidates land in n_v.
+    assert set(g[:, 3]) == {4, 5}
+    assert set(g[:, 2]) == {6}
+
+
+def test_progressive_candidates():
+    assert progressive_candidates(12, 2) == [2, 4, 6, 8, 10, 12]
+    aligned = progressive_candidates(12, 2, align_dims=[768])
+    assert 3 in aligned and 12 in aligned  # divisors of 768 included
+
+
+def test_batch_scaling_monotone():
+    wl1 = load("deit-t").scaled(8)
+    wl2 = load("deit-t").scaled(32)
+    cfg = PTAConfig()
+    e1, l1 = eval_wload(cfg, wl1)
+    e2, l2 = eval_wload(cfg, wl2)
+    assert l2 > l1
+    assert e2 > e1
+
+
+def test_sram_sizing_clipped():
+    assert sram_mb_for_workload(0.0) == CONSTANTS.sram_min_mb
+    assert sram_mb_for_workload(1e12) == CONSTANTS.sram_max_mb
+
+
+def test_infeasible_constraints_return_none():
+    wl = load("deit-b")
+    impossible = Constraints(area_mm2=1.0, power_w=0.1, energy_mj=0.001,
+                             latency_ms=0.001)
+    r = dxpta_search(wl, constraints=impossible)
+    assert not r.feasible
+    rv = grid_search_vectorized(wl, constraints=impossible)
+    assert not rv.feasible
+
+
+def test_pareto_mask_simple():
+    pts = np.array([[1.0, 2.0], [2.0, 1.0], [2.0, 2.0], [3.0, 3.0]])
+    mask = pareto_mask(pts)
+    assert mask.tolist() == [True, True, False, False]
+
+
+def test_pareto_front_contains_min_edp_point():
+    wl = load("deit-t")
+    r = grid_search_vectorized(wl)
+    inc = list(range(1, 13))
+    grid = config_grid(inc, inc, [4, 8, 12], [4, 8, 12], [4, 8, 12])
+    front, metrics = pareto_front(grid, wl, metrics=("area", "edp"),
+                                  constraints=Constraints())
+    assert len(front) >= 1
+    # The global min-EDP config is never dominated on (area, edp).
+    assert metrics["edp"].min() <= r.edp * 1.05
+
+
+def test_workload_gemm_accounting():
+    wl = transformer_encoder_workload("t", layers=2, d_model=64, heads=4,
+                                      d_ff=256, tokens=10, batch=3)
+    # fused QKV + scores + av + out + ffn1 + ffn2 = 6 gemm kinds
+    assert len(wl.gemms) == 6
+    qkv = wl.gemms[0]
+    assert (qkv.m, qkv.k, qkv.n, qkv.count) == (30, 64, 192, 2)
+    scores = wl.gemms[1]
+    assert (scores.m, scores.k, scores.n) == (10, 16, 10)
+    assert scores.count == 2 * 3 * 4  # layers * batch * heads
+    assert wl.total_macs > 0

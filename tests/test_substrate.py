@@ -1,0 +1,140 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing + restore,
+trainer resume (simulated failure), health monitoring, serving loop."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models as M
+from repro.checkpoint.checkpointing import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import SyntheticTokenSource
+from repro.optim import adamw
+from repro.train.fault_tolerance import HealthConfig, HealthMonitor, recovery_plan
+from repro.train.serve import Request, Server
+from repro.train.trainer import Trainer, TrainerConfig
+
+CFG = reduced(get_config("qwen2.5-3b"))
+SHAPE = ShapeConfig("tiny", seq_len=16, global_batch=4, kind="train")
+
+
+def test_adamw_converges_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=200, grad_clip=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(cfg, params)
+    for _ in range(150):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = adamw.apply(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_adamw_bf16_moments():
+    cfg = adamw.AdamWConfig(moment_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((4, 4))}
+    state = adamw.init(cfg, params)
+    assert state.mu["w"].dtype == jnp.bfloat16
+    grads = {"w": jnp.ones((4, 4))}
+    p2, s2, m = adamw.apply(cfg, params, grads, state)
+    assert jnp.isfinite(m["grad_norm"])
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    assert float(adamw.schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(adamw.schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(adamw.schedule(cfg, jnp.int32(100))) == pytest.approx(0.1)
+
+
+def test_pipeline_deterministic_by_step():
+    src1 = SyntheticTokenSource(CFG, SHAPE, seed=7)
+    src2 = SyntheticTokenSource(CFG, SHAPE, seed=7)
+    np.testing.assert_array_equal(src1.batch_at(5)["tokens"],
+                                  src2.batch_at(5)["tokens"])
+    assert not np.array_equal(src1.batch_at(5)["tokens"],
+                              src1.batch_at(6)["tokens"])
+    assert src1.batch_at(0)["tokens"].shape == (4, 16)
+    assert src1.batch_at(0)["tokens"].max() < CFG.vocab
+
+
+def test_checkpoint_roundtrip_and_integrity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "n": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    mgr.save(3, tree, extra={"pipeline": {"step": 3, "seed": 0}})
+    restored, extra, step = mgr.restore(tree)
+    assert step == 3 and extra["pipeline"]["step"] == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["n"]["b"].dtype == jnp.bfloat16
+    # corruption detection
+    arr_file = tmp_path / "step_000003" / "arrays" / "0.npy"
+    data = bytearray(arr_file.read_bytes())
+    data[-1] ^= 0xFF
+    arr_file.write_bytes(bytes(data))
+    with pytest.raises(IOError):
+        mgr.restore(tree)
+
+
+def test_checkpoint_gc_keeps_last(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = {"a": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.committed_steps() == [3, 4]
+
+
+def test_trainer_resume_after_simulated_failure(tmp_path):
+    tcfg = TrainerConfig(total_steps=6, ckpt_every=2,
+                         ckpt_dir=str(tmp_path), log_every=100)
+    t1 = Trainer(CFG, SHAPE, tcfg=tcfg)
+    r1 = t1.run(num_steps=4)        # "crash" after step 4 (checkpointed)
+    assert r1["final_step"] == 4
+    # new process: auto-resume from latest committed checkpoint
+    t2 = Trainer(CFG, SHAPE, tcfg=tcfg)
+    assert t2.start_step == 4
+    assert t2.data.state.step == 4  # pipeline state restored: no skipped data
+    r2 = t2.run(num_steps=2)
+    assert r2["final_step"] == 6
+    # training continues healthily across the restart boundary (a few steps
+    # of AdamW on synthetic tokens barely move the loss: check stability,
+    # not magnitude)
+    assert all(np.isfinite(r2["losses"]))
+    assert np.mean(r2["losses"]) < np.mean(r1["losses"][:2]) + 0.05
+
+
+def test_health_monitor_stragglers_and_spikes():
+    hm = HealthMonitor(HealthConfig(straggler_grace=2.0,
+                                    straggler_patience=3))
+    for i in range(10):
+        hm.report("w0", 1.0, now=float(i))
+        hm.report("w1", 1.0 if i < 5 else 5.0, now=float(i))
+    assert hm.stragglers() == ["w1"]
+    assert hm.check_step(1.0) and hm.check_step(1.1)
+    assert not hm.check_step(float("nan"))
+    assert not hm.check_step(1e6)
+
+
+def test_recovery_plan_shrinks_data_axes_only():
+    plan = recovery_plan(256, {"pod": 2, "data": 16, "model": 16})
+    assert plan["model"] == 16
+    assert plan["pod"] * plan["data"] * plan["model"] <= 256
+    with pytest.raises(RuntimeError):
+        recovery_plan(8, {"data": 1, "model": 16})
+
+
+def test_server_generates():
+    cfg = CFG
+    params = M.init_params(jax.random.key(0), cfg)
+    srv = Server(cfg, params, batch_size=2, max_len=32)
+    reqs = [Request(prompt=np.arange(1, 6, dtype=np.int32), max_new=4),
+            Request(prompt=np.arange(1, 9, dtype=np.int32), max_new=4)]
+    stats = srv.generate(reqs)
+    assert all(len(r.out) == 4 for r in reqs)
+    assert all(0 <= t < cfg.vocab for r in reqs for t in r.out)
+    assert stats["tokens"] == 8
