@@ -1,29 +1,40 @@
-"""Beyond-paper example: DxPTA across the 10 assigned architectures x
-deployment shapes — one searched PTA per (arch, shape), with Pareto fronts.
+"""Beyond-paper example: DxPTA co-search on the unified engine layer.
 
-The paper searches for DeiT/BERT only; this extends the methodology to the
-framework's whole model zoo via the config->workload extractor
-(repro.core.extract) and prints which deployments are photonic-feasible
-under the paper's constraints.
+Two modes:
 
-    PYTHONPATH=src python examples/arch_cosearch.py [--shape prefill_32k]
+  * Default — one searched PTA per (arch, shape) across the framework's
+    model zoo, via the config->workload extractor (repro.core.extract).
+    `--engine` picks any SearchEngine backend (python is the paper-faithful
+    Alg. 2 loop; numpy/jax/pallas are the vectorized ones).
+
+        PYTHONPATH=src python examples/arch_cosearch.py --engine numpy
+
+  * `--scenarios` — constraint-scenario sweep over the five paper workloads
+    (DeiT-T/S/B, BERT-B/L): every (area, power) box is one batched
+    `search_workloads` call, which on the pallas engine evaluates all five
+    workloads against the full grid in a single fused kernel launch.
+    Constraints are dynamic kernel operands, so the whole sweep reuses one
+    jit cache entry — no recompiles between scenarios.
+
+        PYTHONPATH=src python examples/arch_cosearch.py --scenarios \
+            --engine pallas
 """
 import argparse
+import time
 
 from repro.configs import SHAPES_BY_NAME, get_config, list_archs
-from repro.core import Constraints, dxpta_search
-from repro.core.extract import workload_for
 from repro.configs.base import ShapeConfig
+from repro.core import Constraints, ENGINES, dxpta_search, search_workloads
+from repro.core.extract import workload_for
+from repro.core.paper_workloads import PAPER_WORKLOADS
+
+# (area mm^2, power W) boxes swept in --scenarios mode; the first is the
+# paper's constraint set.
+SCENARIOS = [(50.0, 5.0), (40.0, 4.0), (30.0, 3.0), (60.0, 8.0),
+             (25.0, 2.5)]
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--shape", default="serve_2k",
-                    choices=["serve_2k", *sorted(SHAPES_BY_NAME)])
-    ap.add_argument("--area", type=float, default=50.0)
-    ap.add_argument("--power", type=float, default=5.0)
-    args = ap.parse_args()
-
+def sweep_archs(args):
     if args.shape == "serve_2k":
         # laptop-scale default: 2k-token prefill, batch 1
         shape = ShapeConfig("serve_2k", seq_len=2048, global_batch=1,
@@ -32,19 +43,57 @@ def main():
         shape = SHAPES_BY_NAME[args.shape]
     cons = Constraints(area_mm2=args.area, power_w=args.power,
                        energy_mj=1e9, latency_ms=1e9)  # A/P-bounded search
-    print(f"shape={shape.name}  constraints: {args.area}mm^2 {args.power}W "
+    print(f"shape={shape.name}  engine={args.engine}  constraints: "
+          f"{args.area}mm^2 {args.power}W "
           f"(energy/latency unconstrained -> min-EDP inside the A/P box)")
     print(f"{'arch':24s} {'feasible':8s} {'config':34s} "
           f"{'E[mJ]':>9s} {'L[ms]':>9s}")
     for arch in list_archs():
         cfg = get_config(arch)
         wl = workload_for(cfg, shape)
-        r = dxpta_search(wl, cons)
+        r = dxpta_search(wl, cons, engine=args.engine)
         if r.feasible:
             print(f"{arch:24s} {'yes':8s} {str(r.best_cfg):34s} "
                   f"{r.energy_j*1e3:9.1f} {r.latency_s*1e3:9.2f}")
         else:
             print(f"{arch:24s} {'NO':8s} {'-':34s} {'-':>9s} {'-':>9s}")
+
+
+def sweep_scenarios(args):
+    wls = {name: f() for name, f in PAPER_WORKLOADS.items()}
+    print(f"engine={args.engine}  batched search: {len(wls)} paper "
+          f"workloads x full 12^5 grid per constraint scenario")
+    for area, power in SCENARIOS:
+        cons = Constraints(area_mm2=area, power_w=power)
+        t0 = time.perf_counter()
+        res = search_workloads(wls, cons, engine=args.engine,
+                               hierarchical=True)
+        dt = time.perf_counter() - t0
+        print(f"\n-- scenario: {area:.0f}mm^2 / {power:.1f}W "
+              f"(one launch, {dt*1e3:.0f}ms)")
+        for name, r in res.items():
+            if r.feasible:
+                print(f"  {name:8s} {str(r.best_cfg):34s} "
+                      f"EDP={r.edp:.3e} ({r.n_feasible} feasible)")
+            else:
+                print(f"  {name:8s} infeasible under this box")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shape", default="serve_2k",
+                    choices=["serve_2k", *sorted(SHAPES_BY_NAME)])
+    ap.add_argument("--area", type=float, default=50.0)
+    ap.add_argument("--power", type=float, default=5.0)
+    ap.add_argument("--engine", default="numpy", choices=sorted(ENGINES))
+    ap.add_argument("--scenarios", action="store_true",
+                    help="constraint-scenario sweep over the paper "
+                         "workloads (batched search_workloads)")
+    args = ap.parse_args()
+    if args.scenarios:
+        sweep_scenarios(args)
+    else:
+        sweep_archs(args)
 
 
 if __name__ == "__main__":

@@ -10,13 +10,15 @@ from .arch_params import (ALG1_DEFAULTS, LT_BASE, LT_LARGE, PAPER_CONSTRAINTS,
                           Constraints, PTAConfig, config_grid, iter_configs)
 from .paper_workloads import PAPER_WORKLOADS
 from .performance_model import (calc_edp, eval_full, eval_wload,
-                                eval_wload_arrays, fps, gemm_cycles)
+                                eval_wload_arrays, fps, gemm_cycles,
+                                workload_statics)
 from .photonic_model import (CONSTANTS, DEFAULT_SRAM_MB, DeviceConstants,
                              area_breakdown, eval_hw, eval_hw_config,
                              power_breakdown, sram_mb_for_workload)
-from .search import (SearchResult, build_search_space, dxpta_search,
+from .search import (ENGINES, SearchResult, build_search_space, dxpta_search,
                      evaluate_grid, exhaustive_search, grid_search_vectorized,
-                     progressive_candidates)
+                     hw_prefilter, progressive_candidates, search,
+                     search_workloads)
 from .significance import (SignificanceScore, observe_significance,
                            significant_params)
 from .workload import Gemm, Workload, merge_workloads, transformer_encoder_workload

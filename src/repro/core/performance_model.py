@@ -32,10 +32,25 @@ def _ceil_div(a, b, xp):
 
 
 def gemm_cycles(m, k, n, n_t, n_c, n_h, n_v, n_l, xp=np):
-    """Photonic cycles for one GEMM on one config (broadcastable)."""
-    return (_ceil_div(m, n_t * n_h, xp)
-            * _ceil_div(n, n_v, xp)
-            * _ceil_div(k, n_c * n_l, xp))
+    """Photonic cycles for one GEMM on one config (broadcastable).
+
+    The three ceil-divisions run in int32 (mirroring the formulation in
+    kernels/dse_eval.py), so the division itself is exact for dims up to
+    2**31 - 4096 — float ceil math would drift past the 24-bit float32
+    mantissa. The cast cannot repair inputs that already lost the integer:
+    pass dims as integer (or float64) arrays; float32 inputs are only exact
+    below 2**24 (config parameters always are; GEMM dims may not be, which
+    is why the jax engine ships them as int64). The terms are converted to
+    float only for the cycle product, whose rounding is benign.
+    """
+    i32 = getattr(xp, "int32")
+    m, k, n = (xp.asarray(v).astype(i32) for v in (m, k, n))
+    d_m = xp.asarray(n_t * n_h).astype(i32)
+    d_n = xp.asarray(n_v).astype(i32)
+    d_k = xp.asarray(n_c * n_l).astype(i32)
+    return ((_ceil_div(m, d_m, xp) * 1.0)
+            * (_ceil_div(n, d_n, xp) * 1.0)
+            * (_ceil_div(k, d_k, xp) * 1.0))
 
 
 def eval_wload_arrays(n_t, n_c, n_h, n_v, n_l, gemm_array, elec_ops,
@@ -50,15 +65,17 @@ def eval_wload_arrays(n_t, n_c, n_h, n_v, n_l, gemm_array, elec_ops,
     """
     n_t, n_c, n_h, n_v, n_l = (xp.asarray(a)[..., None] for a in
                                (n_t, n_c, n_h, n_v, n_l))  # (G, 1)
-    # Promote to float before any products: MAC counts overflow int32 (the
-    # jax default int width). Per-element dims are small, so the conversion
-    # itself is exact; float products carry ~1e-7 relative error at worst.
-    g = xp.asarray(gemm_array) * 1.0
-    m, k, n, count = g[:, 0], g[:, 1], g[:, 2], g[:, 3]      # (W,)
+    # Keep dims integer until inside gemm_cycles (its ceil-divisions are
+    # exact in int32); promote to float only for products — MAC counts
+    # overflow int32 (the jax default int width), and float products carry
+    # ~1e-7 relative error at worst.
+    g = xp.asarray(gemm_array)
+    m, k, n = g[:, 0], g[:, 1], g[:, 2]                      # (W,)
+    count = g[:, 3] * 1.0
 
     cyc = gemm_cycles(m, k, n, n_t, n_c, n_h, n_v, n_l, xp) * count  # (G, W)
     total_cycles = xp.sum(cyc, axis=-1)                               # (G,)
-    macs = xp.sum(m * k * n * count)
+    macs = xp.sum((m * 1.0) * (k * 1.0) * (n * 1.0) * count)
     peak_macs = (n_t * n_h * n_v * n_c * n_l)[..., 0]
     util = macs / xp.maximum(total_cycles * peak_macs, 1.0)
 
@@ -97,6 +114,22 @@ def eval_full(cfg, wl: Workload, c: DeviceConstants = CONSTANTS):
         cfg.n_t, cfg.n_c, cfg.n_h, cfg.n_v, cfg.n_lambda, wl.gemm_array,
         wl.elec_ops, wl.weight_bytes, wl.act_io_bytes, sram_mb, c)
     return float(area), float(power), float(e), float(l), float(u)
+
+
+def workload_statics(wl: Workload, c: DeviceConstants = CONSTANTS):
+    """Hashable (gemms, scalars) tuples describing `wl` for jit/kernel baking.
+
+    gemms is ((m, k, n, count), ...) as python floats; scalars is
+    (elec_ops, weight_bytes, act_io_bytes, sram_mb). The workload side of a
+    DSE evaluation is static per search, so baking it as compile-time
+    constants (and keeping constraints dynamic) maximizes jit-cache reuse.
+    """
+    gemms = tuple((float(m), float(k), float(n), float(cnt))
+                  for m, k, n, cnt in wl.gemm_array)
+    scalars = (float(wl.elec_ops), float(wl.weight_bytes),
+               float(wl.act_io_bytes),
+               float(sram_mb_for_workload(wl.max_act_bytes, c)))
+    return gemms, scalars
 
 
 def calc_edp(energy_j, latency_s):

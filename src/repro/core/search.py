@@ -1,30 +1,54 @@
-"""Alg. 2 — constraint-aware architecture search, plus baselines.
+"""Alg. 2 — constraint-aware architecture search, plus the engine layer.
 
-Three search engines over the same cost model:
+The paper-level entry points:
 
   * `dxpta_search`      — the paper's Alg. 2: significance-guided candidate
                           sets (fine-grained N_t/N_c, progressive step for
-                          N_v/N_h/N_lambda), sequential evaluation, feasible
-                          min-EDP selection. `prune=True` (default) skips the
-                          workload evaluation once area/power already violate
-                          — the "constraint-aware" part of the exploration.
+                          N_v/N_h/N_lambda), feasible min-EDP selection.
+                          `prune=True` (default) skips the workload
+                          evaluation once area/power already violate — the
+                          "constraint-aware" part of the exploration.
+                          `engine=` dispatches the reduced grid to any of
+                          the vectorized backends below.
   * `exhaustive_search` — the paper's comparison baseline: every combination
                           of all five parameters in 1..N_z, fully evaluated.
-  * `grid_search_vectorized` — beyond-paper: the whole grid evaluated as one
-                          broadcasted numpy/jax computation (the Pallas
-                          `dse_eval` kernel in repro.kernels accelerates the
-                          same math on TPU).
+
+Beyond-paper, the unified engine layer (`search` / `search_workloads`): four
+interchangeable backends over the same cost model, all returning identical
+`SearchResult`s —
+
+  * `python` — the paper-faithful Alg. 2 sequential loop (the oracle).
+  * `numpy`  — the whole grid as one broadcasted float64 computation.
+  * `jax`    — the same math jit-compiled, with constraint masking and the
+               EDP argmin fused on-device (jit-cached per workload).
+  * `pallas` — the fused `dse_search` kernel: feasibility, EDP and a
+               per-block argmin reduction inside the kernel, so the (4, G)
+               metrics array is never materialized on the host.
+
+`hierarchical=True` adds the two-phase pass (the vectorized analogue of the
+paper's `prune=True`): a cheap area/power-only sweep of the full grid
+(`hw_prefilter` — no workload term), compaction of the survivors, then
+workload evaluation only on the feasible subset. `search_workloads` batches
+all requested workloads against one grid — on the pallas backend in a single
+jit-cached kernel launch with dynamic constraint operands, so
+constraint-scenario sweeps never recompile.
+
+Whichever backend selects the winner, its reported metrics are recomputed
+through the float64 reference model (`eval_full`), so results are
+bit-identical across engines whenever they agree on `best_cfg`.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Dict, Optional, Sequence
+from typing import Dict, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
 from .arch_params import Constraints, PTAConfig, config_grid
-from .performance_model import calc_edp, eval_wload_arrays
+from .performance_model import (calc_edp, eval_full, eval_wload_arrays,
+                                workload_statics)
 from .photonic_model import CONSTANTS, DeviceConstants, eval_hw, sram_mb_for_workload
 from .significance import SignificanceScore, observe_significance, significant_params
 from .workload import Workload
@@ -90,13 +114,15 @@ def _space_to_grid(space) -> np.ndarray:
 
 
 def _sequential_search(grid: np.ndarray, wl: Workload, constraints: Constraints,
-                       prune: bool, collect: bool,
-                       c: DeviceConstants) -> SearchResult:
+                       prune: bool, collect: bool, c: DeviceConstants,
+                       edp_init: float = 1000.0) -> SearchResult:
     """Shared Alg. 2-style sequential loop (also used for the exhaustive
-    baseline, with pruning disabled and the full grid)."""
+    baseline, with pruning disabled and the full grid). `edp_init` defaults
+    to the paper's EDP_svd cap; the engine layer passes inf so that the
+    python backend matches the uncapped vectorized backends."""
     sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
     gemms = wl.gemm_array
-    best = SearchResult(best_cfg=None, edp=1000.0)  # EDP_svd init (Alg. 2)
+    best = SearchResult(best_cfg=None, edp=edp_init)  # EDP_svd init (Alg. 2)
     hist = {k: [] for k in ("area", "power", "energy", "latency",
                             "feasible")} if collect else None
     n_wl = 0
@@ -147,11 +173,25 @@ def dxpta_search(wl: Workload, constraints: Constraints = Constraints(),
                  significance: Optional[Dict[str, SignificanceScore]] = None,
                  align_dims: Optional[Sequence[int]] = None,
                  prune: bool = True, collect: bool = False,
-                 c: DeviceConstants = CONSTANTS) -> SearchResult:
-    """The paper's constraint-aware search (Alg. 2)."""
+                 c: DeviceConstants = CONSTANTS, engine: str = "python",
+                 interpret: bool = True) -> SearchResult:
+    """The paper's constraint-aware search (Alg. 2).
+
+    `engine` dispatches the significance-reduced grid to any backend of the
+    engine layer; `prune` maps to the hierarchical two-phase pass there.
+    The default `python` engine is the paper-faithful sequential loop
+    (including the EDP_svd=1000 initial cap, which the vectorized engines
+    deliberately drop); `collect=True` requires it.
+    """
+    if collect and engine != "python":
+        raise ValueError("collect=True (per-candidate history) is only "
+                         "implemented by the python engine")
     space = build_search_space(n_z, step, significance, align_dims)
-    return _sequential_search(_space_to_grid(space), wl, constraints,
-                              prune, collect, c)
+    grid = _space_to_grid(space)
+    if engine == "python":
+        return _sequential_search(grid, wl, constraints, prune, collect, c)
+    return search(wl, constraints, engine=engine, grid=grid,
+                  hierarchical=prune, c=c, interpret=interpret)
 
 
 def exhaustive_search(wl: Workload, constraints: Constraints = Constraints(),
@@ -210,3 +250,258 @@ def grid_search_vectorized(wl: Workload,
         latency_s=float(np.asarray(m["latency"])[i]),
         edp=float(edp[i]), n_evaluated=len(grid), n_feasible=n_feasible,
         n_workload_evals=len(grid), wall_time_s=wall)
+
+
+# ---------------------------------------------------------------------------
+# Unified engine layer (beyond-paper): python | numpy | jax | pallas
+# ---------------------------------------------------------------------------
+
+def _full_grid(n_z: int) -> np.ndarray:
+    inc = list(range(1, n_z + 1))
+    return config_grid(inc, inc, inc, inc, inc)
+
+
+@functools.lru_cache(maxsize=8)
+def _hw_mask_fn(c: DeviceConstants):
+    """Jit'd area/power feasibility mask. Grid columns, SRAM size and the
+    bounds are all dynamic operands, so every workload and constraint
+    scenario reuses the single cache entry per DeviceConstants."""
+    import jax
+    import jax.numpy as jnp
+
+    def fn(cols, sram_mb, bounds):
+        area, power = eval_hw(*(cols[i] for i in range(5)), sram_mb, c,
+                              xp=jnp)
+        return (area < bounds[0]) & (power < bounds[1])
+
+    return jax.jit(fn)
+
+
+def hw_prefilter(grid: np.ndarray, wl: Workload, constraints: Constraints,
+                 c: DeviceConstants = CONSTANTS) -> np.ndarray:
+    """Phase-1 mask of the hierarchical search: area/power feasibility only.
+
+    No workload term (the GEMM loop is the expensive part of the model), so
+    this is one cheap fused elementwise sweep of the full grid; the
+    survivors are then compacted and handed to the workload evaluation —
+    the vectorized analogue of Alg. 2's prune-on-violation. Only the (G,)
+    boolean mask leaves the device.
+    """
+    import jax.numpy as jnp
+    sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
+    bounds = jnp.asarray([constraints.area_mm2, constraints.power_w],
+                         jnp.float32)
+    mask = _hw_mask_fn(c)(jnp.asarray(np.asarray(grid).T, jnp.float32),
+                          jnp.float32(sram_mb), bounds)
+    return np.asarray(mask)
+
+
+def _make_result(cfg_row, n_feasible: int, wl: Workload, c: DeviceConstants,
+                 n_evaluated: int, n_workload_evals: int,
+                 wall: float) -> SearchResult:
+    """Finalize an engine's selection through the float64 reference model so
+    reported metrics are bit-identical across backends."""
+    if cfg_row is None:
+        return SearchResult(best_cfg=None, n_evaluated=n_evaluated,
+                            n_feasible=0, n_workload_evals=n_workload_evals,
+                            wall_time_s=wall)
+    cfg = PTAConfig.from_array(cfg_row)
+    area, power, energy, latency = eval_full(cfg, wl, c)[:4]
+    return SearchResult(
+        best_cfg=cfg, area_mm2=area, power_w=power, energy_j=energy,
+        latency_s=latency, edp=calc_edp(energy, latency),
+        n_evaluated=n_evaluated, n_feasible=n_feasible,
+        n_workload_evals=n_workload_evals, wall_time_s=wall)
+
+
+def _prefiltered(grid, wl, constraints, c, hierarchical):
+    """(survivor subset, n_workload_evals) for one workload."""
+    if not hierarchical:
+        return grid, len(grid)
+    sub = grid[hw_prefilter(grid, wl, constraints, c)]
+    return sub, len(sub)
+
+
+def _python_engine(grid, wl, constraints, c, hierarchical, interpret):
+    r = _sequential_search(grid, wl, constraints, prune=hierarchical,
+                           collect=False, c=c, edp_init=float("inf"))
+    row = None if r.best_cfg is None else r.best_cfg.as_array()
+    return _make_result(row, r.n_feasible, wl, c, len(grid),
+                        r.n_workload_evals, r.wall_time_s)
+
+
+def _vector_engine(grid, wl, constraints, c, hierarchical, xp):
+    t0 = time.perf_counter()
+    sub, n_wl = _prefiltered(grid, wl, constraints, c, hierarchical)
+    if len(sub) == 0:
+        return _make_result(None, 0, wl, c, len(grid), 0,
+                            time.perf_counter() - t0)
+    m = evaluate_grid(sub, wl, c, xp)
+    ok = np.asarray(constraints.satisfied(
+        np.asarray(m["area"]), np.asarray(m["power"]),
+        np.asarray(m["energy"]), np.asarray(m["latency"])))
+    n_feasible = int(ok.sum())
+    if n_feasible == 0:
+        return _make_result(None, 0, wl, c, len(grid), n_wl,
+                            time.perf_counter() - t0)
+    edp = np.where(ok, np.asarray(m["edp"]), np.inf)
+    return _make_result(sub[int(np.argmin(edp))], n_feasible, wl, c,
+                        len(grid), n_wl, time.perf_counter() - t0)
+
+
+def _numpy_engine(grid, wl, constraints, c, hierarchical, interpret):
+    return _vector_engine(grid, wl, constraints, c, hierarchical, xp=np)
+
+
+@functools.lru_cache(maxsize=128)
+def _jax_search_fn(gemms, wl_scalars, c: DeviceConstants):
+    """Jit-cached fused (argmin_idx, n_feasible) for one workload. The
+    constraint vector is a dynamic operand, so scenario sweeps reuse the
+    cache entry; only a pair of scalars leaves the device."""
+    import jax
+    import jax.numpy as jnp
+
+    # int array, not float32: GEMM dims past the 24-bit float32 mantissa
+    # must reach gemm_cycles' exact int32 ceil-division undamaged.
+    gemm_arr = jnp.asarray(np.asarray(gemms, np.int64))
+
+    def fn(cols, cons):
+        n_t, n_c, n_h, n_v, n_l = (cols[i] for i in range(5))
+        energy, latency, _ = eval_wload_arrays(
+            n_t, n_c, n_h, n_v, n_l, gemm_arr, *wl_scalars[:3],
+            wl_scalars[3], c, xp=jnp)
+        area, power = eval_hw(n_t, n_c, n_h, n_v, n_l, wl_scalars[3], c,
+                              xp=jnp)
+        ok = ((area < cons[0]) & (power < cons[1])
+              & (energy < cons[2]) & (latency < cons[3]))
+        edp = jnp.where(ok, energy * latency, jnp.inf)
+        return jnp.argmin(edp), jnp.sum(ok)
+
+    return jax.jit(fn)
+
+
+def _jax_engine(grid, wl, constraints, c, hierarchical, interpret):
+    import jax.numpy as jnp
+    t0 = time.perf_counter()
+    sub, n_wl = _prefiltered(grid, wl, constraints, c, hierarchical)
+    if len(sub) == 0:
+        return _make_result(None, 0, wl, c, len(grid), 0,
+                            time.perf_counter() - t0)
+    gemms, scalars = workload_statics(wl, c)
+    fn = _jax_search_fn(gemms, scalars, c)
+    cons = jnp.asarray([constraints.area_mm2, constraints.power_w,
+                        constraints.energy_j, constraints.latency_s],
+                       jnp.float32)
+    i, nf = fn(jnp.asarray(sub.T, jnp.float32), cons)
+    i, nf = int(i), int(nf)
+    row = sub[i] if nf > 0 else None
+    return _make_result(row, nf, wl, c, len(grid), n_wl,
+                        time.perf_counter() - t0)
+
+
+def _pallas_engine(grid, wl, constraints, c, hierarchical, interpret):
+    from repro.kernels.ops import dse_search_grid  # deferred: kernels import core
+    t0 = time.perf_counter()
+    sub, n_wl = _prefiltered(grid, wl, constraints, c, hierarchical)
+    if len(sub) == 0:
+        return _make_result(None, 0, wl, c, len(grid), 0,
+                            time.perf_counter() - t0)
+    i, nf = dse_search_grid(sub, wl, constraints, c, interpret)
+    row = sub[i] if i >= 0 else None
+    return _make_result(row, nf, wl, c, len(grid), n_wl,
+                        time.perf_counter() - t0)
+
+
+ENGINES = {"python": _python_engine, "numpy": _numpy_engine,
+           "jax": _jax_engine, "pallas": _pallas_engine}
+
+
+def search(wl: Workload, constraints: Constraints = Constraints(), *,
+           engine: str = "numpy", grid: Optional[np.ndarray] = None,
+           n_z: int = 12, hierarchical: bool = False,
+           c: DeviceConstants = CONSTANTS,
+           interpret: bool = True) -> SearchResult:
+    """Unified feasible-min-EDP search over a config grid.
+
+    Args:
+      engine: one of ENGINES. All backends return identical results; they
+        differ only in where the evaluation runs (host loop, broadcasted
+        numpy, jit'd jax, fused Pallas kernel). Caveat: the jax/pallas
+        backends (and the hierarchical prefilter) test feasibility in
+        float32, so a config whose metric sits within one float32 ulp of a
+        constraint bound can classify differently than under the float64
+        python/numpy engines — real design points never ride that edge.
+      grid: (G, 5) candidate configs; defaults to the full 1..n_z grid.
+      hierarchical: two-phase search — area/power-only prefilter over the
+        grid, then workload evaluation on the survivors only.
+      interpret: Pallas interpret mode (CPU); pass False on a real TPU.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; pick from "
+                         f"{sorted(ENGINES)}")
+    if grid is None:
+        grid = _full_grid(n_z)
+    return ENGINES[engine](np.asarray(grid), wl, constraints, c,
+                           hierarchical, interpret)
+
+
+def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
+                     constraints: Union[Constraints,
+                                        Mapping[str, Constraints]]
+                     = Constraints(), *,
+                     engine: str = "pallas",
+                     grid: Optional[np.ndarray] = None, n_z: int = 12,
+                     hierarchical: bool = False,
+                     c: DeviceConstants = CONSTANTS,
+                     interpret: bool = True) -> Dict[str, SearchResult]:
+    """Batched search: many workloads against one grid.
+
+    On the `pallas` engine all workloads are evaluated in a *single* fused
+    kernel launch (their GEMM lists unrolled back-to-back, constraints as a
+    dynamic (W, 4) operand) — constraint-scenario sweeps hit one jit cache
+    entry. Other engines fall back to a per-workload loop. With
+    `hierarchical=True` the compacted grid is the union of the per-workload
+    area/power survivor sets (the kernel still applies each workload's exact
+    constraints). Each returned SearchResult reports the whole batch's wall
+    time (the launch is shared).
+    """
+    if not isinstance(wls, Mapping):
+        wls = {wl.name: wl for wl in wls}
+    if grid is None:
+        grid = _full_grid(n_z)
+    grid = np.asarray(grid)
+
+    def cons_for(name):
+        return constraints[name] if isinstance(constraints, Mapping) \
+            else constraints
+
+    if engine != "pallas":
+        out = {name: search(wl, cons_for(name), engine=engine, grid=grid,
+                            hierarchical=hierarchical, c=c,
+                            interpret=interpret)
+               for name, wl in wls.items()}
+        total = sum(r.wall_time_s for r in out.values())
+        for r in out.values():
+            r.wall_time_s = total
+        return out
+
+    from repro.kernels.ops import dse_search_multi
+    t0 = time.perf_counter()
+    names = list(wls)
+    sub = grid
+    if hierarchical:
+        union = np.zeros(len(grid), dtype=bool)
+        for name in names:
+            union |= hw_prefilter(grid, wls[name], cons_for(name), c)
+        sub = grid[union]
+    n_wl = len(sub)
+    if n_wl == 0:
+        wall = time.perf_counter() - t0
+        return {name: _make_result(None, 0, wls[name], c, len(grid), 0, wall)
+                for name in names}
+    best, nf = dse_search_multi(sub, [wls[n] for n in names],
+                                [cons_for(n) for n in names], c, interpret)
+    wall = time.perf_counter() - t0
+    return {name: _make_result(sub[i] if i >= 0 else None, f, wls[name], c,
+                               len(grid), n_wl, wall)
+            for name, i, f in zip(names, best, nf)}

@@ -1,18 +1,31 @@
-"""Pallas TPU kernel: DxPTA config-grid evaluation (the DSE hot loop).
+"""Pallas TPU kernels: DxPTA config-grid evaluation + fused DSE search.
 
-Evaluates (area, power, energy, latency) of *every* candidate PTA config in
-one pass — the paper's per-config Python loop becomes a data-parallel sweep
-where each TPU lane owns one candidate architecture. The (static, small)
-workload GEMM list is baked into the kernel and unrolled; the config grid
-streams through VMEM in (5, BLOCK) tiles.
+Two kernels over the same per-config cost model (mirroring
+photonic_model.eval_hw + performance_model.eval_wload_arrays):
 
-This is the beyond-paper search engine; `repro.core.search.evaluate_grid`
-(pure jnp/numpy) is the oracle it is tested against (see kernels/ref.py).
+  * `dse_eval_padded`   — metrics mode: every candidate config in the grid
+    maps to its (area, power, energy, latency) tuple. Used for Fig. 9-style
+    scatter data where the full metric field is the product.
+  * `dse_search_padded` — fused search mode (the DSE hot path): constraint
+    masking, EDP computation and a per-block (best_edp, best_idx, n_feasible)
+    argmin reduction all happen inside the kernel, so only a (3*W, n_blocks)
+    reduction array ever leaves the device — the (4, G) metrics array is
+    never materialized on the host. W workloads are evaluated against the
+    same grid in a single launch (their static GEMM lists are unrolled in
+    sequence); constraints stream in as a dynamic (W, 4) operand so
+    constraint-scenario sweeps reuse one jit cache entry.
+
+Each TPU lane owns one candidate architecture; the config grid streams
+through VMEM in (5, BLOCK) tiles. Both wrappers pad + mask internally, so
+arbitrary grid sizes (e.g. DxPTA's pruned candidate sets) work without
+caller-side padding.
+
+`repro.core.search.evaluate_grid` (pure jnp/numpy) is the oracle these are
+tested against (see kernels/ref.py).
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -22,21 +35,43 @@ from repro.core.photonic_model import DeviceConstants
 
 BLOCK = 2048  # configs per grid step (16 sublane rows x 128 lanes)
 
+# Per-workload rows in the fused-search reduction output.
+SEARCH_ROWS = 3  # (best_edp, best_idx, n_feasible)
+
+
+def _to_i32(x):
+    """int32 conversion that keeps static python scalars exact (no float32
+    round-trip — 2**24 + 1 would silently become 2**24). Traced operands
+    here are config-parameter products (< 2**24), so their cast is exact."""
+    if isinstance(x, (int, float)):
+        return jnp.asarray(int(x), jnp.int32)
+    return jnp.asarray(x).astype(jnp.int32)
+
 
 def _ceil_div(a, b):
-    return jnp.floor((a + b - 1.0) / b)
+    """Exact int32 ceil(a / b) for integer-valued inputs.
+
+    The previous float formulation `floor((a + b - 1.0) / b)` drifts once
+    a + b - 1 exceeds the 24-bit float32 mantissa (large M/K/N dims at
+    serving batch sizes). Integer arithmetic matches
+    `performance_model._ceil_div` bit-for-bit for dims up to 2**31 - b
+    (the int32 headroom the `+ b - 1` needs; b is a config-parameter
+    product <= 4096 in practice). Callers convert to float32 only when
+    entering the (rounding-tolerant) cycle products.
+    """
+    ai, bi = _to_i32(a), _to_i32(b)
+    return (ai + bi - 1) // bi
 
 
-def _dse_kernel(gemms, wl_scalars, c: DeviceConstants,
-                cfg_ref, out_ref):
-    """gemms: static python list of (m, k, n, count); wl_scalars: static
-    (elec_ops, weight_bytes, act_io_bytes, sram_mb)."""
+def _config_metrics(gemms, wl_scalars, c: DeviceConstants,
+                    n_t, n_c, n_h, n_v, n_l):
+    """(area, power, energy, latency) for a (BLOCK,) vector of configs.
+
+    gemms: static python tuple of (m, k, n, count); wl_scalars: static
+    (elec_ops, weight_bytes, act_io_bytes, sram_mb). Shared by the metrics
+    kernel and the fused search kernel.
+    """
     elec_ops, weight_bytes, act_io_bytes, sram_mb = wl_scalars
-    n_t = cfg_ref[0, :]
-    n_c = cfg_ref[1, :]
-    n_h = cfg_ref[2, :]
-    n_v = cfg_ref[3, :]
-    n_l = cfg_ref[4, :]
 
     # ---- eval_hw: component model (mirrors photonic_model.py) ----
     cores = n_t * n_c
@@ -65,8 +100,9 @@ def _dse_kernel(gemms, wl_scalars, c: DeviceConstants,
     sram_lane_cycles = jnp.zeros_like(n_t)
     lanes = (n_t * n_h + n_v) * n_c * n_l
     for (m, k, n, count) in gemms:  # static unroll — W is small
-        cyc = (_ceil_div(m, n_t * n_h) * _ceil_div(n, n_v)
-               * _ceil_div(k, n_c * n_l)) * count
+        cyc = (_ceil_div(m, n_t * n_h).astype(jnp.float32)
+               * _ceil_div(n, n_v).astype(jnp.float32)
+               * _ceil_div(k, n_c * n_l).astype(jnp.float32)) * count
         total_cycles += cyc
         sram_lane_cycles += cyc * lanes
     t_photonic = total_cycles / c.f_clk_hz
@@ -77,26 +113,121 @@ def _dse_kernel(gemms, wl_scalars, c: DeviceConstants,
     energy = (power * latency
               + c.e_dram_per_byte * (weight_bytes + act_io_bytes)
               + c.e_sram_per_byte * sram_bytes)
+    return area, power, energy, latency
 
+
+def _cfg_cols(cfg_ref):
+    return (cfg_ref[0, :], cfg_ref[1, :], cfg_ref[2, :], cfg_ref[3, :],
+            cfg_ref[4, :])
+
+
+def _dse_kernel(gemms, wl_scalars, c: DeviceConstants, cfg_ref, out_ref):
+    area, power, energy, latency = _config_metrics(
+        gemms, wl_scalars, c, *_cfg_cols(cfg_ref))
     out_ref[0, :] = area
     out_ref[1, :] = power
     out_ref[2, :] = energy
     out_ref[3, :] = latency
 
 
+def _dse_search_kernel(workloads, c: DeviceConstants,
+                       cfg_ref, mask_ref, cons_ref, out_ref):
+    """Fused feasibility + EDP argmin over one (5, BLOCK) config tile.
+
+    workloads: static tuple of (gemms, wl_scalars) pairs; cons_ref holds the
+    dynamic (W, 4) [area, power, energy, latency] bounds. Emits SEARCH_ROWS
+    rows per workload: block-best EDP, its global config index, and the
+    block feasible count.
+    """
+    cols = _cfg_cols(cfg_ref)
+    valid = mask_ref[0, :] > 0.0
+    base = (pl.program_id(0) * BLOCK).astype(jnp.float32)
+    idx = base + jax.lax.iota(jnp.float32, cols[0].shape[0])
+    for w, (gemms, wl_scalars) in enumerate(workloads):
+        area, power, energy, latency = _config_metrics(
+            gemms, wl_scalars, c, *cols)
+        ok = (valid
+              & (area < cons_ref[w, 0]) & (power < cons_ref[w, 1])
+              & (energy < cons_ref[w, 2]) & (latency < cons_ref[w, 3]))
+        edp = jnp.where(ok, energy * latency, jnp.inf)
+        i = jnp.argmin(edp)
+        out_ref[SEARCH_ROWS * w + 0, 0] = edp[i]
+        out_ref[SEARCH_ROWS * w + 1, 0] = idx[i]
+        out_ref[SEARCH_ROWS * w + 2, 0] = jnp.sum(
+            ok.astype(jnp.float32))
+
+
+def _pad_cols(cfg_cols, mask=None):
+    """(5, G) -> ((5, G_pad), (1, G_pad) validity mask) with G_pad % BLOCK == 0.
+
+    Padding configs are all-ones (valid model inputs, so no div-by-zero) and
+    masked out of any reduction; metrics-mode callers simply trim the tail.
+    """
+    g = cfg_cols.shape[1]
+    pad = (-g) % BLOCK
+    if mask is None:
+        mask = jnp.ones((1, g), jnp.float32)
+    if pad:
+        cfg_cols = jnp.pad(cfg_cols, ((0, 0), (0, pad)), constant_values=1.0)
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    return cfg_cols, mask
+
+
 @functools.partial(jax.jit, static_argnames=("gemms", "wl_scalars",
                                              "constants", "interpret"))
 def dse_eval_padded(cfg_cols, *, gemms: tuple, wl_scalars: tuple,
                     constants: DeviceConstants, interpret: bool = True):
-    """cfg_cols: (5, G) float32 with G % BLOCK == 0 -> (4, G) metrics."""
+    """cfg_cols: (5, G) float32, any G -> (4, G) [area, power, energy,
+    latency]. Pads to a BLOCK multiple internally and trims the result."""
     _, g = cfg_cols.shape
-    assert g % BLOCK == 0
+    cfg_cols, _ = _pad_cols(cfg_cols)
     kernel = functools.partial(_dse_kernel, gemms, wl_scalars, constants)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(g // BLOCK,),
+        grid=(cfg_cols.shape[1] // BLOCK,),
         in_specs=[pl.BlockSpec((5, BLOCK), lambda i: (0, i))],
         out_specs=pl.BlockSpec((4, BLOCK), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((4, g), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((4, cfg_cols.shape[1]), jnp.float32),
         interpret=interpret,
     )(cfg_cols)
+    return out[:, :g]
+
+
+@functools.partial(jax.jit, static_argnames=("workloads", "constants",
+                                             "interpret"))
+def dse_search_padded(cfg_cols, mask, cons, *, workloads: tuple,
+                      constants: DeviceConstants, interpret: bool = True):
+    """Fused single-pass DSE search over a (5, G) config grid, any G.
+
+    Args:
+      cfg_cols: (5, G) float32 config columns (n_t, n_c, n_h, n_v, n_lambda).
+      mask: (1, G) float32 validity mask (0 entries never win and never
+        count as feasible). Callers that bucket-pad the grid to a shape the
+        jit cache has seen (ops.dse_search_multi) mark their padding here;
+        any remaining non-BLOCK-multiple tail is padded + masked internally.
+      cons: (W, 4) float32 [area_mm2, power_w, energy_j, latency_s] bounds —
+        a *dynamic* operand, so sweeping constraint scenarios hits one jit
+        cache entry.
+      workloads: static tuple of (gemms, wl_scalars) pairs (see
+        performance_model.workload_statics).
+
+    Returns (SEARCH_ROWS * W, n_blocks) float32: per workload w, rows
+    [3w + 0] block-best EDP (inf when the block has no feasible config),
+    [3w + 1] its global config index, [3w + 2] block feasible count.
+    Config indices are exact for G < 2**24 (float32 mantissa).
+    """
+    cfg_cols, mask = _pad_cols(cfg_cols, mask)
+    n_blocks = cfg_cols.shape[1] // BLOCK
+    w = len(workloads)
+    kernel = functools.partial(_dse_search_kernel, workloads, constants)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((5, BLOCK), lambda i: (0, i)),
+                  pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+                  pl.BlockSpec((w, 4), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((SEARCH_ROWS * w, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((SEARCH_ROWS * w, n_blocks),
+                                       jnp.float32),
+        interpret=interpret,
+    )(cfg_cols, mask, cons)

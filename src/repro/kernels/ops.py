@@ -22,7 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arch_params import PTAConfig
-from repro.core.photonic_model import CONSTANTS, DeviceConstants, sram_mb_for_workload
+from repro.core.performance_model import workload_statics
+from repro.core.photonic_model import CONSTANTS, DeviceConstants
 from repro.core.workload import Workload
 
 from . import ddot_gemm as _ddot
@@ -101,28 +102,88 @@ def dse_eval_grid(grid: np.ndarray, wl: Workload,
                   c: DeviceConstants = CONSTANTS,
                   interpret: bool = True) -> np.ndarray:
     """(G, 5) config grid -> (G, 4) [area, power, energy, latency] via the
-    dse_eval Pallas kernel."""
-    g = np.asarray(grid)
-    n = len(g)
-    pad = (-n) % _dse.BLOCK
-    if pad:
-        g = np.concatenate([g, np.ones((pad, 5), g.dtype)], axis=0)
-    cols = jnp.asarray(g.T, jnp.float32)
-    gemms = tuple((float(m), float(k), float(nn), float(cc))
-                  for m, k, nn, cc in wl.gemm_array)
-    wl_scalars = (float(wl.elec_ops), float(wl.weight_bytes),
-                  float(wl.act_io_bytes),
-                  float(sram_mb_for_workload(wl.max_act_bytes, c)))
+    dse_eval Pallas kernel. Any G — the kernel wrapper pads + trims."""
+    cols = jnp.asarray(np.asarray(grid).T, jnp.float32)
+    gemms, wl_scalars = workload_statics(wl, c)
     out = _dse.dse_eval_padded(cols, gemms=gemms, wl_scalars=wl_scalars,
                                constants=c, interpret=interpret)
-    return np.asarray(out).T[:n]
+    return np.asarray(out).T
+
+
+def _constraint_rows(constraints_seq) -> jnp.ndarray:
+    return jnp.asarray([[cc.area_mm2, cc.power_w, cc.energy_j, cc.latency_s]
+                        for cc in constraints_seq], jnp.float32)
+
+
+def dse_search_grid(grid: np.ndarray, wl: Workload, constraints,
+                    c: DeviceConstants = CONSTANTS,
+                    interpret: bool = True):
+    """Fused single-pass search: (best_idx or -1, n_feasible).
+
+    The Pallas kernel applies the constraint mask, computes EDP and reduces
+    each block to (best_edp, best_idx, n_feasible); only that
+    (3, n_blocks) array reaches the host — never the (4, G) metrics.
+    """
+    best, nf = dse_search_multi(grid, [wl], [constraints], c, interpret)
+    return best[0], nf[0]
+
+
+def _bucketed_cols(grid: np.ndarray):
+    """(G, 5) -> ((5, G_pad) cols, (1, G_pad) mask) with the block count
+    rounded up to a power of two. Grid sizes vary per pruned candidate set /
+    constraint scenario; bucketing bounds the number of distinct shapes the
+    jitted kernel ever sees to O(log G), so sweeps stop retracing."""
+    g = np.asarray(grid)
+    n = len(g)
+    n_blocks = max(8, -(-n // _dse.BLOCK))  # floor of 8: pruned candidate
+    # sets of wildly different sizes share one shape (masked blocks are
+    # cheap; a retrace is ~seconds)
+    g_pad = (1 << (n_blocks - 1).bit_length()) * _dse.BLOCK
+    cols = np.ones((5, g_pad), np.float32)
+    cols[:, :n] = g.T
+    mask = np.zeros((1, g_pad), np.float32)
+    mask[:, :n] = 1.0
+    return jnp.asarray(cols), jnp.asarray(mask)
+
+
+def dse_search_multi(grid: np.ndarray, wls, constraints_seq,
+                     c: DeviceConstants = CONSTANTS,
+                     interpret: bool = True):
+    """Batched fused search: W workloads x one grid in a single launch.
+
+    Returns (best_idx_per_wl, n_feasible_per_wl) lists; best_idx is -1 when
+    no config satisfies that workload's constraints.
+    """
+    cols, mask = _bucketed_cols(grid)
+    workloads = tuple(workload_statics(wl, c) for wl in wls)
+    cons = _constraint_rows(constraints_seq)
+    out = np.asarray(_dse.dse_search_padded(
+        cols, mask, cons, workloads=workloads, constants=c,
+        interpret=interpret))
+    best_idx, n_feasible = [], []
+    for w in range(len(workloads)):
+        edp_b, idx_b, nf_b = out[_dse.SEARCH_ROWS * w:
+                                 _dse.SEARCH_ROWS * (w + 1)]
+        nf = int(round(float(nf_b.sum())))
+        n_feasible.append(nf)
+        if nf == 0:
+            best_idx.append(-1)
+            continue
+        # Min EDP across blocks; ties broken towards the lowest global
+        # index, matching the sequential/numpy engines' first-hit rule.
+        jb = np.lexsort((idx_b, edp_b))[0]
+        best_idx.append(int(idx_b[jb]))
+    return best_idx, n_feasible
 
 
 def pallas_grid_search(grid: np.ndarray, wl: Workload, constraints,
                        c: DeviceConstants = CONSTANTS,
                        interpret: bool = True):
-    """Feasible min-EDP config via the kernel path (mirrors
-    core.search.grid_search_vectorized's selection rule)."""
+    """Legacy two-pass kernel path: materializes the full (G, 4) metrics on
+    the host, then selects with numpy (mirrors grid_search_vectorized's
+    rule). Kept as the baseline the fused `dse_search_grid` is benchmarked
+    against (benchmarks/fig12_search_time.py); prefer
+    `core.search.search(..., engine="pallas")` for real searches."""
     m = dse_eval_grid(grid, wl, c, interpret)
     area, power, energy, latency = m.T
     ok = constraints.satisfied(area, power, energy, latency)

@@ -45,6 +45,20 @@ def dse_eval_ref(grid: np.ndarray, wl: Workload,
                     axis=1).astype(np.float32)
 
 
+def dse_search_ref(grid: np.ndarray, wl: Workload, constraints,
+                   c: DeviceConstants = CONSTANTS):
+    """Oracle for kernels.ops.dse_search_grid: (best_idx or -1, n_feasible)
+    via the core (numpy, float64) model with the first-hit argmin rule."""
+    m = evaluate_grid(grid, wl, c, xp=np)
+    ok = np.asarray(constraints.satisfied(m["area"], m["power"], m["energy"],
+                                          m["latency"]))
+    n_feasible = int(ok.sum())
+    if n_feasible == 0:
+        return -1, 0
+    edp = np.where(ok, m["edp"], np.inf)
+    return int(np.argmin(edp)), n_feasible
+
+
 def flash_attention_ref(q, k, v, causal: bool = True):
     """Oracle for kernels.ops.flash_attention: plain softmax attention.
     q, k, v: (BH, S, D)."""

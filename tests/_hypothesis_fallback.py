@@ -1,0 +1,58 @@
+"""Minimal stand-in for `hypothesis` when it isn't installed.
+
+Implements just the surface the test-suite uses — `given`, `settings`, and
+`strategies.integers/tuples` — by drawing `max_examples` deterministic
+samples from a seeded numpy Generator. Property tests then still execute
+everywhere (CI images without hypothesis included), just without shrinking
+or the adaptive database. Import via:
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw  # fn(rng) -> value
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+st = types.SimpleNamespace(integers=_integers, tuples=_tuples)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # NB: no functools.wraps — pytest must see a zero-arg signature, or
+        # it would try to resolve the generated parameters as fixtures.
+        def runner():
+            rng = np.random.default_rng(0)
+            for _ in range(getattr(fn, "_max_examples", _DEFAULT_EXAMPLES)):
+                fn(*(s.draw(rng) for s in strategies))
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+    return deco

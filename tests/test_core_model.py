@@ -1,8 +1,12 @@
 """Unit + property tests for the DxPTA cost model and search machinery."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover — CI images without hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (CONSTANTS, Constraints, Gemm, PTAConfig, Workload,
                         config_grid, dxpta_search, eval_full, eval_hw,

@@ -8,12 +8,23 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover — CI images without hypothesis
+    from _hypothesis_fallback import given, settings, st
+
 from repro.core import Constraints, grid_search_vectorized
 from repro.core.paper_workloads import load
+from repro.core.performance_model import _ceil_div as _ceil_div_exact
+from repro.core.performance_model import workload_statics
+from repro.core.photonic_model import CONSTANTS
 from repro.kernels import (ddot_matmul, ddot_matmul_ref, dse_eval_grid,
-                           dse_eval_ref, pallas_grid_search, photonic_matmul,
-                           quantize4)
+                           dse_eval_ref, dse_search_grid, dse_search_multi,
+                           dse_search_ref, pallas_grid_search,
+                           photonic_matmul, quantize4)
 from repro.kernels.ddot_gemm import ddot_gemm_quantized
+from repro.kernels.dse_eval import BLOCK, _ceil_div, dse_eval_padded
 
 
 def _rand(shape, dtype, seed):
@@ -116,3 +127,63 @@ def test_pallas_grid_search_agrees_with_core():
     best, _ = pallas_grid_search(grid, wl, cons)
     ref = grid_search_vectorized(wl, cons, grid=grid)
     assert best == ref.best_cfg
+
+
+@given(st.integers(1, 2**31 - 4096), st.integers(1, 4095))
+@settings(max_examples=200, deadline=None)
+def test_kernel_ceil_div_exact_for_large_dims(a, b):
+    # The old float formulation floor((a + b - 1.0) / b) drifts once
+    # a + b - 1 exceeds the 24-bit float32 mantissa; the int32 form must
+    # match the reference integer ceil-division everywhere.
+    got = int(_ceil_div(float(a), jnp.float32(b)))
+    assert got == _ceil_div_exact(a, b, np)
+
+
+def test_kernel_ceil_div_regression_example():
+    # Concrete drift case: 2**24 + 1 is not float32-representable, so the
+    # old floor((a + b - 1.0) / b) path loses it; the int path must not.
+    a, b = 2**24 + 1, 1
+    assert int(_ceil_div(float(a), jnp.float32(b))) == a
+    old = float(jnp.floor((jnp.float32(a) + b - 1.0) / b))
+    assert old != a  # documents why the fix exists
+
+
+@pytest.mark.parametrize("gsize", [5, BLOCK - 3, BLOCK, BLOCK + 17])
+def test_dse_eval_padded_arbitrary_sizes(gsize):
+    # Direct wrapper call (no ops.py pre-padding): any G must work and the
+    # mask/trim must keep padding out of the result.
+    wl = load("deit-t")
+    rng = np.random.default_rng(gsize)
+    grid = rng.integers(1, 13, size=(gsize, 5))
+    gemms, wl_scalars = workload_statics(wl, CONSTANTS)
+    out = dse_eval_padded(jnp.asarray(grid.T, jnp.float32), gemms=gemms,
+                          wl_scalars=wl_scalars, constants=CONSTANTS)
+    assert out.shape == (4, gsize)
+    np.testing.assert_allclose(np.asarray(out).T, dse_eval_ref(grid, wl),
+                               rtol=3e-4)
+
+
+@pytest.mark.parametrize("wname", ["deit-t", "bert-l"])
+@pytest.mark.parametrize("gsize", [40, 2048, 5000])
+def test_dse_search_kernel_matches_ref(wname, gsize):
+    wl = load(wname)
+    rng = np.random.default_rng(gsize)
+    grid = rng.integers(1, 13, size=(gsize, 5))
+    cons = Constraints()
+    assert dse_search_grid(grid, wl, cons) == dse_search_ref(grid, wl, cons)
+
+
+def test_dse_search_kernel_zero_feasible():
+    wl = load("deit-b")
+    grid = np.random.default_rng(0).integers(1, 13, size=(300, 5))
+    impossible = Constraints(area_mm2=0.1, power_w=0.001)
+    assert dse_search_grid(grid, wl, impossible) == (-1, 0)
+
+
+def test_dse_search_multi_single_launch_matches_per_workload():
+    wls = [load(n) for n in ("deit-t", "deit-b", "bert-b")]
+    cons = [Constraints(), Constraints(power_w=3.0), Constraints()]
+    grid = np.random.default_rng(1).integers(1, 13, size=(3000, 5))
+    best, nf = dse_search_multi(grid, wls, cons)
+    for w, (wl, cc) in enumerate(zip(wls, cons)):
+        assert (best[w], nf[w]) == dse_search_ref(grid, wl, cc)
