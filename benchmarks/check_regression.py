@@ -1,0 +1,91 @@
+"""CI benchmark gate: diff a fresh smoke-mode BENCH json against the
+committed full-run baseline and fail on a >factor regression of any gated
+(fused/device engine) timing.
+
+The baseline was recorded on a different machine than the CI runner, so raw
+wall-clock ratios would measure machine speed, not regressions. The gate
+therefore normalizes by a *reference* timing present in both files — the
+host-side numpy sweep of the same grid (`fused_numpy` / `pareto_numpy`),
+which scales with machine speed but is independent of the fused-engine code
+paths. A gated key k fails when
+
+    (fresh[k] / base[k])  >  factor * (fresh[ref] / base[ref])
+
+i.e. when the engine slowed down more than `factor`x relative to how the
+machine itself compares. The reference keys (and the host python-loop
+timings) are never gated themselves. Only keys present in *both* files are
+compared — smoke runs legitimately skip the multi-minute sequential sweeps.
+
+Exit status: 0 ok, 1 regression, 2 nothing comparable (misconfigured gate).
+
+    python benchmarks/check_regression.py \
+        --baseline BENCH_dse.json --fresh BENCH_dse.smoke.json --factor 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Timings worth gating: the device-resident engine paths whose perf the
+# repo's PRs are accountable for.
+GATED_PREFIXES = ("fused_", "pareto_jax", "pareto_pallas", "pareto_batch")
+# Machine-speed normalizers (first one present in both files wins).
+REFERENCE_KEYS = ("fused_numpy", "pareto_numpy")
+
+
+def gate(baseline: dict, fresh: dict, factor: float) -> int:
+    base_us = baseline.get("engines_us", {})
+    fresh_us = fresh.get("engines_us", {})
+    ref_key = next((k for k in REFERENCE_KEYS
+                    if k in base_us and k in fresh_us), None)
+    speed = (float(fresh_us[ref_key]) / float(base_us[ref_key])) \
+        if ref_key else 1.0
+    shared = sorted(k for k in base_us
+                    if k in fresh_us and k.startswith(GATED_PREFIXES)
+                    and k not in REFERENCE_KEYS)
+    if not shared:
+        print("benchmark gate: no gated timings shared between baseline "
+              "and fresh run", file=sys.stderr)
+        return 2
+    bound = factor * speed
+    print(f"machine-speed normalizer: {ref_key or '(none)'} -> "
+          f"x{speed:.2f}; gated bound: ratio > {bound:.2f}")
+    failures = []
+    print(f"{'engine':28s} {'baseline_us':>14s} {'fresh_us':>14s} "
+          f"{'ratio':>7s}")
+    for k in shared:
+        ratio = float(fresh_us[k]) / float(base_us[k])
+        flag = "  <-- REGRESSION" if ratio > bound else ""
+        print(f"{k:28s} {float(base_us[k]):14.1f} "
+              f"{float(fresh_us[k]):14.1f} {ratio:7.2f}{flag}")
+        if ratio > bound:
+            failures.append(k)
+    if failures:
+        print(f"\n{len(failures)} gated timing(s) regressed more than "
+              f"{factor}x (speed-normalized) vs the committed baseline: "
+              f"{', '.join(failures)}", file=sys.stderr)
+        return 1
+    print(f"\nbenchmark gate OK: all {len(shared)} gated ratios <= "
+          f"{bound:.2f}x")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="committed full-run BENCH_*.json")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced smoke-mode BENCH_*.smoke.json")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max tolerated speed-normalized timing ratio")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    return gate(baseline, fresh, args.factor)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -108,7 +108,9 @@ def run():
     bench["engines_us"]["fused_batch_5wl"] = us_batch
     bench["agreement"]["batch_vs_" + ref_kind.split()[0]] = agree
     bench["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
-    if not smoke:  # never clobber the committed full-run perf record
-        _BENCH_JSON.write_text(json.dumps(bench, indent=2, default=str)
-                               + "\n")
+    # Smoke runs record BENCH_dse.smoke.json (the CI benchmark gate diffs it
+    # against the committed full-run record, which only full runs rewrite).
+    out_path = _BENCH_JSON.with_suffix(".smoke.json") if smoke \
+        else _BENCH_JSON
+    out_path.write_text(json.dumps(bench, indent=2, default=str) + "\n")
     return rows

@@ -1,0 +1,106 @@
+"""Beyond-paper benchmark: Pareto-frontier search across the engine layer.
+
+Times `search(..., objective="pareto")` on the full 12^5 grid for every
+frontier backend — numpy float64 (the reference), the jit sort-and-scan jax
+path and the fused pallas per-block dominance kernel (both with the
+hierarchical area/power prefilter), plus the flat pallas kernel, the Alg. 2
+python oracle on the significance-reduced grid, the significance-guided
+two-pass refinement, and the batched 5-workload single-launch frontier.
+
+Results land in BENCH_pareto.json at the repo root so the perf trajectory is
+tracked across PRs. Set PARETO_SMOKE=1 for a CI-sized run (single repeats,
+skips the flat-kernel and python-oracle sweeps); smoke mode writes
+BENCH_pareto.smoke.json so the committed full-run record is never clobbered
+— the CI benchmark gate diffs the two.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import (Constraints, build_search_space, config_grid,
+                        pareto_search_refined, search, search_workloads)
+from repro.core.paper_workloads import PAPER_WORKLOADS, load
+from repro.core.search import _space_to_grid
+
+from .common import row, timed
+
+_BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_pareto.json"
+
+
+def run():
+    smoke = bool(int(os.environ.get("PARETO_SMOKE", "0")))
+    repeats = 1 if smoke else 3
+    wl = load("deit-b")
+    cons = Constraints()
+    inc = list(range(1, 13))
+    grid = config_grid(inc, inc, inc, inc, inc)
+    rows = []
+    bench = {"grid_size": len(grid), "workload": "deit-b", "smoke": smoke,
+             "objectives": ["area", "power", "edp"], "front_size": None,
+             "engines_us": {}, "agreement": {}}
+
+    ref, us_ref = timed(lambda: search(wl, cons, engine="numpy", grid=grid,
+                                       objective="pareto"), repeats=repeats)
+    bench["front_size"] = int(ref.size)
+    bench["engines_us"]["pareto_numpy"] = us_ref
+    rows.append(row("pareto/numpy_flat", us_ref,
+                    f"front={ref.size} of {ref.n_feasible} feasible "
+                    f"({len(grid)} cfgs, float64 reference)"))
+
+    engine_cases = [("pareto_jax_hier", "jax", True),
+                    ("pareto_pallas_hier", "pallas", True)]
+    if not smoke:
+        engine_cases.append(("pareto_pallas_flat", "pallas", False))
+    for name, eng, hier in engine_cases:
+        r, us = timed(lambda eng=eng, hier=hier: search(
+            wl, cons, engine=eng, grid=grid, objective="pareto",
+            hierarchical=hier), repeats=repeats)
+        agree = bool(np.array_equal(r.front, ref.front))
+        bench["engines_us"][name] = us
+        bench["agreement"][name] = agree
+        rows.append(row(f"pareto/{name}[beyond-paper]", us,
+                        f"{r.n_workload_evals} wl evals, "
+                        f"{us_ref / us:.2f}x vs numpy flat, "
+                        f"identical front: {agree}"))
+
+    if not smoke:
+        # Alg. 2 oracle: sequential frontier over the significance-reduced
+        # grid (the paper-style search space, not the full 12^5 sweep).
+        sgrid = _space_to_grid(build_search_space())
+        r, us = timed(lambda: search(wl, cons, engine="python", grid=sgrid,
+                                     objective="pareto", hierarchical=True),
+                      repeats=1)
+        bench["engines_us"]["python_alg2_grid"] = us
+        rows.append(row("pareto/python_alg2_grid", us,
+                        f"sequential oracle, {len(sgrid)} cfgs, "
+                        f"front={r.size}"))
+
+    rr, us_rr = timed(lambda: pareto_search_refined(wl, cons, engine="numpy"),
+                      repeats=repeats)
+    bench["engines_us"]["pareto_refined"] = us_rr
+    rows.append(row("pareto/refined_two_pass[beyond-paper]", us_rr,
+                    f"coarse+fine {rr.n_evaluated} cfgs, front={rr.size} "
+                    f"(vs {ref.size} exhaustive)"))
+
+    # --- batched: all five paper workloads, one grid, one fused launch ---
+    wls = {name: f() for name, f in PAPER_WORKLOADS.items()}
+    batch, us_b = timed(lambda: search_workloads(
+        wls, cons, engine="pallas", grid=grid, hierarchical=True,
+        objective="pareto"), repeats=repeats)
+    sizes = {name: int(r.size) for name, r in batch.items()}
+    bench["engines_us"]["pareto_batch_5wl"] = us_b
+    bench["front_sizes_batch"] = sizes
+    rows.append(row("pareto/fused_batch_5workloads[beyond-paper]", us_b,
+                    f"single launch, {us_b / len(wls) / 1e3:.1f}ms/workload; "
+                    f"front sizes: {sizes}"))
+
+    bench["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    out_path = _BENCH_JSON.with_suffix(".smoke.json") if smoke \
+        else _BENCH_JSON  # never clobber the committed full-run record
+    out_path.write_text(json.dumps(bench, indent=2, default=str) + "\n")
+    return rows

@@ -15,9 +15,10 @@ def main() -> None:
     set_exec_safe(True)
 
     from . import (arch_dse, fig2_param_sweep, fig7_significance, fig9_dse,
-                   fig10_area_power, fig11_platforms, fig12_search_time)
+                   fig10_area_power, fig11_platforms, fig12_search_time,
+                   pareto_front)
     mods = [fig2_param_sweep, fig7_significance, fig9_dse, fig10_area_power,
-            fig11_platforms, fig12_search_time, arch_dse]
+            fig11_platforms, fig12_search_time, arch_dse, pareto_front]
     print("name,us_per_call,derived")
     failures = 0
     for m in mods:

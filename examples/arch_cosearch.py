@@ -18,6 +18,16 @@ Two modes:
 
         PYTHONPATH=src python examples/arch_cosearch.py --scenarios \
             --engine pallas
+
+  * `--scenarios --pareto` — the same sweep in frontier mode: each scenario
+    returns every workload's whole area/power/EDP Pareto frontier
+    (objective="pareto") instead of the single min-EDP point, so one run
+    maps the full trade-off surface per constraint box. On pallas the
+    per-block dominance reduction for all five workloads still shares one
+    fused launch per scenario.
+
+        PYTHONPATH=src python examples/arch_cosearch.py --scenarios \
+            --pareto --engine pallas
 """
 import argparse
 import time
@@ -61,22 +71,30 @@ def sweep_archs(args):
 
 def sweep_scenarios(args):
     wls = {name: f() for name, f in PAPER_WORKLOADS.items()}
-    print(f"engine={args.engine}  batched search: {len(wls)} paper "
-          f"workloads x full 12^5 grid per constraint scenario")
+    objective = "pareto" if args.pareto else "edp"
+    print(f"engine={args.engine}  objective={objective}  batched search: "
+          f"{len(wls)} paper workloads x full 12^5 grid per constraint "
+          f"scenario")
     for area, power in SCENARIOS:
         cons = Constraints(area_mm2=area, power_w=power)
         t0 = time.perf_counter()
         res = search_workloads(wls, cons, engine=args.engine,
-                               hierarchical=True)
+                               hierarchical=True, objective=objective)
         dt = time.perf_counter() - t0
         print(f"\n-- scenario: {area:.0f}mm^2 / {power:.1f}W "
               f"(one launch, {dt*1e3:.0f}ms)")
         for name, r in res.items():
-            if r.feasible:
+            if not r.feasible:
+                print(f"  {name:8s} infeasible under this box")
+            elif args.pareto:
+                lo, hi = r.metrics["edp"].min(), r.metrics["edp"].max()
+                a_lo, a_hi = r.metrics["area"].min(), r.metrics["area"].max()
+                print(f"  {name:8s} frontier: {r.size:3d} configs  "
+                      f"area {a_lo:.1f}..{a_hi:.1f}mm^2  "
+                      f"EDP {lo:.3e}..{hi:.3e} ({r.n_feasible} feasible)")
+            else:
                 print(f"  {name:8s} {str(r.best_cfg):34s} "
                       f"EDP={r.edp:.3e} ({r.n_feasible} feasible)")
-            else:
-                print(f"  {name:8s} infeasible under this box")
 
 
 def main():
@@ -89,7 +107,13 @@ def main():
     ap.add_argument("--scenarios", action="store_true",
                     help="constraint-scenario sweep over the paper "
                          "workloads (batched search_workloads)")
+    ap.add_argument("--pareto", action="store_true",
+                    help="with --scenarios: return each workload's whole "
+                         "area/power/EDP frontier per scenario instead of "
+                         "the min-EDP point")
     args = ap.parse_args()
+    if args.pareto and not args.scenarios:
+        ap.error("--pareto requires --scenarios")
     if args.scenarios:
         sweep_scenarios(args)
     else:

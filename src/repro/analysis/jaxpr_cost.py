@@ -13,7 +13,6 @@ correction next to the GEMMs, but it keeps softmax/normalization visible.
 from __future__ import annotations
 
 import math
-from functools import lru_cache
 
 import jax
 import numpy as np

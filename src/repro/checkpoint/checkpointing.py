@@ -142,7 +142,7 @@ class CheckpointManager:
         with open(os.path.join(final, "manifest.json")) as fh:
             manifest = json.load(fh)
         paths, leaves, treedef = _tree_paths(target_tree)
-        by_path = {l["path"]: l for l in manifest["leaves"]}
+        by_path = {leaf["path"]: leaf for leaf in manifest["leaves"]}
         shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
                         else [None] * len(leaves))
         out = []

@@ -9,18 +9,21 @@ paper_workloads, and repro.configs for the assigned architectures).
 from .arch_params import (ALG1_DEFAULTS, LT_BASE, LT_LARGE, PAPER_CONSTRAINTS,
                           Constraints, PTAConfig, config_grid, iter_configs)
 from .paper_workloads import PAPER_WORKLOADS
+from .pareto import (DEFAULT_OBJECTIVES, dominates, pareto_front, pareto_mask,
+                     pareto_search_refined)
 from .performance_model import (calc_edp, eval_full, eval_wload,
                                 eval_wload_arrays, fps, gemm_cycles,
                                 workload_statics)
 from .photonic_model import (CONSTANTS, DEFAULT_SRAM_MB, DeviceConstants,
                              area_breakdown, eval_hw, eval_hw_config,
                              power_breakdown, sram_mb_for_workload)
-from .search import (ENGINES, SearchResult, build_search_space, dxpta_search,
+from .search import (ENGINES, PARETO_ENGINES, REPORT_METRICS, ParetoResult,
+                     SearchResult, build_search_space, dxpta_search,
                      evaluate_grid, exhaustive_search, grid_search_vectorized,
                      hw_prefilter, progressive_candidates, search,
                      search_workloads)
 from .significance import (SignificanceScore, observe_significance,
-                           significant_params)
+                           refinement_sets, significant_params)
 from .workload import Gemm, Workload, merge_workloads, transformer_encoder_workload
 
 __all__ = [n for n in dir() if not n.startswith("_")]

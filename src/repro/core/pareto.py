@@ -1,36 +1,67 @@
-"""Beyond-paper DSE tooling: Pareto frontier + utilization-aligned candidates.
+"""Pareto-frontier search mode (beyond-paper DSE tooling).
 
 The paper selects a single feasible min-EDP point. A deployment team usually
-wants the *frontier* (what do I give up in EDP for 5 mm^2 less area?), so we
-expose a Pareto reduction over arbitrary metric subsets, computed on the
-vectorized grid evaluation.
+wants the *frontier* (what do I give up in EDP for 5 mm^2 less area?), so the
+engine layer exposes `objective="pareto"` on `search` / `search_workloads`
+(all four backends, identical frontiers). This module holds the pieces that
+are pure dominance math plus the two user-facing conveniences:
+
+  * `pareto_mask`           — exact vectorized non-dominated reduction
+                              (lexicographic sort + forward elimination; the
+                              oracle every backend's frontier is refined
+                              through).
+  * `pareto_front`          — (front_rows, metrics) over a grid, routed
+                              through the engine layer so a hierarchical
+                              prefilter's survivors are reused instead of
+                              re-running the full numpy `evaluate_grid`.
+  * `pareto_search_refined` — the paper's Alg. 1 -> Alg. 2 coupling applied
+                              to frontiers: a coarse significance-reduced
+                              pass, then a finer grid around the coarse
+                              frontier where only the significant parameters
+                              get dense neighborhoods.
+
+Dominance convention throughout: all metrics minimized; a point is dominated
+when another point is <= on every metric and < on at least one, so exact
+metric ties are *kept* (both points stay on the frontier).
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from .arch_params import Constraints
-from .search import evaluate_grid
+from .photonic_model import CONSTANTS, DeviceConstants
+from .significance import SignificanceScore, observe_significance, refinement_sets
 from .workload import Workload
+
+DEFAULT_OBJECTIVES = ("area", "power", "edp")
 
 
 def pareto_mask(points: np.ndarray) -> np.ndarray:
     """Boolean mask of non-dominated rows (all metrics minimized).
 
-    O(G^2 / 8) vectorized blocks — fine for the <=250k-point DxPTA grids.
+    Rows are visited in full lexicographic order, so every dominator strictly
+    precedes the rows it dominates (a dominator differs somewhere, and its
+    first differing metric is smaller); one forward elimination pass is then
+    complete. Sorting by the first metric alone is *not* enough — with a tie
+    on metric 0, a later row can dominate an earlier one and the earlier one
+    would survive. O(F * G) vectorized with F = |frontier| — fine for the
+    <=250k-point DxPTA grids.
     """
+    points = np.asarray(points, dtype=np.float64)
     g = len(points)
+    if g == 0:
+        return np.zeros(0, dtype=bool)
     mask = np.ones(g, dtype=bool)
-    order = np.argsort(points[:, 0], kind="stable")
+    order = np.lexsort(points.T[::-1])  # full lexicographic, metric 0 primary
     pts = points[order]
     for i in range(g):
         if not mask[i]:
             continue
         p = pts[i]
-        # Anything after i in sort order with all metrics >= p (and one >) is
-        # dominated; ties on every metric are kept.
+        # Anything after i in lex order with all metrics >= p (and one >) is
+        # dominated; exact ties on every metric are kept.
         later = pts[i + 1:]
         dom = np.all(later >= p, axis=1) & np.any(later > p, axis=1)
         mask[i + 1:] &= ~dom
@@ -39,16 +70,93 @@ def pareto_mask(points: np.ndarray) -> np.ndarray:
     return out
 
 
+def dominates(p: np.ndarray, q: np.ndarray) -> bool:
+    """True when point `p` dominates `q` (<= everywhere, < somewhere)."""
+    p, q = np.asarray(p), np.asarray(q)
+    return bool(np.all(p <= q) and np.any(p < q))
+
+
 def pareto_front(grid: np.ndarray, wl: Workload,
-                 metrics: Sequence[str] = ("area", "power", "edp"),
-                 constraints: Constraints | None = None):
-    """(front_grid, front_metrics) of non-dominated feasible configs."""
-    m = evaluate_grid(grid, wl)
-    keep = np.ones(len(grid), dtype=bool)
-    if constraints is not None:
-        keep = np.asarray(constraints.satisfied(
-            m["area"], m["power"], m["energy"], m["latency"]))
-    pts = np.stack([np.asarray(m[k])[keep] for k in metrics], axis=1)
-    sub = grid[keep]
-    mask = pareto_mask(pts)
-    return sub[mask], {k: np.asarray(m[k])[keep][mask] for k in metrics}
+                 metrics: Sequence[str] = DEFAULT_OBJECTIVES,
+                 constraints: Optional[Constraints] = None, *,
+                 engine: str = "numpy", hierarchical: bool = False,
+                 c: DeviceConstants = CONSTANTS, interpret: bool = True):
+    """(front_rows, front_metrics) of non-dominated feasible configs.
+
+    Thin wrapper over `search(..., objective="pareto")`, so the evaluation
+    runs on any backend and — with `hierarchical=True` — reuses the
+    area/power prefilter's survivor set instead of re-running the full
+    `evaluate_grid` (the pre-engine implementation always swept the whole
+    grid from scratch). `constraints=None` keeps the historical behaviour:
+    the frontier over *all* grid points, feasibility ignored.
+    """
+    from .search import search  # deferred: search imports pareto_mask
+
+    if constraints is None:
+        unconstrained = float("inf")
+        constraints = Constraints(area_mm2=unconstrained,
+                                  power_w=unconstrained,
+                                  energy_mj=unconstrained,
+                                  latency_ms=unconstrained)
+    r = search(wl, constraints, engine=engine, grid=grid,
+               hierarchical=hierarchical, c=c, interpret=interpret,
+               objective="pareto", pareto_metrics=tuple(metrics))
+    return r.front, {k: r.metrics[k] for k in metrics}
+
+
+def pareto_search_refined(wl: Workload,
+                          constraints: Constraints = Constraints(), *,
+                          engine: str = "numpy", n_z: int = 12, step: int = 2,
+                          significance: Optional[Dict[str, SignificanceScore]]
+                          = None,
+                          top_k: int = 2, radius: int = 1,
+                          metrics: Sequence[str] = DEFAULT_OBJECTIVES,
+                          hierarchical: bool = True,
+                          c: DeviceConstants = CONSTANTS,
+                          interpret: bool = True):
+    """Two-pass significance-guided frontier search (Alg. 1 -> Alg. 2).
+
+    Pass 1 sweeps the coarse significance-reduced grid (the same candidate
+    sets Alg. 2 uses: fine sets for the top-k significant parameters,
+    progressive sets for the rest). Pass 2 re-grids *around the coarse
+    frontier*: `refinement_sets` gives the significant parameters dense
+    +/-`radius` neighborhoods of every frontier value while the others keep
+    their frontier values, and the engine sweeps that (much smaller) fine
+    grid. The returned `ParetoResult` is the exact frontier of the union of
+    both passes' frontiers; `n_evaluated` and `n_feasible` sum both passes
+    (configs in both grids — the fine neighborhoods overlap the coarse sets
+    — are counted in each pass they appear in, consistently for both
+    fields).
+    """
+    from .search import (_pareto_from_rows, _space_to_grid, ParetoResult,
+                         build_search_space, search)
+    import time
+
+    t0 = time.perf_counter()
+    significance = significance or observe_significance()
+    coarse_grid = _space_to_grid(build_search_space(n_z, step, significance))
+    coarse = search(wl, constraints, engine=engine, grid=coarse_grid,
+                    hierarchical=hierarchical, c=c, interpret=interpret,
+                    objective="pareto", pareto_metrics=tuple(metrics))
+    n_evaluated = coarse.n_evaluated
+    n_wl = coarse.n_workload_evals
+    n_feasible = coarse.n_feasible
+    fine_front = np.zeros((0, 5), dtype=np.int64)
+    if len(coarse.front):
+        fine_grid = _space_to_grid(refinement_sets(
+            significance, coarse.front, n_z, top_k=top_k, radius=radius))
+        fine = search(wl, constraints, engine=engine, grid=fine_grid,
+                      hierarchical=hierarchical, c=c, interpret=interpret,
+                      objective="pareto", pareto_metrics=tuple(metrics))
+        n_evaluated += fine.n_evaluated
+        n_wl += fine.n_workload_evals
+        n_feasible += fine.n_feasible
+        fine_front = fine.front
+    merged = np.unique(np.concatenate([coarse.front, fine_front], axis=0),
+                       axis=0)
+    front, met, _ = _pareto_from_rows(merged, wl, constraints, c,
+                                      tuple(metrics))
+    return ParetoResult(front=front, metrics=met, objectives=tuple(metrics),
+                        n_evaluated=n_evaluated, n_feasible=n_feasible,
+                        n_workload_evals=n_wl,
+                        wall_time_s=time.perf_counter() - t0)

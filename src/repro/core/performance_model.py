@@ -99,10 +99,10 @@ def eval_wload_arrays(n_t, n_c, n_h, n_v, n_l, gemm_array, elec_ops,
 def eval_wload(cfg, wl: Workload, c: DeviceConstants = CONSTANTS, xp=np):
     """Alg. 2 line 12: (energy_J, latency_s) for one PTAConfig + Workload."""
     sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
-    e, l, _ = eval_wload_arrays(
+    e, lat, _ = eval_wload_arrays(
         cfg.n_t, cfg.n_c, cfg.n_h, cfg.n_v, cfg.n_lambda, wl.gemm_array,
         wl.elec_ops, wl.weight_bytes, wl.act_io_bytes, sram_mb, c, xp)
-    return float(e), float(l)
+    return float(e), float(lat)
 
 
 def eval_full(cfg, wl: Workload, c: DeviceConstants = CONSTANTS):
@@ -110,10 +110,10 @@ def eval_full(cfg, wl: Workload, c: DeviceConstants = CONSTANTS):
     sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
     area, power = eval_hw(cfg.n_t, cfg.n_c, cfg.n_h, cfg.n_v, cfg.n_lambda,
                           sram_mb, c)
-    e, l, u = eval_wload_arrays(
+    e, lat, u = eval_wload_arrays(
         cfg.n_t, cfg.n_c, cfg.n_h, cfg.n_v, cfg.n_lambda, wl.gemm_array,
         wl.elec_ops, wl.weight_bytes, wl.act_io_bytes, sram_mb, c)
-    return float(area), float(power), float(e), float(l), float(u)
+    return float(area), float(power), float(e), float(lat), float(u)
 
 
 def workload_statics(wl: Workload, c: DeviceConstants = CONSTANTS):

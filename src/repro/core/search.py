@@ -36,6 +36,14 @@ constraint-scenario sweeps never recompile.
 Whichever backend selects the winner, its reported metrics are recomputed
 through the float64 reference model (`eval_full`), so results are
 bit-identical across engines whenever they agree on `best_cfg`.
+
+Both entry points also take `objective="pareto"`: instead of the single
+min-EDP point they return the whole non-dominated feasible set over
+`pareto_metrics` as a `ParetoResult`. Backends propose frontier candidates
+their own way (sequential incremental front, exact float64 mask, jit
+sort-and-scan, per-block dominance reduction in the fused kernel) and every
+proposal is refined through the float64 reference model, so identical
+frontiers come back byte-identical; see PARETO_ENGINES below.
 """
 from __future__ import annotations
 
@@ -47,11 +55,15 @@ from typing import Dict, Mapping, Optional, Sequence, Union
 import numpy as np
 
 from .arch_params import Constraints, PTAConfig, config_grid
+from .pareto import DEFAULT_OBJECTIVES, pareto_mask
 from .performance_model import (calc_edp, eval_full, eval_wload_arrays,
                                 workload_statics)
 from .photonic_model import CONSTANTS, DeviceConstants, eval_hw, sram_mb_for_workload
 from .significance import SignificanceScore, observe_significance, significant_params
 from .workload import Workload
+
+# Metric arrays reported per frontier point (every evaluate_grid key).
+REPORT_METRICS = ("area", "power", "energy", "latency", "util", "edp")
 
 
 @dataclasses.dataclass
@@ -72,6 +84,38 @@ class SearchResult:
     @property
     def feasible(self) -> bool:
         return self.best_cfg is not None
+
+
+@dataclasses.dataclass
+class ParetoResult:
+    """A feasible Pareto frontier (objective="pareto" search mode).
+
+    `front` holds the non-dominated feasible config rows in canonical
+    (lexicographic) order; `metrics` the float64 reference-model metric
+    arrays aligned row-for-row with it. Whatever backend proposed the
+    frontier, both are finalized through the numpy reference model, so
+    results are byte-identical across engines whenever they agree on the
+    frontier membership.
+    """
+    front: np.ndarray                      # (F, 5) int64 config rows
+    metrics: Dict[str, np.ndarray]         # {REPORT_METRICS: (F,) float64}
+    objectives: tuple = DEFAULT_OBJECTIVES
+    n_evaluated: int = 0
+    n_feasible: int = 0
+    n_workload_evals: int = 0
+    wall_time_s: float = 0.0
+
+    @property
+    def size(self) -> int:
+        return len(self.front)
+
+    @property
+    def feasible(self) -> bool:
+        return self.size > 0
+
+    @property
+    def configs(self):
+        return [PTAConfig.from_array(row) for row in self.front]
 
 
 def progressive_candidates(n_z: int, step: int,
@@ -416,12 +460,258 @@ ENGINES = {"python": _python_engine, "numpy": _numpy_engine,
            "jax": _jax_engine, "pallas": _pallas_engine}
 
 
+# ---------------------------------------------------------------------------
+# Pareto-frontier search mode (objective="pareto"), same four backends
+# ---------------------------------------------------------------------------
+
+def _pareto_from_rows(rows, wl: Workload, constraints: Constraints,
+                      c: DeviceConstants, objectives: tuple, m=None):
+    """Exact float64 frontier over candidate rows.
+
+    Every backend funnels its (possibly float32-proposed) candidate set
+    through here: feasibility and dominance are re-decided by the numpy
+    float64 reference model, and the frontier comes back in canonical
+    lexicographic row order with reference-model metrics — so backends that
+    agree on candidates return byte-identical `ParetoResult`s. Pass `m` to
+    reuse already-computed `evaluate_grid` metrics for `rows`.
+
+    Returns (front_rows, metrics, n_feasible_in_rows).
+    """
+    rows = np.asarray(rows, dtype=np.int64).reshape(-1, 5)
+    empty = (np.zeros((0, 5), np.int64),
+             {k: np.zeros(0, np.float64) for k in REPORT_METRICS}, 0)
+    if len(rows) == 0:
+        return empty
+    if m is None:
+        m = evaluate_grid(rows, wl, c, xp=np)
+    ok = np.asarray(constraints.satisfied(m["area"], m["power"], m["energy"],
+                                          m["latency"]))
+    if not ok.any():
+        return empty
+    pts = np.stack([np.asarray(m[k], np.float64)[ok] for k in objectives],
+                   axis=1)
+    mask = pareto_mask(pts)
+    front = rows[ok][mask]
+    order = np.lexsort(front.T[::-1])
+    sel = np.where(ok)[0][mask][order]
+    met = {k: np.asarray(m[k], np.float64)[sel] for k in REPORT_METRICS}
+    return front[order], met, int(ok.sum())
+
+
+def _sequential_pareto(grid, wl: Workload, constraints: Constraints,
+                       prune: bool, c: DeviceConstants, objectives: tuple):
+    """Alg. 2-style sequential oracle for the frontier: stream the grid,
+    maintain the running non-dominated set incrementally (dominated
+    newcomers are rejected, newly-dominated incumbents evicted, exact ties
+    kept). Returns (front_rows, n_feasible, n_workload_evals)."""
+    sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
+    gemms = wl.gemm_array
+    front_rows: list = []
+    front_pts: list = []
+    n_wl = 0
+    n_feasible = 0
+    for row in grid:
+        n_t, n_c, n_h, n_v, n_l = (int(x) for x in row)
+        area, power = eval_hw(n_t, n_c, n_h, n_v, n_l, sram_mb, c)
+        hw_ok = (area < constraints.area_mm2) and (power < constraints.power_w)
+        if prune and not hw_ok:
+            continue
+        energy, latency, util = eval_wload_arrays(
+            n_t, n_c, n_h, n_v, n_l, gemms, wl.elec_ops, wl.weight_bytes,
+            wl.act_io_bytes, sram_mb, c)
+        energy, latency = float(energy), float(latency)
+        n_wl += 1
+        if not (hw_ok and (energy < constraints.energy_j)
+                and (latency < constraints.latency_s)):
+            continue
+        n_feasible += 1
+        vals = {"area": float(area), "power": float(power), "energy": energy,
+                "latency": latency, "util": float(util),
+                "edp": calc_edp(energy, latency)}
+        p = np.array([vals[k] for k in objectives], np.float64)
+        if front_pts:
+            fr = np.asarray(front_pts)
+            if bool(np.any(np.all(fr <= p, axis=1) & np.any(fr < p, axis=1))):
+                continue
+            keep = ~(np.all(p <= fr, axis=1) & np.any(p < fr, axis=1))
+            front_rows = [r for r, k in zip(front_rows, keep) if k]
+            front_pts = [q for q, k in zip(front_pts, keep) if k]
+        front_rows.append(np.asarray(row))
+        front_pts.append(p)
+    return front_rows, n_feasible, n_wl
+
+
+def _pareto_result(cand_rows, n_feasible, wl, constraints, c, objectives,
+                   n_evaluated, n_wl, t0) -> ParetoResult:
+    front, met, _ = _pareto_from_rows(cand_rows, wl, constraints, c,
+                                      objectives)
+    return ParetoResult(front=front, metrics=met, objectives=objectives,
+                        n_evaluated=n_evaluated, n_feasible=n_feasible,
+                        n_workload_evals=n_wl,
+                        wall_time_s=time.perf_counter() - t0)
+
+
+def _pareto_python(grid, wl, constraints, c, hierarchical, interpret,
+                   objectives):
+    t0 = time.perf_counter()
+    rows, n_feasible, n_wl = _sequential_pareto(grid, wl, constraints,
+                                                hierarchical, c, objectives)
+    cand = np.asarray(rows, np.int64).reshape(-1, 5)
+    return _pareto_result(cand, n_feasible, wl, constraints, c, objectives,
+                          len(grid), n_wl, t0)
+
+
+def _pareto_numpy(grid, wl, constraints, c, hierarchical, interpret,
+                  objectives):
+    t0 = time.perf_counter()
+    sub, n_wl = _prefiltered(grid, wl, constraints, c, hierarchical)
+    if len(sub) == 0:
+        return _pareto_result(sub, 0, wl, constraints, c, objectives,
+                              len(grid), 0, t0)
+    m = evaluate_grid(sub, wl, c, xp=np)
+    front, met, n_feasible = _pareto_from_rows(sub, wl, constraints, c,
+                                               objectives, m=m)
+    return ParetoResult(front=front, metrics=met, objectives=objectives,
+                        n_evaluated=len(grid), n_feasible=n_feasible,
+                        n_workload_evals=n_wl,
+                        wall_time_s=time.perf_counter() - t0)
+
+
+# Sorted points per scan step and running-frontier buffer bound of the jax
+# sort-and-scan dominance pass. An overflowing buffer only grows the
+# candidate superset (never drops a true frontier point) — the host
+# refinement restores exactness — so the bound is a perf knob, not a limit.
+JAX_PARETO_CHUNK = 2048
+JAX_PARETO_MAX_FRONT = 256
+
+
+@functools.lru_cache(maxsize=64)
+def _jax_pareto_fn(gemms, wl_scalars, c: DeviceConstants, objectives: tuple):
+    """Jit-cached fused frontier-candidate mask for one workload.
+
+    Metrics + feasibility as in `_jax_search_fn`, then a sort-and-scan
+    dominance pass: objective rows are lex-sorted (so any dominator strictly
+    precedes what it dominates, and frontier membership is decided the
+    moment a row is visited), scanned in chunks against (a) a bounded
+    running-frontier buffer carried across chunks and (b) the earlier rows
+    of their own chunk. Constraints stay a dynamic operand; only the (G,)
+    candidate mask and the feasible count leave the device.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    gemm_arr = jnp.asarray(np.asarray(gemms, np.int64))
+    d = len(objectives)
+
+    def fn(cols, valid, cons):
+        n_t, n_c, n_h, n_v, n_l = (cols[i] for i in range(5))
+        energy, latency, util = eval_wload_arrays(
+            n_t, n_c, n_h, n_v, n_l, gemm_arr, *wl_scalars[:3],
+            wl_scalars[3], c, xp=jnp)
+        area, power = eval_hw(n_t, n_c, n_h, n_v, n_l, wl_scalars[3], c,
+                              xp=jnp)
+        ok = (valid & (area < cons[0]) & (power < cons[1])
+              & (energy < cons[2]) & (latency < cons[3]))
+        vals = {"area": area, "power": power, "energy": energy,
+                "latency": latency, "util": util, "edp": energy * latency}
+        # Infeasible rows become all-+inf: they sort last, never dominate
+        # (inf <= finite is false), and are excluded by the finite() check.
+        objs = [jnp.where(ok, vals[k].astype(jnp.float32), jnp.inf)
+                for k in objectives]
+        order = jnp.lexsort(tuple(objs[::-1]))
+        pts = jnp.stack([o[order] for o in objs], axis=1)
+        chunks = pts.reshape(-1, JAX_PARETO_CHUNK, d)
+        tri = jnp.tri(JAX_PARETO_CHUNK, k=-1, dtype=bool)  # [i, j]: j < i
+
+        def step(buf, p):
+            le = jnp.all(buf[None, :, :] <= p[:, None, :], axis=-1)
+            lt = jnp.any(buf[None, :, :] < p[:, None, :], axis=-1)
+            dom_buf = jnp.any(le & lt, axis=1)
+            le_c = jnp.all(p[None, :, :] <= p[:, None, :], axis=-1)
+            lt_c = jnp.any(p[None, :, :] < p[:, None, :], axis=-1)
+            dom_chunk = jnp.any(le_c & lt_c & tri, axis=1)
+            surv = jnp.isfinite(p[:, 0]) & ~dom_buf & ~dom_chunk
+            # Merge survivors into the buffer, preserving lex order (buffer
+            # rows come from earlier chunks, hence lex-precede survivors);
+            # stable-compact the finite rows, drop overflow beyond the cap.
+            pool = jnp.concatenate(
+                [buf, jnp.where(surv[:, None], p, jnp.inf)], axis=0)
+            live = jnp.isfinite(pool[:, 0])
+            key = jnp.where(live, jnp.arange(pool.shape[0]), pool.shape[0])
+            buf = pool[jnp.argsort(key)[:JAX_PARETO_MAX_FRONT]]
+            return buf, surv
+
+        buf0 = jnp.full((JAX_PARETO_MAX_FRONT, d), jnp.inf, jnp.float32)
+        _, surv = jax.lax.scan(step, buf0, chunks)
+        mask = jnp.zeros(pts.shape[0], bool).at[order].set(surv.reshape(-1))
+        return mask, jnp.sum(ok)
+
+    return jax.jit(fn)
+
+
+def _pareto_jax(grid, wl, constraints, c, hierarchical, interpret,
+                objectives):
+    import jax.numpy as jnp
+    t0 = time.perf_counter()
+    sub, n_wl = _prefiltered(grid, wl, constraints, c, hierarchical)
+    if len(sub) == 0:
+        return _pareto_result(sub, 0, wl, constraints, c, objectives,
+                              len(grid), 0, t0)
+    g = len(sub)
+    pad = (-g) % JAX_PARETO_CHUNK
+    cols = np.ones((5, g + pad), np.float32)
+    cols[:, :g] = sub.T
+    valid = np.zeros(g + pad, bool)
+    valid[:g] = True
+    gemms, scalars = workload_statics(wl, c)
+    fn = _jax_pareto_fn(gemms, scalars, c, objectives)
+    cons = jnp.asarray([constraints.area_mm2, constraints.power_w,
+                        constraints.energy_j, constraints.latency_s],
+                       jnp.float32)
+    mask, nf = fn(jnp.asarray(cols), jnp.asarray(valid), cons)
+    cand = sub[np.asarray(mask)[:g]]
+    return _pareto_result(cand, int(nf), wl, constraints, c, objectives,
+                          len(grid), n_wl, t0)
+
+
+def _pareto_pallas(grid, wl, constraints, c, hierarchical, interpret,
+                   objectives):
+    from repro.kernels.ops import dse_pareto_multi  # deferred: kernels import core
+    t0 = time.perf_counter()
+    sub, n_wl = _prefiltered(grid, wl, constraints, c, hierarchical)
+    if len(sub) == 0:
+        return _pareto_result(sub, 0, wl, constraints, c, objectives,
+                              len(grid), 0, t0)
+    (cand_idx, nf), = dse_pareto_multi(sub, [wl], [constraints], c,
+                                       interpret, objectives=objectives)
+    return _pareto_result(sub[cand_idx], nf, wl, constraints, c, objectives,
+                          len(grid), n_wl, t0)
+
+
+PARETO_ENGINES = {"python": _pareto_python, "numpy": _pareto_numpy,
+                  "jax": _pareto_jax, "pallas": _pareto_pallas}
+
+
+def _check_pareto_metrics(engine: str, pareto_metrics) -> tuple:
+    metrics = tuple(pareto_metrics)
+    unknown = [k for k in metrics if k not in REPORT_METRICS]
+    if unknown or not metrics:
+        raise ValueError(f"pareto_metrics must be a non-empty subset of "
+                         f"{REPORT_METRICS}, got {pareto_metrics!r}")
+    if engine == "pallas" and "util" in metrics:
+        raise ValueError("the pallas frontier kernel does not model 'util'; "
+                         "use the python/numpy/jax engines for it")
+    return metrics
+
+
 def search(wl: Workload, constraints: Constraints = Constraints(), *,
            engine: str = "numpy", grid: Optional[np.ndarray] = None,
            n_z: int = 12, hierarchical: bool = False,
-           c: DeviceConstants = CONSTANTS,
-           interpret: bool = True) -> SearchResult:
-    """Unified feasible-min-EDP search over a config grid.
+           c: DeviceConstants = CONSTANTS, interpret: bool = True,
+           objective: str = "edp",
+           pareto_metrics: tuple = DEFAULT_OBJECTIVES
+           ) -> Union[SearchResult, ParetoResult]:
+    """Unified search over a config grid.
 
     Args:
       engine: one of ENGINES. All backends return identical results; they
@@ -433,16 +723,36 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
         python/numpy engines — real design points never ride that edge.
       grid: (G, 5) candidate configs; defaults to the full 1..n_z grid.
       hierarchical: two-phase search — area/power-only prefilter over the
-        grid, then workload evaluation on the survivors only.
+        grid, then workload evaluation on the survivors only. Safe in both
+        modes: prefilter losers are area/power-infeasible, so they can't be
+        the min-EDP pick or on the feasible frontier.
       interpret: Pallas interpret mode (CPU); pass False on a real TPU.
+      objective: "edp" — feasible min-EDP point (a SearchResult) — or
+        "pareto" — the whole non-dominated feasible set over
+        `pareto_metrics` (a ParetoResult). Frontier backends propose
+        candidates their own way (python: incremental oracle; numpy: exact
+        float64 mask; jax: jit sort-and-scan; pallas: per-block dominance
+        reduction in the fused kernel), then every proposal is refined
+        through the float64 reference model, so identical frontiers come
+        back byte-identical.
+      pareto_metrics: objectives to minimize in "pareto" mode, a subset of
+        REPORT_METRICS (the pallas kernel models all but "util").
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; pick from "
                          f"{sorted(ENGINES)}")
     if grid is None:
         grid = _full_grid(n_z)
-    return ENGINES[engine](np.asarray(grid), wl, constraints, c,
-                           hierarchical, interpret)
+    grid = np.asarray(grid)
+    if objective == "edp":
+        return ENGINES[engine](grid, wl, constraints, c, hierarchical,
+                               interpret)
+    if objective != "pareto":
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"pick 'edp' or 'pareto'")
+    metrics = _check_pareto_metrics(engine, pareto_metrics)
+    return PARETO_ENGINES[engine](grid, wl, constraints, c, hierarchical,
+                                  interpret, metrics)
 
 
 def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
@@ -453,7 +763,9 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                      grid: Optional[np.ndarray] = None, n_z: int = 12,
                      hierarchical: bool = False,
                      c: DeviceConstants = CONSTANTS,
-                     interpret: bool = True) -> Dict[str, SearchResult]:
+                     interpret: bool = True, objective: str = "edp",
+                     pareto_metrics: tuple = DEFAULT_OBJECTIVES
+                     ) -> Dict[str, Union[SearchResult, ParetoResult]]:
     """Batched search: many workloads against one grid.
 
     On the `pallas` engine all workloads are evaluated in a *single* fused
@@ -462,14 +774,20 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
     entry. Other engines fall back to a per-workload loop. With
     `hierarchical=True` the compacted grid is the union of the per-workload
     area/power survivor sets (the kernel still applies each workload's exact
-    constraints). Each returned SearchResult reports the whole batch's wall
-    time (the launch is shared).
+    constraints). `objective="pareto"` returns each workload's frontier
+    (ParetoResult) instead of its min-EDP point; on pallas the per-block
+    dominance reduction for all workloads still shares the one launch. Each
+    returned result reports the whole batch's wall time (the launch is
+    shared).
     """
     if not isinstance(wls, Mapping):
         wls = {wl.name: wl for wl in wls}
     if grid is None:
         grid = _full_grid(n_z)
     grid = np.asarray(grid)
+    if objective not in ("edp", "pareto"):
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"pick 'edp' or 'pareto'")
 
     def cons_for(name):
         return constraints[name] if isinstance(constraints, Mapping) \
@@ -478,14 +796,14 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
     if engine != "pallas":
         out = {name: search(wl, cons_for(name), engine=engine, grid=grid,
                             hierarchical=hierarchical, c=c,
-                            interpret=interpret)
+                            interpret=interpret, objective=objective,
+                            pareto_metrics=pareto_metrics)
                for name, wl in wls.items()}
         total = sum(r.wall_time_s for r in out.values())
         for r in out.values():
             r.wall_time_s = total
         return out
 
-    from repro.kernels.ops import dse_search_multi
     t0 = time.perf_counter()
     names = list(wls)
     sub = grid
@@ -495,6 +813,27 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
             union |= hw_prefilter(grid, wls[name], cons_for(name), c)
         sub = grid[union]
     n_wl = len(sub)
+
+    if objective == "pareto":
+        metrics = _check_pareto_metrics(engine, pareto_metrics)
+        if n_wl == 0:
+            return {name: _pareto_result(sub, 0, wls[name], cons_for(name),
+                                         c, metrics, len(grid), 0, t0)
+                    for name in names}
+        from repro.kernels.ops import dse_pareto_multi
+        per_wl = dse_pareto_multi(sub, [wls[n] for n in names],
+                                  [cons_for(n) for n in names], c, interpret,
+                                  objectives=metrics)
+        wall = time.perf_counter() - t0
+        out = {}
+        for name, (cand_idx, nf) in zip(names, per_wl):
+            r = _pareto_result(sub[cand_idx], nf, wls[name], cons_for(name),
+                               c, metrics, len(grid), n_wl, t0)
+            r.wall_time_s = wall
+            out[name] = r
+        return out
+
+    from repro.kernels.ops import dse_search_multi
     if n_wl == 0:
         wall = time.perf_counter() - t0
         return {name: _make_result(None, 0, wls[name], c, len(grid), 0, wall)

@@ -58,3 +58,29 @@ def significant_params(scores: Dict[str, SignificanceScore],
     ranked = sorted(scores, key=lambda n: -(scores[n].s_area
                                             + scores[n].s_power))
     return tuple(ranked[:top_k])
+
+
+def refinement_sets(scores: Dict[str, SignificanceScore],
+                    front_rows: np.ndarray, n_z: int, top_k: int = 2,
+                    radius: int = 1) -> Dict[str, list]:
+    """Per-parameter candidate sets for a second, finer pass around a coarse
+    frontier (the Alg. 1 -> Alg. 2 coupling applied to frontier search).
+
+    The top-k significant parameters get a dense +/-`radius` neighborhood of
+    every value the coarse frontier visits (clipped to 1..n_z); the
+    non-significant parameters keep exactly their frontier values — their
+    coarse progressive step already captured their (weak) impact, so
+    re-gridding them would only inflate the fine pass. Vectorized over the
+    frontier rows; `front_rows` columns follow PTAConfig order.
+    """
+    fine = set(significant_params(scores, top_k=top_k))
+    front = np.asarray(front_rows).reshape(-1, len(PARAM_NAMES))
+    offsets = np.arange(-radius, radius + 1)
+    sets: Dict[str, list] = {}
+    for j, name in enumerate(PARAM_NAMES):
+        vals = np.unique(front[:, j])
+        if name in fine:
+            vals = np.unique(np.clip(vals[:, None] + offsets[None, :],
+                                     1, n_z))
+        sets[name] = [int(v) for v in vals]
+    return sets

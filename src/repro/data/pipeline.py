@@ -10,10 +10,9 @@ for elastic restarts: the step index is part of the checkpoint manifest).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig

@@ -38,6 +38,18 @@ BLOCK = 2048  # configs per grid step (16 sublane rows x 128 lanes)
 # Per-workload rows in the fused-search reduction output.
 SEARCH_ROWS = 3  # (best_edp, best_idx, n_feasible)
 
+# Frontier mode: per-block local non-dominated candidate bound. Measured
+# local fronts on the paper workloads' 12^5 grid top out around ~100 per
+# 2048-config block; a block whose local front overflows the bound reports
+# its true count and the host falls back to refining that whole block.
+MAX_FRONT = 128
+PARETO_HEADER = 2  # (local front count, block feasible count)
+PARETO_ROWS = PARETO_HEADER + MAX_FRONT
+
+# Column chunk of the in-kernel pairwise dominance pass ((DOM_CHUNK, BLOCK)
+# comparison tiles instead of one (BLOCK, BLOCK) matrix).
+DOM_CHUNK = 256
+
 
 def _to_i32(x):
     """int32 conversion that keeps static python scalars exact (no float32
@@ -157,6 +169,66 @@ def _dse_search_kernel(workloads, c: DeviceConstants,
             ok.astype(jnp.float32))
 
 
+def _block_front(objs, ok):
+    """(BLOCK,) mask of block-locally non-dominated feasible configs.
+
+    objs: tuple of (BLOCK,) objective vectors (minimized); ok: feasibility.
+    Infeasible rows get +inf objectives, so they never dominate (inf <= x is
+    false) and are excluded from the front by the `ok &`. Exact ties are
+    kept (dominance needs a strict < somewhere). The pairwise pass runs in
+    (DOM_CHUNK, BLOCK) column chunks, a static unroll.
+    """
+    o = [jnp.where(ok, x, jnp.inf) for x in objs]
+    n = o[0].shape[0]
+    dominated = jnp.zeros(n, dtype=bool)
+    for s in range(0, n, DOM_CHUNK):
+        le = None
+        lt = None
+        for x in o:
+            xc = x[s:s + DOM_CHUNK]
+            l_ = xc[:, None] <= x[None, :]
+            t_ = xc[:, None] < x[None, :]
+            le = l_ if le is None else (le & l_)
+            lt = t_ if lt is None else (lt | t_)
+        dominated |= jnp.any(le & lt, axis=0)
+    return ok & ~dominated
+
+
+def _dse_pareto_kernel(workloads, objectives, c: DeviceConstants,
+                       cfg_ref, mask_ref, cons_ref, out_ref):
+    """Per-block dominance reduction over one (5, BLOCK) config tile.
+
+    Emits PARETO_ROWS rows per workload: the block's local-front size, its
+    feasible count, then up to MAX_FRONT global config indices of the local
+    non-dominated set (-1 padding). Local fronts are a superset filter —
+    any point dominated inside its block is dominated globally — so the
+    host only merges the per-block candidate lists; the (4, G) metrics
+    array never leaves the device.
+    """
+    cols = _cfg_cols(cfg_ref)
+    valid = mask_ref[0, :] > 0.0
+    base = (pl.program_id(0) * BLOCK).astype(jnp.float32)
+    local = jax.lax.iota(jnp.float32, cols[0].shape[0])
+    n = cols[0].shape[0]
+    for w, (gemms, wl_scalars) in enumerate(workloads):
+        area, power, energy, latency = _config_metrics(
+            gemms, wl_scalars, c, *cols)
+        ok = (valid
+              & (area < cons_ref[w, 0]) & (power < cons_ref[w, 1])
+              & (energy < cons_ref[w, 2]) & (latency < cons_ref[w, 3]))
+        vals = {"area": area, "power": power, "energy": energy,
+                "latency": latency, "edp": energy * latency}
+        front = _block_front(tuple(vals[k] for k in objectives), ok)
+        # Compact the front's local indices to the row prefix via sort
+        # (non-members key to n, sorting after every member).
+        key = jnp.sort(jnp.where(front, local, float(n)))[:MAX_FRONT]
+        gidx = jnp.where(key < n, base + key, -1.0)
+        r0 = PARETO_ROWS * w
+        out_ref[r0 + 0, 0] = jnp.sum(front.astype(jnp.float32))
+        out_ref[r0 + 1, 0] = jnp.sum(ok.astype(jnp.float32))
+        out_ref[r0 + PARETO_HEADER:r0 + PARETO_ROWS, 0] = gidx
+
+
 def _pad_cols(cfg_cols, mask=None):
     """(5, G) -> ((5, G_pad), (1, G_pad) validity mask) with G_pad % BLOCK == 0.
 
@@ -228,6 +300,44 @@ def dse_search_padded(cfg_cols, mask, cons, *, workloads: tuple,
                   pl.BlockSpec((w, 4), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((SEARCH_ROWS * w, 1), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((SEARCH_ROWS * w, n_blocks),
+                                       jnp.float32),
+        interpret=interpret,
+    )(cfg_cols, mask, cons)
+
+
+@functools.partial(jax.jit, static_argnames=("workloads", "objectives",
+                                             "constants", "interpret"))
+def dse_pareto_padded(cfg_cols, mask, cons, *, workloads: tuple,
+                      objectives: tuple, constants: DeviceConstants,
+                      interpret: bool = True):
+    """Fused frontier-candidate search over a (5, G) config grid, any G.
+
+    Same operand contract as `dse_search_padded` (dynamic (W, 4) constraint
+    rows, (1, G) validity mask, static workload tuple), plus a static
+    `objectives` tuple naming the minimized metrics (any subset of area /
+    power / energy / latency / edp). Each block reduces to its local
+    non-dominated feasible candidate set.
+
+    Returns (PARETO_ROWS * W, n_blocks) float32: per workload w, row
+    [r0 + 0] the block's true local-front size (> MAX_FRONT signals the
+    emitted index list was truncated), [r0 + 1] the block feasible count,
+    rows [r0 + 2 .. r0 + 2 + MAX_FRONT) global config indices of local
+    non-dominated configs, -1-padded, with r0 = PARETO_ROWS * w. Config
+    indices are exact for G < 2**24 (float32 mantissa).
+    """
+    cfg_cols, mask = _pad_cols(cfg_cols, mask)
+    n_blocks = cfg_cols.shape[1] // BLOCK
+    w = len(workloads)
+    kernel = functools.partial(_dse_pareto_kernel, workloads, objectives,
+                               constants)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((5, BLOCK), lambda i: (0, i)),
+                  pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+                  pl.BlockSpec((w, 4), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((PARETO_ROWS * w, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((PARETO_ROWS * w, n_blocks),
                                        jnp.float32),
         interpret=interpret,
     )(cfg_cols, mask, cons)

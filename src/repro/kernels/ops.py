@@ -28,7 +28,7 @@ from repro.core.workload import Workload
 
 from . import ddot_gemm as _ddot
 from . import dse_eval as _dse
-from .ref import QMAX, quantize4
+from .ref import quantize4
 
 
 def _pad_to(x, m0, m1):
@@ -174,6 +174,49 @@ def dse_search_multi(grid: np.ndarray, wls, constraints_seq,
         jb = np.lexsort((idx_b, edp_b))[0]
         best_idx.append(int(idx_b[jb]))
     return best_idx, n_feasible
+
+
+def dse_pareto_multi(grid: np.ndarray, wls, constraints_seq,
+                     c: DeviceConstants = CONSTANTS, interpret: bool = True,
+                     objectives: tuple = ("area", "power", "edp")):
+    """Batched frontier-candidate search: W workloads x one grid, one launch.
+
+    The kernel reduces every block to its local non-dominated feasible set
+    (bounded by MAX_FRONT indices per block); this wrapper only merges the
+    per-block candidate lists. A block whose local front overflowed the
+    bound reports its true count, and all of that block's rows join the
+    candidate set instead — so the static bound itself never drops a
+    frontier point; the caller's exact (float64) refinement restores the
+    true frontier of the candidates.
+
+    Returns a list of (candidate_indices, n_feasible) per workload;
+    `candidate_indices` is a sorted int64 array of grid rows covering the
+    workload's feasible frontier as measured by the kernel's float32
+    metrics. As with the EDP engines (see core.search.search), a config
+    whose metric sits within one float32 ulp of a dominator's can classify
+    differently than under float64 — real design points never ride that
+    edge.
+    """
+    cols, mask = _bucketed_cols(grid)
+    workloads = tuple(workload_statics(wl, c) for wl in wls)
+    cons = _constraint_rows(constraints_seq)
+    out = np.asarray(_dse.dse_pareto_padded(
+        cols, mask, cons, workloads=workloads, objectives=tuple(objectives),
+        constants=c, interpret=interpret))
+    results = []
+    for w in range(len(workloads)):
+        rows = out[_dse.PARETO_ROWS * w:_dse.PARETO_ROWS * (w + 1)]
+        counts, nfeas_b = rows[0], rows[1]
+        idx = rows[_dse.PARETO_HEADER:]
+        cand = idx[idx >= 0].astype(np.int64)
+        overflowed = np.nonzero(counts > _dse.MAX_FRONT)[0]
+        for b in overflowed:
+            lo = int(b) * _dse.BLOCK
+            cand = np.concatenate(
+                [cand, np.arange(lo, min(lo + _dse.BLOCK, len(grid)))])
+        results.append((np.unique(cand),
+                        int(round(float(nfeas_b.sum())))))
+    return results
 
 
 def pallas_grid_search(grid: np.ndarray, wl: Workload, constraints,

@@ -23,7 +23,7 @@ import json
 import time
 import traceback
 from functools import partial
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -32,11 +32,10 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 import repro.models as models
-from repro.analysis.hlo import (collective_bytes, collective_bytes_scaled,
-                                collective_counts)
+from repro.analysis.hlo import collective_bytes_scaled, collective_counts
 from repro.analysis.jaxpr_cost import trace_flops
 from repro.analysis.roofline import Roofline, model_flops
-from repro.configs import SHAPES_BY_NAME, get_config, list_archs, reduced
+from repro.configs import SHAPES_BY_NAME, get_config, list_archs
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.mesh import make_production_mesh
 from repro.optim import adamw
@@ -143,7 +142,8 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
         return fn, (params, opt, batch)
 
     if shape.kind == "prefill":
-        fn = lambda p, b: models.prefill(p, cfg, b, rules=rules)
+        def fn(p, b):
+            return models.prefill(p, cfg, b, rules=rules)
         return fn, (params, batch)
 
     # decode
@@ -154,8 +154,8 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
     cache = _sds(cache_shapes, cspecs, mesh)
     pos = jax.ShapeDtypeStruct((), jnp.int32,
                                sharding=NamedSharding(mesh, P()))
-    fn = lambda p, t, pos_, c: models.decode_step(p, cfg, t, pos_, c,
-                                                  rules=rules)
+    def fn(p, t, pos_, c):
+        return models.decode_step(p, cfg, t, pos_, c, rules=rules)
     return fn, (params, batch["tokens"], pos, cache)
 
 
@@ -221,8 +221,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def _bytes_of(tree) -> float:
-    return float(sum(np.prod(l.shape) * l.dtype.itemsize
-                     for l in jax.tree.leaves(tree)))
+    return float(sum(np.prod(leaf.shape) * leaf.dtype.itemsize
+                     for leaf in jax.tree.leaves(tree)))
 
 
 def _state_traffic_bytes(cfg, shape, args, fn) -> float:

@@ -15,7 +15,6 @@ Cache layouts are stacked over layers so decode is also a layer scan.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional
 
 import jax
@@ -28,10 +27,9 @@ from . import mla as mla_mod
 from . import moe as moe_mod
 from . import rwkv as rwkv_mod
 from . import ssd as ssd_mod
-from .layers import (DTYPE, apply_attention, apply_mlp, attention_specs,
-                     embed, init_attention, init_embedding, init_mlp,
-                     init_rmsnorm, mlp_specs, project_kv, rms_norm,
-                     softmax_xent, unembed)
+from .layers import (DTYPE, apply_attention, apply_mlp, embed,
+                     init_attention, init_embedding, init_mlp, init_rmsnorm,
+                     project_kv, rms_norm, softmax_xent, unembed)
 
 
 # --------------------------------------------------------------------------

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.parallel.sharding import NULL_RULES, shard
 
-from .layers import DTYPE, _normal, attn_mask, einsum32, init_rmsnorm, matmul32, rms_norm, rope
+from .layers import _normal, attn_mask, einsum32, init_rmsnorm, matmul32, rms_norm, rope
 
 
 def init_mla(key, cfg):

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.parallel.sharding import NULL_RULES, shard
 
-from .layers import DTYPE, _normal, apply_mlp, dense, einsum32, init_mlp, mlp_specs
+from .layers import DTYPE, _normal, apply_mlp, einsum32, init_mlp, mlp_specs
 
 
 def _round_up(x, m):

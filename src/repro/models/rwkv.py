@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.parallel.sharding import NULL_RULES, shard
 
-from .layers import DTYPE, _normal, init_rmsnorm, matmul32, rms_norm
+from .layers import _normal, init_rmsnorm, matmul32, rms_norm
 
 WKV_MODE = "scan"  # module default; overridden per-call
 _LOG_W_MIN = -8.0  # chunked-mode decay clamp (exp(-8)/token floor)

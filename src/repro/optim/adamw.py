@@ -48,7 +48,8 @@ def schedule(cfg: AdamWConfig, step):
 
 
 def init(cfg: AdamWConfig, params) -> OptState:
-    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, cfg.moment_dtype)
     return OptState(step=jnp.zeros((), jnp.int32),
                     mu=jax.tree.map(zeros, params),
                     nu=jax.tree.map(zeros, params))

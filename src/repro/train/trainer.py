@@ -12,7 +12,6 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 import repro.models as models
 from repro.checkpoint.checkpointing import CheckpointManager

@@ -187,3 +187,29 @@ def test_dse_search_multi_single_launch_matches_per_workload():
     best, nf = dse_search_multi(grid, wls, cons)
     for w, (wl, cc) in enumerate(zip(wls, cons)):
         assert (best[w], nf[w]) == dse_search_ref(grid, wl, cc)
+
+
+@pytest.mark.parametrize("gsize", [40, 2048, 5000])
+def test_dse_pareto_kernel_candidates_cover_frontier(gsize):
+    # The kernel's per-block reduction must return a candidate superset of
+    # the true frontier (and the exact feasible count); refining the
+    # candidates through the float64 oracle reproduces the frontier.
+    from repro.core.pareto import pareto_mask
+    from repro.core.search import evaluate_grid
+    from repro.kernels import dse_pareto_multi, dse_pareto_ref
+
+    wl = load("deit-t")
+    cons = Constraints()
+    grid = np.random.default_rng(gsize).integers(1, 13, size=(gsize, 5))
+    (cand, nf), = dse_pareto_multi(grid, [wl], [cons])
+    front_ref, nf_ref = dse_pareto_ref(grid, wl, cons)
+    assert nf == nf_ref
+    rows = np.asarray(grid)[cand]
+    m = evaluate_grid(rows, wl, xp=np)
+    ok = np.asarray(cons.satisfied(m["area"], m["power"], m["energy"],
+                                   m["latency"]))
+    pts = np.stack([np.asarray(m[k], np.float64)[ok]
+                    for k in ("area", "power", "edp")], axis=1)
+    refined = rows[ok][pareto_mask(pts)]
+    refined = refined[np.lexsort(refined.T[::-1])]
+    assert np.array_equal(refined, front_ref)
