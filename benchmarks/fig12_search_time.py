@@ -89,6 +89,20 @@ def run():
         bench["speedups"][f"fused_{name}_vs_legacy"] = speedup
         bench["agreement"][f"fused_{name}"] = r.best_cfg == ex.best_cfg
 
+    # --- sharded + streamed: chunk-carried kernel launches, shard_map fan-
+    # out over the candidate mesh (see benchmarks/sharded_dse.py for the
+    # full matrix; this row keeps the headline combo in the DSE record) ---
+    r_s, us_s = timed(lambda: search(wl, cons, engine="pallas", grid=grid,
+                                     hierarchical=True, shard=4,
+                                     chunk_size=65536), repeats=3)
+    rows.append(row("fig12/fused_pallas_streamed[beyond-paper]", us_s,
+                    f"shard=4 chunk=65536, {us_legacy / us_s:.1f}x vs "
+                    f"legacy pallas; same best: "
+                    f"{r_s.best_cfg == ex.best_cfg}"))
+    bench["engines_us"]["fused_pallas_streamed"] = us_s
+    bench["speedups"]["fused_pallas_streamed_vs_legacy"] = us_legacy / us_s
+    bench["agreement"]["fused_pallas_streamed"] = r_s.best_cfg == ex.best_cfg
+
     # --- batched: all five paper workloads, one grid, one fused launch ---
     wls = {name: f() for name, f in PAPER_WORKLOADS.items()}
     batch, us_batch = timed(lambda: search_workloads(

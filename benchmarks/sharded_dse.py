@@ -1,0 +1,116 @@
+"""Beyond-paper benchmark: the sharded + streamed DSE layer.
+
+Times `search(..., shard=, chunk_size=)` on the full 12^5 grid against the
+one-shot fused engines, for both objectives: pallas chunk-streamed (running
+argmin / carried-front kernel operands), pallas and jax shard_map fan-out
+over the candidate mesh, and the combination. Every streamed/sharded result
+is checked identical to its one-shot baseline.
+
+On a 1-device CPU box the shard paths run on a 1-shard mesh (pure overhead
+measurement); under `XLA_FLAGS=--xla_force_host_platform_device_count=4` or
+on real multi-device hardware the same keys measure the actual fan-out —
+`device_count` in the record says which one you are looking at.
+
+Results land in BENCH_shard.json at the repo root. Set SHARD_SMOKE=1 (or
+pass --smoke) for the CI-sized run, which writes BENCH_shard.smoke.json so
+the committed full-run record is never clobbered — the CI benchmark gate
+diffs the two, normalized by the `fused_numpy` reference timing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import Constraints, config_grid, search
+from repro.core.paper_workloads import load
+
+from .common import row, timed
+
+_BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_shard.json"
+
+CHUNK = 65536
+SHARD = 4
+
+
+def run():
+    import jax
+    smoke = bool(int(os.environ.get("SHARD_SMOKE", "0")))
+    # Unlike the multi-minute fig12/pareto sweeps, every case here is fast;
+    # keep repeats=3 in smoke mode too — the gated timings are tens of ms,
+    # where a single interpret-mode sample is too noisy to gate on.
+    repeats = 3
+    wl = load("deit-b")
+    cons = Constraints()
+    inc = list(range(1, 13))
+    grid = config_grid(inc, inc, inc, inc, inc)
+    rows = []
+    bench = {"grid_size": len(grid), "workload": "deit-b", "smoke": smoke,
+             "device_count": len(jax.devices()), "chunk_size": CHUNK,
+             "shard": SHARD, "engines_us": {}, "agreement": {}}
+
+    def record(name, fn, same):
+        r, us = timed(fn, repeats=repeats)
+        agree = same(r)
+        bench["engines_us"][name] = us
+        bench["agreement"][name] = agree
+        rows.append(row(f"shard/{name}[beyond-paper]", us,
+                        f"identical result: {agree}"))
+        return r
+
+    # Machine-speed reference for the CI gate (never gated itself).
+    ref, us_ref = timed(lambda: search(wl, cons, engine="numpy", grid=grid),
+                        repeats=repeats)
+    bench["engines_us"]["fused_numpy"] = us_ref
+    rows.append(row("shard/fused_numpy_reference", us_ref,
+                    f"one-shot float64 sweep of {len(grid)} cfgs"))
+
+    base = search(wl, cons, engine="pallas", grid=grid, hierarchical=True)
+    pref = search(wl, cons, engine="pallas", grid=grid, hierarchical=True,
+                  objective="pareto")
+
+    def same_edp(r):
+        return r.best_cfg == base.best_cfg and r.edp == base.edp \
+            and r.n_feasible == base.n_feasible
+
+    def same_front(r):
+        return bool(np.array_equal(r.front, pref.front)) \
+            and r.n_feasible == pref.n_feasible
+
+    cases = [
+        ("fused_pallas_oneshot", dict(engine="pallas"), same_edp, "edp"),
+        ("fused_pallas_chunked", dict(engine="pallas", chunk_size=CHUNK),
+         same_edp, "edp"),
+        ("fused_pallas_shard4", dict(engine="pallas", shard=SHARD),
+         same_edp, "edp"),
+        ("fused_pallas_shard4_chunked",
+         dict(engine="pallas", shard=SHARD, chunk_size=CHUNK), same_edp,
+         "edp"),
+        ("fused_jax_shard4", dict(engine="jax", shard=SHARD), same_edp,
+         "edp"),
+        ("pareto_pallas_chunked", dict(engine="pallas", chunk_size=CHUNK),
+         same_front, "pareto"),
+        ("pareto_jax_shard4", dict(engine="jax", shard=SHARD), same_front,
+         "pareto"),
+    ]
+    for name, kw, same, objective in cases:
+        record(name, lambda kw=kw, objective=objective: search(
+            wl, cons, grid=grid, hierarchical=True, objective=objective,
+            **kw), same)
+
+    bench["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    out_path = _BENCH_JSON.with_suffix(".smoke.json") if smoke \
+        else _BENCH_JSON  # never clobber the committed full-run record
+    out_path.write_text(json.dumps(bench, indent=2, default=str) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    if "--smoke" in sys.argv:
+        os.environ["SHARD_SMOKE"] = "1"
+    for r in run():
+        print(",".join(str(x) for x in r))

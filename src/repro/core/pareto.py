@@ -76,6 +76,29 @@ def dominates(p: np.ndarray, q: np.ndarray) -> bool:
     return bool(np.all(p <= q) and np.any(p < q))
 
 
+def merge_fronts(pts_a: np.ndarray, pts_b: np.ndarray) -> np.ndarray:
+    """Cross-chunk/shard frontier reduction: the non-dominated merge.
+
+    Boolean mask over `np.vstack([pts_a, pts_b])` of the points surviving
+    the merge (exact ties kept, as everywhere in this module). This is the
+    reduction the streamed search layer folds over grid chunks/shards:
+    because dominance is transitive and a dominated point stays dominated
+    in every superset, folding `merge_fronts` over locally-reduced chunk
+    frontiers — in any partition, any order — lands on exactly
+    `pareto_mask` of the one-shot point set, which is what makes
+    `search(..., chunk_size=..., shard=...)` byte-identical to the
+    unstreamed sweep (property-tested in tests/test_sharded_search.py).
+    """
+    d = 0
+    for p in (pts_a, pts_b):
+        p = np.asarray(p)
+        if p.size:
+            d = p.shape[-1]
+    pts_a = np.asarray(pts_a, np.float64).reshape(-1, d)
+    pts_b = np.asarray(pts_b, np.float64).reshape(-1, d)
+    return pareto_mask(np.vstack([pts_a, pts_b]))
+
+
 def pareto_front(grid: np.ndarray, wl: Workload,
                  metrics: Sequence[str] = DEFAULT_OBJECTIVES,
                  constraints: Optional[Constraints] = None, *,

@@ -44,6 +44,15 @@ their own way (sequential incremental front, exact float64 mask, jit
 sort-and-scan, per-block dominance reduction in the fused kernel) and every
 proposal is refined through the float64 reference model, so identical
 frontiers come back byte-identical; see PARETO_ENGINES below.
+
+Scaling past one device / one resident grid, both entry points take
+`shard=` (shard_map fan-out over a 1-D candidate-axis mesh) and
+`chunk_size=` (host-side streaming of grid chunks, with a running argmin /
+bounded running frontier carried across chunks — and, on pallas, *into* the
+kernels, whose launches compose through carry operands). Every
+(shard, chunk_size) setting is byte-identical to the one-shot sweep on
+every engine and objective; tests/test_sharded_search.py is the
+differential harness that pins that down.
 """
 from __future__ import annotations
 
@@ -399,9 +408,12 @@ def _numpy_engine(grid, wl, constraints, c, hierarchical, interpret):
 
 @functools.lru_cache(maxsize=128)
 def _jax_search_fn(gemms, wl_scalars, c: DeviceConstants):
-    """Jit-cached fused (argmin_idx, n_feasible) for one workload. The
-    constraint vector is a dynamic operand, so scenario sweeps reuse the
-    cache entry; only a pair of scalars leaves the device."""
+    """Jit-cached fused (argmin_idx, its EDP, n_feasible) for one workload.
+    The constraint vector and the validity mask (padding rows of a sharded
+    launch) are dynamic operands, so scenario sweeps reuse the cache entry;
+    only three scalars leave the device. The returned EDP is the engine's
+    own float32 value — the cross-chunk running argmin compares natively,
+    so streaming composes bit-exactly with the one-shot sweep."""
     import jax
     import jax.numpy as jnp
 
@@ -409,19 +421,27 @@ def _jax_search_fn(gemms, wl_scalars, c: DeviceConstants):
     # must reach gemm_cycles' exact int32 ceil-division undamaged.
     gemm_arr = jnp.asarray(np.asarray(gemms, np.int64))
 
-    def fn(cols, cons):
+    def fn(cols, valid, cons):
         n_t, n_c, n_h, n_v, n_l = (cols[i] for i in range(5))
         energy, latency, _ = eval_wload_arrays(
             n_t, n_c, n_h, n_v, n_l, gemm_arr, *wl_scalars[:3],
             wl_scalars[3], c, xp=jnp)
         area, power = eval_hw(n_t, n_c, n_h, n_v, n_l, wl_scalars[3], c,
                               xp=jnp)
-        ok = ((area < cons[0]) & (power < cons[1])
+        ok = (valid & (area < cons[0]) & (power < cons[1])
               & (energy < cons[2]) & (latency < cons[3]))
         edp = jnp.where(ok, energy * latency, jnp.inf)
-        return jnp.argmin(edp), jnp.sum(ok)
+        i = jnp.argmin(edp)
+        return i, edp[i], jnp.sum(ok)
 
     return jax.jit(fn)
+
+
+def _constraint_vec(constraints):
+    import jax.numpy as jnp
+    return jnp.asarray([constraints.area_mm2, constraints.power_w,
+                        constraints.energy_j, constraints.latency_s],
+                       jnp.float32)
 
 
 def _jax_engine(grid, wl, constraints, c, hierarchical, interpret):
@@ -433,10 +453,8 @@ def _jax_engine(grid, wl, constraints, c, hierarchical, interpret):
                             time.perf_counter() - t0)
     gemms, scalars = workload_statics(wl, c)
     fn = _jax_search_fn(gemms, scalars, c)
-    cons = jnp.asarray([constraints.area_mm2, constraints.power_w,
-                        constraints.energy_j, constraints.latency_s],
-                       jnp.float32)
-    i, nf = fn(jnp.asarray(sub.T, jnp.float32), cons)
+    i, _, nf = fn(jnp.asarray(sub.T, jnp.float32),
+                  jnp.ones(len(sub), bool), _constraint_vec(constraints))
     i, nf = int(i), int(nf)
     row = sub[i] if nf > 0 else None
     return _make_result(row, nf, wl, c, len(grid), n_wl,
@@ -450,7 +468,7 @@ def _pallas_engine(grid, wl, constraints, c, hierarchical, interpret):
     if len(sub) == 0:
         return _make_result(None, 0, wl, c, len(grid), 0,
                             time.perf_counter() - t0)
-    i, nf = dse_search_grid(sub, wl, constraints, c, interpret)
+    i, _, nf = dse_search_grid(sub, wl, constraints, c, interpret)
     row = sub[i] if i >= 0 else None
     return _make_result(row, nf, wl, c, len(grid), n_wl,
                         time.perf_counter() - t0)
@@ -657,19 +675,12 @@ def _pareto_jax(grid, wl, constraints, c, hierarchical, interpret,
     if len(sub) == 0:
         return _pareto_result(sub, 0, wl, constraints, c, objectives,
                               len(grid), 0, t0)
-    g = len(sub)
-    pad = (-g) % JAX_PARETO_CHUNK
-    cols = np.ones((5, g + pad), np.float32)
-    cols[:, :g] = sub.T
-    valid = np.zeros(g + pad, bool)
-    valid[:g] = True
+    cols, valid = _padded_candidate_cols(sub, JAX_PARETO_CHUNK)
     gemms, scalars = workload_statics(wl, c)
     fn = _jax_pareto_fn(gemms, scalars, c, objectives)
-    cons = jnp.asarray([constraints.area_mm2, constraints.power_w,
-                        constraints.energy_j, constraints.latency_s],
-                       jnp.float32)
-    mask, nf = fn(jnp.asarray(cols), jnp.asarray(valid), cons)
-    cand = sub[np.asarray(mask)[:g]]
+    mask, nf = fn(jnp.asarray(cols), jnp.asarray(valid),
+                  _constraint_vec(constraints))
+    cand = sub[np.asarray(mask)[:len(sub)]]
     return _pareto_result(cand, int(nf), wl, constraints, c, objectives,
                           len(grid), n_wl, t0)
 
@@ -692,6 +703,379 @@ PARETO_ENGINES = {"python": _pareto_python, "numpy": _pareto_numpy,
                   "jax": _pareto_jax, "pallas": _pareto_pallas}
 
 
+# ---------------------------------------------------------------------------
+# Sharded + streamed evaluation layer (shard= / chunk_size=)
+#
+# `chunk_size=` streams the candidate grid through the engines in host-side
+# chunks, carrying a running argmin (EDP mode) or a bounded running frontier
+# (pareto mode) across chunks — no full (G, 5) grid or (4, G) metrics array
+# ever has to be resident at once. `shard=` fans each chunk's evaluation out
+# over a 1-D candidate-axis device mesh with shard_map (jax/pallas engines;
+# the host engines split the chunk the same way so every backend exercises
+# the identical reduction). Both knobs are exact: any (shard, chunk_size)
+# setting returns byte-identical results to the one-shot sweep, which
+# tests/test_sharded_search.py enforces per engine x objective.
+# ---------------------------------------------------------------------------
+
+def _iter_chunks(grid, chunk_size: int):
+    for s in range(0, len(grid), chunk_size):
+        yield grid[s:s + chunk_size]
+
+
+def _host_shards(chunk, shard):
+    """Contiguous split of a chunk for the host (python/numpy) engines —
+    the simulated analogue of the device fan-out, so the cross-shard
+    reduction path is identical on every backend."""
+    if not shard or int(shard) <= 1 or len(chunk) == 0:
+        return [chunk]
+    return np.array_split(chunk, min(int(shard), len(chunk)))
+
+
+def merge_running_best(carry, candidate):
+    """Cross-chunk/shard running-argmin reduction over (row, edp) pairs.
+
+    Strict-< replacement: exact EDP ties keep the incumbent, which arrived
+    from an earlier chunk/shard and therefore has the lower global grid
+    index — composing this merge over any partition of the grid reproduces
+    the one-shot engines' first-hit argmin rule exactly.
+    """
+    row, edp = candidate
+    if row is not None and edp < carry[1]:
+        return (row, edp)
+    return carry
+
+
+def _edp_chunk_python(chunk, wl, constraints, c, hierarchical, interpret,
+                      shard):
+    best = (None, float("inf"))
+    nf = n_wl = 0
+    for part in _host_shards(chunk, shard):
+        r = _sequential_search(part, wl, constraints, prune=hierarchical,
+                               collect=False, c=c, edp_init=float("inf"))
+        nf += r.n_feasible
+        n_wl += r.n_workload_evals
+        row = None if r.best_cfg is None else r.best_cfg.as_array()
+        best = merge_running_best(best, (row, r.edp))
+    return best[0], best[1], nf, n_wl
+
+
+def _edp_chunk_numpy(chunk, wl, constraints, c, hierarchical, interpret,
+                     shard):
+    best = (None, float("inf"))
+    nf = n_wl = 0
+    for part in _host_shards(chunk, shard):
+        sub, nw = _prefiltered(part, wl, constraints, c, hierarchical)
+        n_wl += nw
+        if len(sub) == 0:
+            continue
+        m = evaluate_grid(sub, wl, c, np)
+        ok = np.asarray(constraints.satisfied(m["area"], m["power"],
+                                              m["energy"], m["latency"]))
+        nf += int(ok.sum())
+        if not ok.any():
+            continue
+        edp = np.where(ok, np.asarray(m["edp"]), np.inf)
+        i = int(np.argmin(edp))
+        best = merge_running_best(best, (sub[i], float(edp[i])))
+    return best[0], best[1], nf, n_wl
+
+
+def _padded_candidate_cols(sub, multiple: int):
+    """((5, n_pad) float32 cols, (n_pad,) bool valid mask) with the
+    candidate axis padded to a `multiple` multiple — all-ones padding
+    configs (valid model inputs, no div-by-zero), masked invalid. The
+    single source of padding semantics for the jax shard/stream paths."""
+    n = len(sub)
+    pad = (-n) % multiple
+    cols = np.ones((5, n + pad), np.float32)
+    cols[:, :n] = sub.T
+    valid = np.zeros(n + pad, bool)
+    valid[:n] = True
+    return cols, valid
+
+
+def _assert_candidate_spec(shape, k: int):
+    """The candidate axis is padded to a k-multiple before every shard_map
+    launch, so the spec can never degrade; assert rather than carry an
+    untestable replicated-fallback path."""
+    from repro.parallel.sharding import (CANDIDATE_AXIS, candidate_spec,
+                                         sanitize_spec)
+    spec = candidate_spec(2, 1)
+    assert sanitize_spec(shape, spec, {CANDIDATE_AXIS: k}) == spec
+
+
+@functools.lru_cache(maxsize=64)
+def _jax_sharded_fn(fn, k: int, mode: str):
+    """Jit-cached shard_map wrapper of a fused jax sweep over a k-shard
+    candidate mesh. mode "argmin": each shard returns its (argmin, EDP,
+    feasible count); mode "mask": its (candidate mask, feasible count).
+    Keyed on the inner jitted fn (itself lru-cached, so identity is
+    stable) + mesh size — streamed chunk launches reuse one executable."""
+    import jax
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_candidate_mesh
+    from repro.parallel.sharding import candidate_spec
+
+    mesh = make_candidate_mesh(k)
+    spec2, spec1 = candidate_spec(2, 1), candidate_spec(1, 0)
+
+    if mode == "argmin":
+        def body(cols_l, valid_l, cons):
+            i, e, f = fn(cols_l, valid_l, cons)
+            return i[None], e[None], f[None]
+        out_specs = (spec1, spec1, spec1)
+    else:
+        def body(cols_l, valid_l, cons):
+            mask, f = fn(cols_l, valid_l, cons)
+            return mask, f[None]
+        out_specs = (spec1, spec1)
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(spec2, spec1, P(None)),
+                             out_specs=out_specs, check_rep=False))
+
+
+def _jax_sharded_argmin(fn, sub, cons_vec, shard):
+    """shard_map fan-out of the fused jax argmin over the candidate mesh.
+
+    Each shard reduces its slice to (local argmin, its EDP, feasible
+    count); the host picks the min-EDP shard (earliest shard on exact ties
+    — shards are contiguous grid slices, so that is the global first-hit).
+    Returns (global_idx or -1, edp, n_feasible).
+    """
+    from repro.launch.mesh import make_candidate_mesh
+
+    k = make_candidate_mesh(shard).devices.size
+    cols, valid = _padded_candidate_cols(sub, k)
+    _assert_candidate_spec(cols.shape, k)
+    f = _jax_sharded_fn(fn, k, "argmin")
+    i_s, e_s, f_s = (np.asarray(x) for x in f(cols, valid, cons_vec))
+    nf = int(f_s.sum())
+    if nf == 0:
+        return -1, float("inf"), 0
+    s = int(np.lexsort((np.arange(k), e_s))[0])
+    return s * (cols.shape[1] // k) + int(i_s[s]), float(e_s[s]), nf
+
+
+def _edp_chunk_jax(chunk, wl, constraints, c, hierarchical, interpret,
+                   shard):
+    import jax.numpy as jnp
+    sub, n_wl = _prefiltered(chunk, wl, constraints, c, hierarchical)
+    if len(sub) == 0:
+        return None, float("inf"), 0, n_wl
+    gemms, scalars = workload_statics(wl, c)
+    fn = _jax_search_fn(gemms, scalars, c)
+    cons_vec = _constraint_vec(constraints)
+    if shard is not None and int(shard) > 1:
+        i, e, nf = _jax_sharded_argmin(fn, sub, cons_vec, shard)
+        return (sub[i] if i >= 0 else None), e, nf, n_wl
+    i, e, nf = fn(jnp.asarray(sub.T, jnp.float32), jnp.ones(len(sub), bool),
+                  cons_vec)
+    nf = int(nf)
+    if nf == 0:
+        return None, float("inf"), 0, n_wl
+    return sub[int(i)], float(e), nf, n_wl
+
+
+def _edp_chunk_pallas(chunk, wl, constraints, c, hierarchical, interpret,
+                      shard, carry_edp):
+    from repro.kernels.ops import dse_search_grid
+    sub, n_wl = _prefiltered(chunk, wl, constraints, c, hierarchical)
+    if len(sub) == 0:
+        return None, float("inf"), 0, n_wl
+    i, e, nf = dse_search_grid(sub, wl, constraints, c, interpret,
+                               shard=shard, carry_edp=carry_edp)
+    return (sub[i] if i >= 0 else None), e, nf, n_wl
+
+
+EDP_CHUNK_ENGINES = {"python": _edp_chunk_python, "numpy": _edp_chunk_numpy,
+                     "jax": _edp_chunk_jax}
+
+
+def _search_streamed(grid, wl, constraints, engine, hierarchical, c,
+                     interpret, shard, chunk_size) -> SearchResult:
+    """Chunked (and optionally sharded) min-EDP driver, any engine."""
+    t0 = time.perf_counter()
+    n = len(grid)
+    cs = int(chunk_size) if chunk_size else max(n, 1)
+    best = (None, float("inf"))
+    nf = n_wl = 0
+    for chunk in _iter_chunks(grid, cs):
+        if engine == "pallas":
+            # The kernel folds the carried best into its own reduction
+            # (carry wins ties), so per-chunk launches compose on-device.
+            carry = best[1] if best[0] is not None else None
+            row, e, cf, cw = _edp_chunk_pallas(chunk, wl, constraints, c,
+                                               hierarchical, interpret,
+                                               shard, carry)
+        else:
+            row, e, cf, cw = EDP_CHUNK_ENGINES[engine](
+                chunk, wl, constraints, c, hierarchical, interpret, shard)
+        nf += cf
+        n_wl += cw
+        best = merge_running_best(best, (row, e))
+    return _make_result(best[0], nf, wl, c, n, n_wl,
+                        time.perf_counter() - t0)
+
+
+def _pareto_chunk_python(chunk, wl, constraints, c, hierarchical, interpret,
+                         shard, objectives):
+    cands = []
+    nf = n_wl = 0
+    for part in _host_shards(chunk, shard):
+        rows, f, nw = _sequential_pareto(part, wl, constraints, hierarchical,
+                                         c, objectives)
+        cands += list(rows)
+        nf += f
+        n_wl += nw
+    return np.asarray(cands, np.int64).reshape(-1, 5), nf, n_wl
+
+
+def _pareto_chunk_numpy(chunk, wl, constraints, c, hierarchical, interpret,
+                        shard, objectives):
+    cands = []
+    nf = n_wl = 0
+    for part in _host_shards(chunk, shard):
+        sub, nw = _prefiltered(part, wl, constraints, c, hierarchical)
+        n_wl += nw
+        if len(sub) == 0:
+            continue
+        m = evaluate_grid(sub, wl, c, np)
+        front, _, f = _pareto_from_rows(sub, wl, constraints, c, objectives,
+                                        m=m)
+        nf += f
+        cands.append(front)
+    if not cands:
+        return np.zeros((0, 5), np.int64), nf, n_wl
+    return np.concatenate(cands, axis=0), nf, n_wl
+
+
+def _jax_sharded_pareto_mask(fn, sub, cons_vec, shard):
+    """shard_map fan-out of the jit frontier-candidate mask: each shard
+    reduces its slice to a shard-local non-dominated mask (a superset of
+    that slice's global-frontier members, so the union stays exact after
+    the float64 refinement). Returns (mask over sub, n_feasible)."""
+    from repro.launch.mesh import make_candidate_mesh
+
+    k = make_candidate_mesh(shard).devices.size
+    cols, valid = _padded_candidate_cols(sub, k * JAX_PARETO_CHUNK)
+    _assert_candidate_spec(cols.shape, k)
+    f = _jax_sharded_fn(fn, k, "mask")
+    mask, f_s = (np.asarray(x) for x in f(cols, valid, cons_vec))
+    return mask[:len(sub)], int(f_s.sum())
+
+
+def _pareto_chunk_jax(chunk, wl, constraints, c, hierarchical, interpret,
+                      shard, objectives):
+    import jax.numpy as jnp
+    sub, n_wl = _prefiltered(chunk, wl, constraints, c, hierarchical)
+    if len(sub) == 0:
+        return np.zeros((0, 5), np.int64), 0, n_wl
+    gemms, scalars = workload_statics(wl, c)
+    fn = _jax_pareto_fn(gemms, scalars, c, objectives)
+    cons_vec = _constraint_vec(constraints)
+    if shard is not None and int(shard) > 1:
+        mask, nf = _jax_sharded_pareto_mask(fn, sub, cons_vec, shard)
+        return sub[mask], nf, n_wl
+    cols, valid = _padded_candidate_cols(sub, JAX_PARETO_CHUNK)
+    mask, nf = fn(jnp.asarray(cols), jnp.asarray(valid), cons_vec)
+    return sub[np.asarray(mask)[:len(sub)]], int(nf), n_wl
+
+
+def _pallas_front_points(rows, wl, c, interpret, objectives):
+    """Objective points of `rows` in the pallas kernel's own float32 metric
+    space (the dse_eval kernel runs the identical `_config_metrics`
+    pipeline), so the carried-front prune compares like with like."""
+    from repro.kernels.ops import dse_eval_grid
+    m = dse_eval_grid(rows, wl, c, interpret).astype(np.float32)
+    vals = {"area": m[:, 0], "power": m[:, 1], "energy": m[:, 2],
+            "latency": m[:, 3], "edp": m[:, 2] * m[:, 3]}
+    return np.stack([vals[k] for k in objectives], axis=1)
+
+
+def _pareto_chunk_pallas(chunk, wl, constraints, c, hierarchical, interpret,
+                         shard, objectives, carry_rows):
+    from repro.kernels.ops import dse_pareto_multi
+    sub, n_wl = _prefiltered(chunk, wl, constraints, c, hierarchical)
+    if len(sub) == 0:
+        return np.zeros((0, 5), np.int64), 0, n_wl
+    carry_points = None
+    if carry_rows is not None and len(carry_rows):
+        carry_points = [_pallas_front_points(carry_rows, wl, c, interpret,
+                                             objectives)]
+    (idx, nf), = dse_pareto_multi(sub, [wl], [constraints], c, interpret,
+                                  objectives=objectives, shard=shard,
+                                  carry_points=carry_points)
+    return sub[idx], nf, n_wl
+
+
+PARETO_CHUNK_ENGINES = {"python": _pareto_chunk_python,
+                        "numpy": _pareto_chunk_numpy,
+                        "jax": _pareto_chunk_jax}
+
+
+def _empty_run_state():
+    return (np.zeros((0, 5), np.int64),
+            {k: np.zeros(0, np.float64) for k in REPORT_METRICS})
+
+
+def _merge_running_front(run_rows, run_met, cand_rows, wl, constraints, c,
+                         objectives):
+    """Fold one chunk/shard's candidate rows into the bounded running
+    frontier: refine the candidates through the float64 reference model,
+    then keep the non-dominated union (`pareto.merge_fronts` — exact ties
+    kept, so duplicate grid rows survive streaming like they survive the
+    one-shot sweep). The carried state stays frontier-sized: a strictly
+    dominated point can never re-enter, so dropping it is exact."""
+    from .pareto import merge_fronts
+    front_c, met_c, _ = _pareto_from_rows(cand_rows, wl, constraints, c,
+                                          objectives)
+    if len(front_c) == 0:
+        return run_rows, run_met
+    d = len(objectives)
+    pts_a = (np.stack([run_met[k] for k in objectives], axis=1)
+             if len(run_rows) else np.zeros((0, d)))
+    pts_b = np.stack([met_c[k] for k in objectives], axis=1)
+    keep = merge_fronts(pts_a, pts_b)
+    rows = np.concatenate([run_rows, front_c], axis=0)[keep]
+    met = {k: np.concatenate([run_met[k], met_c[k]])[keep]
+           for k in REPORT_METRICS}
+    return rows, met
+
+
+def _pareto_streamed(grid, wl, constraints, engine, hierarchical, c,
+                     interpret, objectives, shard, chunk_size
+                     ) -> ParetoResult:
+    """Chunked (and optionally sharded) frontier driver, any engine."""
+    t0 = time.perf_counter()
+    n = len(grid)
+    cs = int(chunk_size) if chunk_size else max(n, 1)
+    run_rows, run_met = _empty_run_state()
+    nf = n_wl = 0
+    for chunk in _iter_chunks(grid, cs):
+        if engine == "pallas":
+            cand, cf, cw = _pareto_chunk_pallas(
+                chunk, wl, constraints, c, hierarchical, interpret, shard,
+                objectives, run_rows)
+        else:
+            cand, cf, cw = PARETO_CHUNK_ENGINES[engine](
+                chunk, wl, constraints, c, hierarchical, interpret, shard,
+                objectives)
+        nf += cf
+        n_wl += cw
+        if len(cand):
+            run_rows, run_met = _merge_running_front(
+                run_rows, run_met, cand, wl, constraints, c, objectives)
+    front, met, _ = _pareto_from_rows(run_rows, wl, constraints, c,
+                                      objectives, m=run_met)
+    return ParetoResult(front=front, metrics=met, objectives=objectives,
+                        n_evaluated=n, n_feasible=nf, n_workload_evals=n_wl,
+                        wall_time_s=time.perf_counter() - t0)
+
+
 def _check_pareto_metrics(engine: str, pareto_metrics) -> tuple:
     metrics = tuple(pareto_metrics)
     unknown = [k for k in metrics if k not in REPORT_METRICS]
@@ -704,12 +1088,20 @@ def _check_pareto_metrics(engine: str, pareto_metrics) -> tuple:
     return metrics
 
 
+def _check_stream_args(shard, chunk_size):
+    if shard is not None and int(shard) < 1:
+        raise ValueError(f"shard must be >= 1, got {shard!r}")
+    if chunk_size is not None and int(chunk_size) < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size!r}")
+
+
 def search(wl: Workload, constraints: Constraints = Constraints(), *,
            engine: str = "numpy", grid: Optional[np.ndarray] = None,
            n_z: int = 12, hierarchical: bool = False,
            c: DeviceConstants = CONSTANTS, interpret: bool = True,
            objective: str = "edp",
-           pareto_metrics: tuple = DEFAULT_OBJECTIVES
+           pareto_metrics: tuple = DEFAULT_OBJECTIVES,
+           shard: Optional[int] = None, chunk_size: Optional[int] = None
            ) -> Union[SearchResult, ParetoResult]:
     """Unified search over a config grid.
 
@@ -737,22 +1129,120 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
         back byte-identical.
       pareto_metrics: objectives to minimize in "pareto" mode, a subset of
         REPORT_METRICS (the pallas kernel models all but "util").
+      shard: fan each evaluation out over up to `shard` devices with
+        shard_map on the 1-D candidate mesh (jax/pallas; the host engines
+        split the grid the same way). Clamped to the devices the process
+        has, so `shard=4` works — and returns the same bytes — on a
+        1-device box and a 4-device slice alike.
+      chunk_size: stream the grid through the engine in chunks of this
+        many candidates, carrying a running argmin / bounded frontier
+        across chunks — peak memory follows the chunk, not the grid.
+        Any (shard, chunk_size) combination is byte-identical to the
+        one-shot sweep (tests/test_sharded_search.py).
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; pick from "
                          f"{sorted(ENGINES)}")
+    _check_stream_args(shard, chunk_size)
     if grid is None:
         grid = _full_grid(n_z)
     grid = np.asarray(grid)
+    streamed = shard is not None or chunk_size is not None
     if objective == "edp":
+        if streamed:
+            return _search_streamed(grid, wl, constraints, engine,
+                                    hierarchical, c, interpret, shard,
+                                    chunk_size)
         return ENGINES[engine](grid, wl, constraints, c, hierarchical,
                                interpret)
     if objective != "pareto":
         raise ValueError(f"unknown objective {objective!r}; "
                          f"pick 'edp' or 'pareto'")
     metrics = _check_pareto_metrics(engine, pareto_metrics)
+    if streamed:
+        return _pareto_streamed(grid, wl, constraints, engine, hierarchical,
+                                c, interpret, metrics, shard, chunk_size)
     return PARETO_ENGINES[engine](grid, wl, constraints, c, hierarchical,
                                   interpret, metrics)
+
+
+def _union_prefiltered(chunk, wls, names, cons_for, c, hierarchical):
+    """The batched analogue of `_prefiltered`: union of the per-workload
+    area/power survivor sets (the kernel still applies each workload's
+    exact constraints)."""
+    if not hierarchical:
+        return chunk
+    union = np.zeros(len(chunk), dtype=bool)
+    for name in names:
+        union |= hw_prefilter(chunk, wls[name], cons_for(name), c)
+    return chunk[union]
+
+
+def _workloads_pallas_streamed(wls, names, cons_for, grid, hierarchical, c,
+                               interpret, objective, metrics, shard,
+                               chunk_size):
+    """Chunked/sharded batched driver: the per-chunk fused launch still
+    covers all W workloads at once; per-workload carries (best EDP /
+    running front) ride between launches."""
+    from repro.kernels.ops import dse_pareto_multi, dse_search_multi
+    t0 = time.perf_counter()
+    n = len(grid)
+    cs = int(chunk_size) if chunk_size else max(n, 1)
+    wl_list = [wls[nm] for nm in names]
+    cons_list = [cons_for(nm) for nm in names]
+    n_wl = 0
+    if objective == "edp":
+        best = {nm: (None, float("inf")) for nm in names}
+        nf = {nm: 0 for nm in names}
+        for chunk in _iter_chunks(grid, cs):
+            sub = _union_prefiltered(chunk, wls, names, cons_for, c,
+                                     hierarchical)
+            n_wl += len(sub)
+            if len(sub) == 0:
+                continue
+            carry = [best[nm][1] for nm in names]
+            bi, be, bn = dse_search_multi(sub, wl_list, cons_list, c,
+                                          interpret, shard=shard,
+                                          carry_edp=carry)
+            for nm, i, e, f in zip(names, bi, be, bn):
+                nf[nm] += f
+                if i >= 0:
+                    best[nm] = (sub[i], e)
+        wall = time.perf_counter() - t0
+        return {nm: _make_result(best[nm][0], nf[nm], wls[nm], c, n, n_wl,
+                                 wall)
+                for nm in names}
+
+    run = {nm: _empty_run_state() for nm in names}
+    nf = {nm: 0 for nm in names}
+    for chunk in _iter_chunks(grid, cs):
+        sub = _union_prefiltered(chunk, wls, names, cons_for, c,
+                                 hierarchical)
+        n_wl += len(sub)
+        if len(sub) == 0:
+            continue
+        carry_points = [
+            _pallas_front_points(run[nm][0], wls[nm], c, interpret, metrics)
+            if len(run[nm][0]) else None
+            for nm in names]
+        per_wl = dse_pareto_multi(sub, wl_list, cons_list, c, interpret,
+                                  objectives=metrics, shard=shard,
+                                  carry_points=carry_points)
+        for nm, (cand_idx, f) in zip(names, per_wl):
+            nf[nm] += f
+            if len(cand_idx):
+                run[nm] = _merge_running_front(
+                    run[nm][0], run[nm][1], sub[cand_idx], wls[nm],
+                    cons_for(nm), c, metrics)
+    wall = time.perf_counter() - t0
+    out = {}
+    for nm in names:
+        front, met, _ = _pareto_from_rows(run[nm][0], wls[nm], cons_for(nm),
+                                          c, metrics, m=run[nm][1])
+        out[nm] = ParetoResult(front=front, metrics=met, objectives=metrics,
+                               n_evaluated=n, n_feasible=nf[nm],
+                               n_workload_evals=n_wl, wall_time_s=wall)
+    return out
 
 
 def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
@@ -764,7 +1254,9 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                      hierarchical: bool = False,
                      c: DeviceConstants = CONSTANTS,
                      interpret: bool = True, objective: str = "edp",
-                     pareto_metrics: tuple = DEFAULT_OBJECTIVES
+                     pareto_metrics: tuple = DEFAULT_OBJECTIVES,
+                     shard: Optional[int] = None,
+                     chunk_size: Optional[int] = None
                      ) -> Dict[str, Union[SearchResult, ParetoResult]]:
     """Batched search: many workloads against one grid.
 
@@ -778,7 +1270,9 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
     (ParetoResult) instead of its min-EDP point; on pallas the per-block
     dominance reduction for all workloads still shares the one launch. Each
     returned result reports the whole batch's wall time (the launch is
-    shared).
+    shared). `shard=` / `chunk_size=` stream and fan out exactly as in
+    `search` — on pallas each chunk remains one all-workloads launch, with
+    per-workload carries (best EDP / running front) composing the chunks.
     """
     if not isinstance(wls, Mapping):
         wls = {wl.name: wl for wl in wls}
@@ -788,6 +1282,7 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
     if objective not in ("edp", "pareto"):
         raise ValueError(f"unknown objective {objective!r}; "
                          f"pick 'edp' or 'pareto'")
+    _check_stream_args(shard, chunk_size)
 
     def cons_for(name):
         return constraints[name] if isinstance(constraints, Mapping) \
@@ -797,25 +1292,30 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
         out = {name: search(wl, cons_for(name), engine=engine, grid=grid,
                             hierarchical=hierarchical, c=c,
                             interpret=interpret, objective=objective,
-                            pareto_metrics=pareto_metrics)
+                            pareto_metrics=pareto_metrics, shard=shard,
+                            chunk_size=chunk_size)
                for name, wl in wls.items()}
         total = sum(r.wall_time_s for r in out.values())
         for r in out.values():
             r.wall_time_s = total
         return out
 
-    t0 = time.perf_counter()
     names = list(wls)
-    sub = grid
-    if hierarchical:
-        union = np.zeros(len(grid), dtype=bool)
-        for name in names:
-            union |= hw_prefilter(grid, wls[name], cons_for(name), c)
-        sub = grid[union]
+    if objective == "pareto":
+        metrics = _check_pareto_metrics(engine, pareto_metrics)
+    else:
+        metrics = None
+    if shard is not None or chunk_size is not None:
+        return _workloads_pallas_streamed(wls, names, cons_for, grid,
+                                          hierarchical, c, interpret,
+                                          objective, metrics, shard,
+                                          chunk_size)
+
+    t0 = time.perf_counter()
+    sub = _union_prefiltered(grid, wls, names, cons_for, c, hierarchical)
     n_wl = len(sub)
 
     if objective == "pareto":
-        metrics = _check_pareto_metrics(engine, pareto_metrics)
         if n_wl == 0:
             return {name: _pareto_result(sub, 0, wls[name], cons_for(name),
                                          c, metrics, len(grid), 0, t0)
@@ -838,8 +1338,9 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
         wall = time.perf_counter() - t0
         return {name: _make_result(None, 0, wls[name], c, len(grid), 0, wall)
                 for name in names}
-    best, nf = dse_search_multi(sub, [wls[n] for n in names],
-                                [cons_for(n) for n in names], c, interpret)
+    best, _, nf = dse_search_multi(sub, [wls[n] for n in names],
+                                   [cons_for(n) for n in names], c,
+                                   interpret)
     wall = time.perf_counter() - t0
     return {name: _make_result(sub[i] if i >= 0 else None, f, wls[name], c,
                                len(grid), n_wl, wall)

@@ -15,6 +15,22 @@ photonic_model.eval_hw + performance_model.eval_wload_arrays):
     sequence); constraints stream in as a dynamic (W, 4) operand so
     constraint-scenario sweeps reuse one jit cache entry.
 
+Both search-mode kernels take a *carry* operand so per-chunk launches
+compose — the streaming layer (`core.search` with `chunk_size=`) feeds each
+chunk's launch the reduction state of the chunks before it:
+
+  * search mode carries the (W, 1) best EDP seen so far. A block whose local
+    best cannot beat the carry emits the carried EDP with the CARRY_IDX
+    sentinel instead of a config index (the carry is from an earlier chunk,
+    so it also wins exact ties — preserving the global first-hit rule).
+  * frontier mode carries up to CARRY_FRONT already-known frontier points
+    per workload (the running front's objective values in the kernel's own
+    float32 metric space): block-local candidates strictly dominated by a
+    carried point are pruned before emission, which keeps per-chunk
+    candidate lists (and MAX_FRONT overflows) from accumulating across a
+    streamed sweep. Carrying any *subset* of the running front is sound —
+    the prune only ever drops points some real carried point dominates.
+
 Each TPU lane owns one candidate architecture; the config grid streams
 through VMEM in (5, BLOCK) tiles. Both wrappers pad + mask internally, so
 arbitrary grid sizes (e.g. DxPTA's pruned candidate sets) work without
@@ -38,6 +54,10 @@ BLOCK = 2048  # configs per grid step (16 sublane rows x 128 lanes)
 # Per-workload rows in the fused-search reduction output.
 SEARCH_ROWS = 3  # (best_edp, best_idx, n_feasible)
 
+# Index sentinel emitted when the carried-in best (from an earlier chunk of a
+# streamed sweep) beats — or exactly ties — everything in the block.
+CARRY_IDX = -2.0
+
 # Frontier mode: per-block local non-dominated candidate bound. Measured
 # local fronts on the paper workloads' 12^5 grid top out around ~100 per
 # 2048-config block; a block whose local front overflows the bound reports
@@ -49,6 +69,10 @@ PARETO_ROWS = PARETO_HEADER + MAX_FRONT
 # Column chunk of the in-kernel pairwise dominance pass ((DOM_CHUNK, BLOCK)
 # comparison tiles instead of one (BLOCK, BLOCK) matrix).
 DOM_CHUNK = 256
+
+# Frontier mode: carried-in running-front points per workload. +inf padding
+# rows never dominate anything, so any shorter carry is just padded out.
+CARRY_FRONT = 128
 
 
 def _to_i32(x):
@@ -143,12 +167,16 @@ def _dse_kernel(gemms, wl_scalars, c: DeviceConstants, cfg_ref, out_ref):
 
 
 def _dse_search_kernel(workloads, c: DeviceConstants,
-                       cfg_ref, mask_ref, cons_ref, out_ref):
+                       cfg_ref, mask_ref, cons_ref, carry_ref, out_ref):
     """Fused feasibility + EDP argmin over one (5, BLOCK) config tile.
 
     workloads: static tuple of (gemms, wl_scalars) pairs; cons_ref holds the
-    dynamic (W, 4) [area, power, energy, latency] bounds. Emits SEARCH_ROWS
-    rows per workload: block-best EDP, its global config index, and the
+    dynamic (W, 4) [area, power, energy, latency] bounds; carry_ref the
+    (W, 1) best EDP carried in from earlier chunks of a streamed sweep
+    (+inf when there is none). Emits SEARCH_ROWS rows per workload:
+    block-best EDP, its launch-local config index — or CARRY_IDX when the
+    carried best wins or exactly ties (the carry precedes every config of
+    this launch, so ties go to it, preserving the first-hit rule) — and the
     block feasible count.
     """
     cols = _cfg_cols(cfg_ref)
@@ -163,8 +191,11 @@ def _dse_search_kernel(workloads, c: DeviceConstants,
               & (energy < cons_ref[w, 2]) & (latency < cons_ref[w, 3]))
         edp = jnp.where(ok, energy * latency, jnp.inf)
         i = jnp.argmin(edp)
-        out_ref[SEARCH_ROWS * w + 0, 0] = edp[i]
-        out_ref[SEARCH_ROWS * w + 1, 0] = idx[i]
+        carried = carry_ref[w, 0] <= edp[i]
+        out_ref[SEARCH_ROWS * w + 0, 0] = jnp.where(carried, carry_ref[w, 0],
+                                                    edp[i])
+        out_ref[SEARCH_ROWS * w + 1, 0] = jnp.where(carried, CARRY_IDX,
+                                                    idx[i])
         out_ref[SEARCH_ROWS * w + 2, 0] = jnp.sum(
             ok.astype(jnp.float32))
 
@@ -194,8 +225,28 @@ def _block_front(objs, ok):
     return ok & ~dominated
 
 
-def _dse_pareto_kernel(workloads, objectives, c: DeviceConstants,
-                       cfg_ref, mask_ref, cons_ref, out_ref):
+def _carry_dominated(carry_pts, objs):
+    """(BLOCK,) mask of rows strictly dominated by a carried frontier point.
+
+    carry_pts: (CARRY_FRONT, d) objective rows carried in from earlier
+    chunks (+inf padding — inf <= x is false, so padding never dominates);
+    objs: tuple of d (BLOCK,) objective vectors. Exact ties survive
+    (dominance needs a strict < somewhere), matching `_block_front`.
+    """
+    le = None
+    lt = None
+    for j, x in enumerate(objs):
+        cj = carry_pts[:, j]
+        l_ = cj[:, None] <= x[None, :]
+        t_ = cj[:, None] < x[None, :]
+        le = l_ if le is None else (le & l_)
+        lt = t_ if lt is None else (lt | t_)
+    return jnp.any(le & lt, axis=0)
+
+
+def _dse_pareto_kernel(workloads, objectives, has_carry: bool,
+                       c: DeviceConstants,
+                       cfg_ref, mask_ref, cons_ref, carry_ref, out_ref):
     """Per-block dominance reduction over one (5, BLOCK) config tile.
 
     Emits PARETO_ROWS rows per workload: the block's local-front size, its
@@ -203,7 +254,13 @@ def _dse_pareto_kernel(workloads, objectives, c: DeviceConstants,
     non-dominated set (-1 padding). Local fronts are a superset filter —
     any point dominated inside its block is dominated globally — so the
     host only merges the per-block candidate lists; the (4, G) metrics
-    array never leaves the device.
+    array never leaves the device. carry_ref holds (W * CARRY_FRONT, d)
+    running-front objective points from earlier chunks of a streamed sweep
+    (+inf rows when there is no carry): block candidates strictly dominated
+    by a carried point are pruned before emission, so streamed candidate
+    lists stay bounded by the frontier, not the grid. `has_carry` is
+    static: one-shot launches (no carry possible) specialize the whole
+    (CARRY_FRONT, BLOCK) prune away instead of comparing against +inf.
     """
     cols = _cfg_cols(cfg_ref)
     valid = mask_ref[0, :] > 0.0
@@ -218,7 +275,12 @@ def _dse_pareto_kernel(workloads, objectives, c: DeviceConstants,
               & (energy < cons_ref[w, 2]) & (latency < cons_ref[w, 3]))
         vals = {"area": area, "power": power, "energy": energy,
                 "latency": latency, "edp": energy * latency}
-        front = _block_front(tuple(vals[k] for k in objectives), ok)
+        objs = tuple(vals[k] for k in objectives)
+        front = _block_front(objs, ok)
+        if has_carry:
+            carry_pts = carry_ref[w * CARRY_FRONT:(w + 1) * CARRY_FRONT, :]
+            front = front & ~_carry_dominated(
+                carry_pts, tuple(jnp.where(ok, x, jnp.inf) for x in objs))
         # Compact the front's local indices to the row prefix via sort
         # (non-members key to n, sorting after every member).
         key = jnp.sort(jnp.where(front, local, float(n)))[:MAX_FRONT]
@@ -267,7 +329,7 @@ def dse_eval_padded(cfg_cols, *, gemms: tuple, wl_scalars: tuple,
 
 @functools.partial(jax.jit, static_argnames=("workloads", "constants",
                                              "interpret"))
-def dse_search_padded(cfg_cols, mask, cons, *, workloads: tuple,
+def dse_search_padded(cfg_cols, mask, cons, carry, *, workloads: tuple,
                       constants: DeviceConstants, interpret: bool = True):
     """Fused single-pass DSE search over a (5, G) config grid, any G.
 
@@ -280,12 +342,16 @@ def dse_search_padded(cfg_cols, mask, cons, *, workloads: tuple,
       cons: (W, 4) float32 [area_mm2, power_w, energy_j, latency_s] bounds —
         a *dynamic* operand, so sweeping constraint scenarios hits one jit
         cache entry.
+      carry: (W, 1) float32 best EDP carried in from earlier chunks of a
+        streamed sweep; +inf rows mean "no carry". The carry wins exact
+        ties (it precedes every config of this launch).
       workloads: static tuple of (gemms, wl_scalars) pairs (see
         performance_model.workload_statics).
 
     Returns (SEARCH_ROWS * W, n_blocks) float32: per workload w, rows
-    [3w + 0] block-best EDP (inf when the block has no feasible config),
-    [3w + 1] its global config index, [3w + 2] block feasible count.
+    [3w + 0] block-best EDP (inf when neither the block nor the carry has a
+    feasible config), [3w + 1] its launch-local config index — CARRY_IDX
+    when the carried-in best won the block — [3w + 2] block feasible count.
     Config indices are exact for G < 2**24 (float32 mantissa).
     """
     cfg_cols, mask = _pad_cols(cfg_cols, mask)
@@ -297,25 +363,32 @@ def dse_search_padded(cfg_cols, mask, cons, *, workloads: tuple,
         grid=(n_blocks,),
         in_specs=[pl.BlockSpec((5, BLOCK), lambda i: (0, i)),
                   pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
-                  pl.BlockSpec((w, 4), lambda i: (0, 0))],
+                  pl.BlockSpec((w, 4), lambda i: (0, 0)),
+                  pl.BlockSpec((w, 1), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((SEARCH_ROWS * w, 1), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((SEARCH_ROWS * w, n_blocks),
                                        jnp.float32),
         interpret=interpret,
-    )(cfg_cols, mask, cons)
+    )(cfg_cols, mask, cons, carry)
 
 
 @functools.partial(jax.jit, static_argnames=("workloads", "objectives",
-                                             "constants", "interpret"))
-def dse_pareto_padded(cfg_cols, mask, cons, *, workloads: tuple,
-                      objectives: tuple, constants: DeviceConstants,
+                                             "has_carry", "constants",
+                                             "interpret"))
+def dse_pareto_padded(cfg_cols, mask, cons, carry, *, workloads: tuple,
+                      objectives: tuple, has_carry: bool = True,
+                      constants: DeviceConstants,
                       interpret: bool = True):
     """Fused frontier-candidate search over a (5, G) config grid, any G.
 
     Same operand contract as `dse_search_padded` (dynamic (W, 4) constraint
     rows, (1, G) validity mask, static workload tuple), plus a static
     `objectives` tuple naming the minimized metrics (any subset of area /
-    power / energy / latency / edp). Each block reduces to its local
+    power / energy / latency / edp) and a (W * CARRY_FRONT, d) `carry` of
+    running-front objective points from earlier chunks (+inf rows = no
+    carry; candidates strictly dominated by a carried point are pruned
+    in-kernel — pass the static `has_carry=False` on one-shot launches to
+    specialize the prune away entirely). Each block reduces to its local
     non-dominated feasible candidate set.
 
     Returns (PARETO_ROWS * W, n_blocks) float32: per workload w, row
@@ -328,16 +401,18 @@ def dse_pareto_padded(cfg_cols, mask, cons, *, workloads: tuple,
     cfg_cols, mask = _pad_cols(cfg_cols, mask)
     n_blocks = cfg_cols.shape[1] // BLOCK
     w = len(workloads)
+    d = len(objectives)
     kernel = functools.partial(_dse_pareto_kernel, workloads, objectives,
-                               constants)
+                               has_carry, constants)
     return pl.pallas_call(
         kernel,
         grid=(n_blocks,),
         in_specs=[pl.BlockSpec((5, BLOCK), lambda i: (0, i)),
                   pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
-                  pl.BlockSpec((w, 4), lambda i: (0, 0))],
+                  pl.BlockSpec((w, 4), lambda i: (0, 0)),
+                  pl.BlockSpec((w * CARRY_FRONT, d), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((PARETO_ROWS * w, 1), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((PARETO_ROWS * w, n_blocks),
                                        jnp.float32),
         interpret=interpret,
-    )(cfg_cols, mask, cons)
+    )(cfg_cols, mask, cons, carry)

@@ -115,17 +115,127 @@ def _constraint_rows(constraints_seq) -> jnp.ndarray:
                         for cc in constraints_seq], jnp.float32)
 
 
+def _search_carry_rows(carry_edp, w: int) -> jnp.ndarray:
+    """(W, 1) float32 carried-best-EDP operand (+inf = no carry)."""
+    arr = np.full((w, 1), np.inf, np.float32)
+    if carry_edp is not None:
+        arr[:, 0] = np.asarray(carry_edp, np.float64).astype(np.float32)
+    return jnp.asarray(arr)
+
+
+def _front_carry_rows(carry_points, w: int, d: int) -> jnp.ndarray:
+    """(W * CARRY_FRONT, d) float32 carried-front operand, +inf-padded.
+
+    carry_points: per-workload (F, d) objective-point arrays (or None).
+    Fronts longer than CARRY_FRONT are truncated — the kernel prune is a
+    candidate filter, so carrying any subset stays exact.
+    """
+    cf = _dse.CARRY_FRONT
+    arr = np.full((w * cf, d), np.inf, np.float32)
+    if carry_points is not None:
+        for wi, pts in enumerate(carry_points):
+            if pts is None or len(pts) == 0:
+                continue
+            p = np.asarray(pts, np.float32)[:cf]
+            arr[wi * cf:wi * cf + len(p)] = p
+    return jnp.asarray(arr)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_kernel_fn(kind: str, statics: tuple, k: int):
+    """Jit-cached shard_map wrapper of a padded kernel launch over a
+    k-shard candidate mesh (cons/carry replicated, candidate axis split).
+
+    kind: "search" with statics (workloads, constants, interpret), or
+    "pareto" with statics (workloads, objectives, has_carry, constants,
+    interpret). Keyed on the kernel statics + mesh size, so a streamed
+    sweep's chunk launches reuse one compiled executable per chunk shape.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_candidate_mesh
+    from repro.parallel.sharding import candidate_spec
+
+    mesh = make_candidate_mesh(k)
+    spec = candidate_spec(2, 1)
+
+    if kind == "search":
+        workloads, constants, interpret = statics
+
+        def body(cols, mask, cons, carry):
+            return _dse.dse_search_padded(cols, mask, cons, carry,
+                                          workloads=workloads,
+                                          constants=constants,
+                                          interpret=interpret)
+    else:
+        workloads, objectives, has_carry, constants, interpret = statics
+
+        def body(cols, mask, cons, carry):
+            return _dse.dse_pareto_padded(cols, mask, cons, carry,
+                                          workloads=workloads,
+                                          objectives=objectives,
+                                          has_carry=has_carry,
+                                          constants=constants,
+                                          interpret=interpret)
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(spec, spec, P(None, None),
+                                       P(None, None)),
+                             out_specs=spec, check_rep=False))
+
+
+def _sharded_kernel_out(grid: np.ndarray, shard: int, kind: str,
+                        statics: tuple, cons, carry):
+    """Fan a kernel launch out over devices on the 1-D candidate mesh.
+
+    Pads the candidate axis to a (mesh size x BLOCK) multiple (block count
+    per shard bucketed to a power of two, mirroring `_bucketed_cols`) and
+    calls the `_sharded_kernel_fn` wrapper; each shard's per-block
+    reduction columns come back concatenated in shard order.
+
+    Returns (out, shard_size, blocks_per_shard) — launch-local indices in
+    `out` are *shard*-local, so column j's global base is
+    (j // blocks_per_shard) * shard_size.
+    """
+    from repro.launch.mesh import make_candidate_mesh
+    from repro.parallel.sharding import (CANDIDATE_AXIS, candidate_spec,
+                                         sanitize_spec)
+
+    k = make_candidate_mesh(shard).devices.size
+    g = np.asarray(grid)
+    n = len(g)
+    blocks_per_shard = max(1, -(-n // (k * _dse.BLOCK)))
+    blocks_per_shard = 1 << (blocks_per_shard - 1).bit_length()
+    shard_size = blocks_per_shard * _dse.BLOCK
+    cols = np.ones((5, k * shard_size), np.float32)
+    cols[:, :n] = g.T
+    mask = np.zeros((1, k * shard_size), np.float32)
+    mask[:, :n] = 1.0
+    # The candidate axis was just padded to a k-multiple, so the spec can
+    # never degrade; assert rather than carry an untestable fallback.
+    spec = candidate_spec(2, 1)
+    assert sanitize_spec(cols.shape, spec, {CANDIDATE_AXIS: k}) == spec
+    fn = _sharded_kernel_fn(kind, statics, k)
+    return np.asarray(fn(cols, mask, cons, carry)), shard_size, \
+        blocks_per_shard
+
+
 def dse_search_grid(grid: np.ndarray, wl: Workload, constraints,
                     c: DeviceConstants = CONSTANTS,
-                    interpret: bool = True):
-    """Fused single-pass search: (best_idx or -1, n_feasible).
+                    interpret: bool = True, *, shard=None, carry_edp=None):
+    """Fused single-pass search: (best_idx, best_edp, n_feasible).
 
     The Pallas kernel applies the constraint mask, computes EDP and reduces
     each block to (best_edp, best_idx, n_feasible); only that
     (3, n_blocks) array reaches the host — never the (4, G) metrics.
+    best_idx is -1 when nothing is feasible, CARRY_IDX (-2) when the
+    carried-in `carry_edp` beat (or tied) every feasible config.
     """
-    best, nf = dse_search_multi(grid, [wl], [constraints], c, interpret)
-    return best[0], nf[0]
+    best, edp, nf = dse_search_multi(
+        grid, [wl], [constraints], c, interpret, shard=shard,
+        carry_edp=None if carry_edp is None else [carry_edp])
+    return best[0], edp[0], nf[0]
 
 
 def _bucketed_cols(grid: np.ndarray):
@@ -148,37 +258,62 @@ def _bucketed_cols(grid: np.ndarray):
 
 def dse_search_multi(grid: np.ndarray, wls, constraints_seq,
                      c: DeviceConstants = CONSTANTS,
-                     interpret: bool = True):
+                     interpret: bool = True, *, shard=None, carry_edp=None):
     """Batched fused search: W workloads x one grid in a single launch.
 
-    Returns (best_idx_per_wl, n_feasible_per_wl) lists; best_idx is -1 when
-    no config satisfies that workload's constraints.
+    `shard=N` fans the candidate axis out over up to N devices with
+    `shard_map` (clamped to what the process has); `carry_edp` (per-
+    workload best EDP from earlier chunks of a streamed sweep) makes
+    launches compose: the kernel folds the carry into its reduction, and a
+    carried best that wins — including exact ties, which go to the earlier
+    chunk — comes back as index CARRY_IDX.
+
+    Returns (best_idx_per_wl, best_edp_per_wl, n_feasible_per_wl) lists;
+    best_idx is -1 when no config satisfies that workload's constraints
+    (and no carry was given), CARRY_IDX (-2) when the carried-in best
+    stands. n_feasible counts this grid only — streaming callers
+    accumulate it across chunks themselves.
     """
-    cols, mask = _bucketed_cols(grid)
     workloads = tuple(workload_statics(wl, c) for wl in wls)
     cons = _constraint_rows(constraints_seq)
-    out = np.asarray(_dse.dse_search_padded(
-        cols, mask, cons, workloads=workloads, constants=c,
-        interpret=interpret))
-    best_idx, n_feasible = [], []
+    carry = _search_carry_rows(carry_edp, len(workloads))
+
+    if shard is not None and int(shard) > 1:
+        out, shard_size, blocks_per_shard = _sharded_kernel_out(
+            grid, shard, "search", (workloads, c, interpret), cons, carry)
+        col_base = (np.arange(out.shape[1], dtype=np.int64)
+                    // blocks_per_shard) * shard_size
+    else:
+        cols, mask = _bucketed_cols(grid)
+        out = np.asarray(_dse.dse_search_padded(
+            cols, mask, cons, carry, workloads=workloads, constants=c,
+            interpret=interpret))
+        col_base = np.zeros(out.shape[1], np.int64)
+    best_idx, best_edp, n_feasible = [], [], []
     for w in range(len(workloads)):
         edp_b, idx_b, nf_b = out[_dse.SEARCH_ROWS * w:
                                  _dse.SEARCH_ROWS * (w + 1)]
         nf = int(round(float(nf_b.sum())))
         n_feasible.append(nf)
-        if nf == 0:
+        # Shard-local indices -> grid-global (sentinels stay put).
+        idx_g = np.where(idx_b >= 0, idx_b + col_base, idx_b)
+        # Min EDP across blocks; ties broken towards the lowest global
+        # index, matching the sequential/numpy engines' first-hit rule
+        # (CARRY_IDX sorts before every real index, so a carried tie wins).
+        jb = np.lexsort((idx_g, edp_b))[0]
+        i = int(idx_g[jb])
+        best_edp.append(float(edp_b[jb]))
+        if nf == 0 and carry_edp is None:
             best_idx.append(-1)
             continue
-        # Min EDP across blocks; ties broken towards the lowest global
-        # index, matching the sequential/numpy engines' first-hit rule.
-        jb = np.lexsort((idx_b, edp_b))[0]
-        best_idx.append(int(idx_b[jb]))
-    return best_idx, n_feasible
+        best_idx.append(i if i >= 0 else int(_dse.CARRY_IDX))
+    return best_idx, best_edp, n_feasible
 
 
 def dse_pareto_multi(grid: np.ndarray, wls, constraints_seq,
                      c: DeviceConstants = CONSTANTS, interpret: bool = True,
-                     objectives: tuple = ("area", "power", "edp")):
+                     objectives: tuple = ("area", "power", "edp"),
+                     *, shard=None, carry_points=None):
     """Batched frontier-candidate search: W workloads x one grid, one launch.
 
     The kernel reduces every block to its local non-dominated feasible set
@@ -189,6 +324,12 @@ def dse_pareto_multi(grid: np.ndarray, wls, constraints_seq,
     frontier point; the caller's exact (float64) refinement restores the
     true frontier of the candidates.
 
+    `shard=N` fans the candidate axis out over up to N devices with
+    `shard_map`; `carry_points` (per-workload (F, d) running-front
+    objective points in the kernel's float32 metric space, from earlier
+    chunks of a streamed sweep) prunes candidates a carried point strictly
+    dominates, keeping per-chunk emissions frontier-sized.
+
     Returns a list of (candidate_indices, n_feasible) per workload;
     `candidate_indices` is a sorted int64 array of grid rows covering the
     workload's feasible frontier as measured by the kernel's float32
@@ -197,21 +338,41 @@ def dse_pareto_multi(grid: np.ndarray, wls, constraints_seq,
     differently than under float64 — real design points never ride that
     edge.
     """
-    cols, mask = _bucketed_cols(grid)
     workloads = tuple(workload_statics(wl, c) for wl in wls)
     cons = _constraint_rows(constraints_seq)
-    out = np.asarray(_dse.dse_pareto_padded(
-        cols, mask, cons, workloads=workloads, objectives=tuple(objectives),
-        constants=c, interpret=interpret))
+    objectives = tuple(objectives)
+    has_carry = carry_points is not None and any(
+        p is not None and len(p) for p in carry_points)
+    carry = _front_carry_rows(carry_points, len(workloads), len(objectives))
+
+    if shard is not None and int(shard) > 1:
+        out, shard_size, blocks_per_shard = _sharded_kernel_out(
+            grid, shard, "pareto",
+            (workloads, objectives, has_carry, c, interpret), cons, carry)
+        n_cols = out.shape[1]
+        col_base = (np.arange(n_cols, dtype=np.int64)
+                    // blocks_per_shard) * shard_size
+        blk_lo = col_base + (np.arange(n_cols, dtype=np.int64)
+                             % blocks_per_shard) * _dse.BLOCK
+    else:
+        cols, mask = _bucketed_cols(grid)
+        out = np.asarray(_dse.dse_pareto_padded(
+            cols, mask, cons, carry, workloads=workloads,
+            objectives=objectives, has_carry=has_carry, constants=c,
+            interpret=interpret))
+        n_cols = out.shape[1]
+        col_base = np.zeros(n_cols, np.int64)
+        blk_lo = np.arange(n_cols, dtype=np.int64) * _dse.BLOCK
     results = []
     for w in range(len(workloads)):
         rows = out[_dse.PARETO_ROWS * w:_dse.PARETO_ROWS * (w + 1)]
         counts, nfeas_b = rows[0], rows[1]
-        idx = rows[_dse.PARETO_HEADER:]
-        cand = idx[idx >= 0].astype(np.int64)
+        # Shard-local block indices -> grid-global via the column's base.
+        idx = rows[_dse.PARETO_HEADER:] + col_base[None, :]
+        cand = idx[rows[_dse.PARETO_HEADER:] >= 0].astype(np.int64)
         overflowed = np.nonzero(counts > _dse.MAX_FRONT)[0]
         for b in overflowed:
-            lo = int(b) * _dse.BLOCK
+            lo = int(blk_lo[b])
             cand = np.concatenate(
                 [cand, np.arange(lo, min(lo + _dse.BLOCK, len(grid)))])
         results.append((np.unique(cand),

@@ -23,3 +23,20 @@ def make_host_mesh():
     """Whatever this host actually has — used by examples/tests."""
     n = len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_candidate_mesh(shard: int):
+    """1-D mesh for DSE candidate-grid fan-out (`search(..., shard=N)`).
+
+    The single axis is named after `parallel.sharding.CANDIDATE_AXIS`; its
+    size is `shard` clamped to the devices this process actually has, so
+    `shard=4` on a 1-device CPU box still runs (one shard) and the same
+    call fans out across 4 devices under
+    `XLA_FLAGS=--xla_force_host_platform_device_count=4` or on real
+    hardware. Results are byte-identical either way — the shard count only
+    moves where the per-shard reductions run.
+    """
+    from repro.parallel.sharding import CANDIDATE_AXIS
+
+    k = max(1, min(int(shard), len(jax.devices())))
+    return jax.make_mesh((k,), (CANDIDATE_AXIS,))

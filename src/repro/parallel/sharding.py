@@ -163,6 +163,22 @@ LONG_DECODE_RULES = Rules(fsdp=False, seq_parallel=False, seq_shard_kv=True,
 
 SINGLE_POD_AXES: Tuple[str, ...] = ("data",)
 
+# 1-D DSE candidate-grid mesh axis (launch.mesh.make_candidate_mesh): the
+# sharded search layer fans config candidates out over it with shard_map.
+CANDIDATE_AXIS = "candidates"
+
+
+def candidate_spec(rank: int, dim: int) -> P:
+    """PartitionSpec sharding dimension `dim` of a rank-`rank` operand over
+    the candidate axis (every other dimension replicated). Callers pad the
+    candidate dimension to a mesh-size multiple first; run the result
+    through `sanitize_spec` with the concrete shape as a guard — an
+    indivisible dim degrades to replicated (each shard then scans the whole
+    grid, still correct) instead of tripping GSPMD padding."""
+    parts = [None] * rank
+    parts[dim] = CANDIDATE_AXIS
+    return P(*parts)
+
 
 def for_mesh(rules: Rules, mesh) -> Rules:
     """Restrict the axis names to the ones the mesh actually has."""

@@ -1,0 +1,97 @@
+"""Golden-reference regression fixture for the DSE engines.
+
+`tests/golden/dse_12x5.json` freezes, for each of the five paper workloads
+on the full 12^5 grid under the paper's default constraints:
+
+  * the min-EDP winner (config row, float64 reference-model EDP, feasible
+    count), and
+  * the default-objectives Pareto frontier (rows + all reference-model
+    metric arrays),
+
+computed by the float64 numpy reference engine. Engine/streaming refactors
+then diff against these frozen numbers instead of against each other — a
+bug that slipped into *every* backend at once (or into the shared reference
+model) still trips the suite. Floats survive the JSON round-trip exactly
+(repr shortest round-trip), so comparisons are ==, not allclose.
+
+Regenerate after an *intentional* cost-model change with:
+
+    PYTHONPATH=src python tests/test_golden_reference.py --write
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.core import Constraints, REPORT_METRICS, search
+from repro.core.paper_workloads import PAPER_WORKLOADS, load
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "dse_12x5.json"
+OBJECTIVES = ("area", "power", "edp")
+
+
+def _compute_golden():
+    cons = Constraints()
+    out = {"grid": "full 1..12 grid on all five parameters (12^5 configs)",
+           "engine": "numpy (float64 reference model)",
+           "constraints": {"area_mm2": cons.area_mm2, "power_w": cons.power_w,
+                           "energy_mj": cons.energy_mj,
+                           "latency_ms": cons.latency_ms},
+           "objectives": list(OBJECTIVES), "workloads": {}}
+    for name in sorted(PAPER_WORKLOADS):
+        wl = load(name)
+        best = search(wl, cons, engine="numpy")
+        front = search(wl, cons, engine="numpy", objective="pareto",
+                       pareto_metrics=OBJECTIVES)
+        out["workloads"][name] = {
+            "best": [int(x) for x in best.best_cfg.as_array()],
+            "edp": float(best.edp),
+            "n_feasible": int(best.n_feasible),
+            "front": [[int(x) for x in row] for row in front.front],
+            "front_metrics": {k: [float(v) for v in front.metrics[k]]
+                              for k in REPORT_METRICS},
+        }
+    return out
+
+
+def test_golden_fixture_matches_reference_model():
+    # Regenerating the fixture from the float64 reference model must give
+    # the committed file back byte-for-byte (up to JSON canonicalization).
+    assert GOLDEN.exists(), "run: PYTHONPATH=src python " \
+                            "tests/test_golden_reference.py --write"
+    committed = json.loads(GOLDEN.read_text())
+    assert committed == _compute_golden()
+
+
+@pytest.mark.parametrize("engine", ["python", "jax", "pallas"])
+def test_engines_match_golden(engine):
+    # Every other backend, hierarchical and streamed/sharded, must land on
+    # the frozen numbers — not merely agree with whatever numpy computes
+    # today. (The python oracle is slow on the full grid: spot-check it on
+    # one workload; sweep all five on the vectorized backends.)
+    committed = json.loads(GOLDEN.read_text())["workloads"]
+    cons = Constraints()
+    names = ["deit-t"] if engine == "python" else sorted(PAPER_WORKLOADS)
+    for name in names:
+        wl = load(name)
+        gold = committed[name]
+        kw = {} if engine == "python" else {"shard": 2, "chunk_size": 65536}
+        best = search(wl, cons, engine=engine, hierarchical=True, **kw)
+        assert [int(x) for x in best.best_cfg.as_array()] == gold["best"]
+        assert float(best.edp) == gold["edp"]
+        assert best.n_feasible == gold["n_feasible"]
+        front = search(wl, cons, engine=engine, objective="pareto",
+                       pareto_metrics=OBJECTIVES, hierarchical=True, **kw)
+        assert [[int(x) for x in r] for r in front.front] == gold["front"]
+        for k in REPORT_METRICS:
+            assert [float(v) for v in front.metrics[k]] \
+                == gold["front_metrics"][k], (name, k)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--write" not in sys.argv:
+        raise SystemExit(__doc__)
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN.write_text(json.dumps(_compute_golden(), indent=1) + "\n")
+    print(f"wrote {GOLDEN}")

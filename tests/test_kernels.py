@@ -170,21 +170,25 @@ def test_dse_search_kernel_matches_ref(wname, gsize):
     rng = np.random.default_rng(gsize)
     grid = rng.integers(1, 13, size=(gsize, 5))
     cons = Constraints()
-    assert dse_search_grid(grid, wl, cons) == dse_search_ref(grid, wl, cons)
+    i, edp, nf = dse_search_grid(grid, wl, cons)
+    assert (i, nf) == dse_search_ref(grid, wl, cons)
+    assert np.isfinite(edp) == (nf > 0)
 
 
 def test_dse_search_kernel_zero_feasible():
     wl = load("deit-b")
     grid = np.random.default_rng(0).integers(1, 13, size=(300, 5))
     impossible = Constraints(area_mm2=0.1, power_w=0.001)
-    assert dse_search_grid(grid, wl, impossible) == (-1, 0)
+    i, edp, nf = dse_search_grid(grid, wl, impossible)
+    assert (i, nf) == (-1, 0)
+    assert edp == float("inf")
 
 
 def test_dse_search_multi_single_launch_matches_per_workload():
     wls = [load(n) for n in ("deit-t", "deit-b", "bert-b")]
     cons = [Constraints(), Constraints(power_w=3.0), Constraints()]
     grid = np.random.default_rng(1).integers(1, 13, size=(3000, 5))
-    best, nf = dse_search_multi(grid, wls, cons)
+    best, _, nf = dse_search_multi(grid, wls, cons)
     for w, (wl, cc) in enumerate(zip(wls, cons)):
         assert (best[w], nf[w]) == dse_search_ref(grid, wl, cc)
 

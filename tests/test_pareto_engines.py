@@ -155,6 +155,40 @@ def test_single_point_grid(engine):
         assert np.array_equal(r.front, grid)
 
 
+def test_pallas_block_overflow_at_real_bound_host_refine_taken():
+    # Force a genuine per-block frontier overflow at the *real* MAX_FRONT:
+    # a full 2048-config block of exact duplicates of a feasible config is
+    # 2048 mutually non-dominated ties — far past the 128-index emission
+    # bound — so the kernel must report the true count and the host must
+    # refine the whole block. A second duplicate run rides in the *partial*
+    # last block, so the fallback's arange is also clipped to the grid.
+    from repro.kernels import dse_eval, dse_pareto_multi
+    wl = load("deit-t")
+    cons = Constraints()
+    best = search(wl, cons, engine="numpy", grid=_sample_grid(2)).best_cfg
+    dup = np.tile(best.as_array(), (dse_eval.BLOCK, 1))
+    filler = _sample_grid(43, size=1100)
+    tail_dup = np.tile(best.as_array(), (dse_eval.MAX_FRONT + 33, 1))
+    grid = np.concatenate([dup, filler, tail_dup], axis=0)
+    assert len(grid) % dse_eval.BLOCK != 0  # last block really is partial
+
+    # The fallback is observably taken: every row of the overflowing block
+    # joins the candidate list, which the <=MAX_FRONT emission path alone
+    # could never produce — and nothing past len(grid) leaks in.
+    (cand, nf), = dse_pareto_multi(grid, [wl], [cons])
+    assert set(range(dse_eval.BLOCK)) <= set(cand.tolist())
+    assert cand.max() < len(grid)
+
+    # End-to-end exactness: every duplicate is an exact tie, so all
+    # BLOCK + MAX_FRONT + 33 copies are on the frontier, byte-identically
+    # to the float64 reference.
+    ref = search(wl, cons, engine="numpy", grid=grid, objective="pareto")
+    got = search(wl, cons, engine="pallas", grid=grid, objective="pareto")
+    _assert_same_front(ref, got, "real-bound overflow")
+    n_copies = int((got.front == best.as_array()).all(axis=1).sum())
+    assert n_copies == dse_eval.BLOCK + dse_eval.MAX_FRONT + 33
+
+
 def test_pallas_block_overflow_falls_back_exact():
     # A grid whose feasible points are mutually non-dominated by
     # construction (distinct configs -> distinct metric trade-offs can't be

@@ -1,0 +1,332 @@
+"""Differential harness for the sharded + streamed DSE layer.
+
+`search(..., shard=, chunk_size=)` must return byte-identical results to the
+one-shot sweep for every engine and both objectives, under any fan-out /
+chunking — including uneven last chunks, chunks with zero feasible points,
+and grids with duplicate rows (exact frontier ties). The same bar holds for
+the batched `search_workloads`. On a 1-device box the shard_map paths run on
+a 1-shard mesh; under `XLA_FLAGS=--xla_force_host_platform_device_count=4`
+(the CI multi-device job) the identical tests exercise real device fan-out.
+
+Also here: hypothesis property tests (shimmed when hypothesis is absent)
+for the two cross-chunk reductions — the running argmin and the frontier
+merge — and ops-level tests that the kernel carry operands make per-chunk
+launches compose.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover — CI images without hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (Constraints, ENGINES, REPORT_METRICS,
+                        merge_fronts, merge_running_best, pareto_mask,
+                        search, search_workloads)
+from repro.core.paper_workloads import PAPER_WORKLOADS, load
+
+ALL_ENGINES = sorted(ENGINES)
+
+# The matrix the issue pins down: no sharding / degenerate / real fan-out,
+# crossed with no chunking / prime (uneven last chunk) / power-of-two / one
+# chunk covering the whole grid.
+SHARDS = (None, 1, 2, 4)
+
+
+def _chunk_sizes(engine, g):
+    # The pallas kernel pads every launch to its 8-block bucket floor, so
+    # under CPU interpret a tiny chunk costs as much as a 16k one — use
+    # block-scale chunks there (the uneven-last-chunk prime included) and
+    # genuinely small ones on the cheap host/jax engines.
+    if engine == "pallas":
+        return (None, 1021, 1024, g)
+    return (None, 97, 256, g)
+
+
+def _sample_grid(seed, size=3000):
+    rng = np.random.default_rng(seed)
+    return np.unique(rng.integers(1, 13, size=(size, 5)), axis=0)
+
+
+def _assert_same_search(ref, got, label):
+    assert got.best_cfg == ref.best_cfg, label
+    assert got.n_feasible == ref.n_feasible, label
+    assert got.n_evaluated == ref.n_evaluated, label
+    assert got.n_workload_evals == ref.n_workload_evals, label
+    for f in ("area_mm2", "power_w", "energy_j", "latency_s", "edp"):
+        a, b = getattr(ref, f), getattr(got, f)
+        assert (a == b) or (np.isnan(a) and np.isnan(b)), (label, f)
+
+
+def _assert_same_front(ref, got, label):
+    assert np.array_equal(got.front, ref.front), label
+    assert got.n_feasible == ref.n_feasible, label
+    assert got.n_evaluated == ref.n_evaluated, label
+    assert got.n_workload_evals == ref.n_workload_evals, label
+    assert got.objectives == ref.objectives, label
+    for k in REPORT_METRICS:
+        assert np.array_equal(got.metrics[k], ref.metrics[k]), (label, k)
+
+
+def _assert_same(objective, ref, got, label):
+    if objective == "edp":
+        _assert_same_search(ref, got, label)
+    else:
+        _assert_same_front(ref, got, label)
+
+
+# ---------------------------------------------------------------------------
+# The differential matrix: engine x objective x shard x chunk_size
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_streamed_matches_oneshot(engine, objective):
+    wl = load("deit-t")
+    cons = Constraints()
+    # Keep the python oracle's sequential sweeps affordable.
+    size = 900 if engine == "python" else 2500
+    grid = _sample_grid(ALL_ENGINES.index(engine), size=size)
+    ref = search(wl, cons, engine=engine, grid=grid, objective=objective)
+    for shard in SHARDS:
+        for cs in _chunk_sizes(engine, len(grid)):
+            if shard is None and cs is None:
+                continue
+            got = search(wl, cons, engine=engine, grid=grid,
+                         objective=objective, shard=shard, chunk_size=cs)
+            _assert_same(objective, ref, got,
+                         f"{engine}/{objective}/shard={shard}/chunk={cs}")
+
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+@pytest.mark.parametrize("engine", ["numpy", "jax", "pallas"])
+def test_streamed_hierarchical_matches_oneshot(engine, objective):
+    wl = load("bert-l")
+    cons = Constraints()
+    grid = _sample_grid(11, size=2000)
+    ref = search(wl, cons, engine=engine, grid=grid, objective=objective,
+                 hierarchical=True)
+    prime = 1021 if engine == "pallas" else 311
+    for shard, cs in ((4, None), (None, prime), (2, 1024),
+                      (4, len(grid))):
+        got = search(wl, cons, engine=engine, grid=grid, objective=objective,
+                     hierarchical=True, shard=shard, chunk_size=cs)
+        _assert_same(objective, ref, got,
+                     f"{engine}/{objective}/hier/shard={shard}/chunk={cs}")
+
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_chunk_with_zero_feasible_points(engine, objective):
+    # The first chunk is 128 copies of the all-max config — infeasible under
+    # the default constraints — so the streamed driver must carry "nothing
+    # yet" across a fully infeasible chunk and still match the one-shot
+    # result (and count feasibles/workload evals identically).
+    wl = load("deit-t")
+    cons = Constraints()
+    dead = np.full((128, 5), 12, dtype=np.int64)
+    assert not search(wl, cons, engine="numpy", grid=dead).feasible
+    grid = np.concatenate([dead, _sample_grid(5, size=900)], axis=0)
+    ref = search(wl, cons, engine=engine, grid=grid, objective=objective)
+    sizes = (128, len(grid)) if engine == "pallas" else (128, 64, len(grid))
+    for cs in sizes:
+        got = search(wl, cons, engine=engine, grid=grid, objective=objective,
+                     chunk_size=cs, shard=2)
+        _assert_same(objective, ref, got, f"{engine}/{objective}/dead/{cs}")
+
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_zero_feasible_everywhere_streamed(engine, objective):
+    wl = load("deit-t")
+    impossible = Constraints(area_mm2=1.0, power_w=0.01, energy_mj=1e-9,
+                             latency_ms=1e-9)
+    grid = _sample_grid(7, size=500)
+    r = search(wl, impossible, engine=engine, grid=grid, objective=objective,
+               shard=2, chunk_size=101)
+    assert not r.feasible
+    assert r.n_feasible == 0
+    assert r.n_evaluated == len(grid)
+    if objective == "pareto":
+        assert r.front.shape == (0, 5)
+
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+def test_duplicate_rows_across_chunks(objective):
+    # Exact ties must survive streaming: every grid row appears twice, in
+    # *different* chunks (chunk_size == the original grid length), so tied
+    # frontier points meet only through the cross-chunk merge.
+    wl = load("deit-s")
+    cons = Constraints()
+    base = _sample_grid(23, size=700)
+    doubled = np.concatenate([base, base], axis=0)
+    for engine in ("numpy", "pallas"):
+        ref = search(wl, cons, engine=engine, grid=doubled,
+                     objective=objective)
+        got = search(wl, cons, engine=engine, grid=doubled,
+                     objective=objective, chunk_size=len(base))
+        _assert_same(objective, ref, got, f"{engine}/{objective}/dup")
+        if objective == "pareto":
+            _, counts = np.unique(got.front, axis=0, return_counts=True)
+            assert (counts == 2).all()
+
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_search_workloads_streamed_matches_oneshot(engine, objective):
+    wls = {name: load(name) for name in sorted(PAPER_WORKLOADS)}
+    cons = Constraints()
+    size = 500 if engine == "python" else 1200
+    grid = _sample_grid(3, size=size)
+    cs = 499 if engine == "pallas" else 193
+    ref = search_workloads(wls, cons, engine=engine, grid=grid,
+                           objective=objective)
+    got = search_workloads(wls, cons, engine=engine, grid=grid,
+                           objective=objective, shard=4, chunk_size=cs)
+    for name in wls:
+        _assert_same(objective, ref[name], got[name],
+                     f"batch/{engine}/{objective}/{name}")
+
+
+def test_search_workloads_streamed_per_workload_constraints():
+    wls = {name: load(name) for name in ("deit-t", "bert-l")}
+    cons = {"deit-t": Constraints(),
+            "bert-l": Constraints(area_mm2=1.0, power_w=0.01)}
+    grid = _sample_grid(5, size=1200)
+    ref = search_workloads(wls, cons, engine="pallas", grid=grid,
+                           hierarchical=True)
+    got = search_workloads(wls, cons, engine="pallas", grid=grid,
+                           hierarchical=True, shard=2, chunk_size=601)
+    _assert_same_search(ref["deit-t"], got["deit-t"], "deit-t")
+    assert not got["bert-l"].feasible
+
+
+def test_shard_clamps_to_available_devices():
+    # More shards than devices must clamp, not crash — and stay identical.
+    wl = load("deit-t")
+    cons = Constraints()
+    grid = _sample_grid(13, size=600)
+    ref = search(wl, cons, engine="jax", grid=grid)
+    _assert_same_search(ref, search(wl, cons, engine="jax", grid=grid,
+                                    shard=16), "shard=16")
+
+
+def test_stream_arg_validation():
+    wl = load("deit-t")
+    with pytest.raises(ValueError, match="shard"):
+        search(wl, shard=0)
+    with pytest.raises(ValueError, match="chunk_size"):
+        search(wl, chunk_size=0)
+    with pytest.raises(ValueError, match="chunk_size"):
+        search_workloads({"w": wl}, chunk_size=-3)
+
+
+# ---------------------------------------------------------------------------
+# Property tests for the cross-chunk reductions (hypothesis / bundled shim)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40)
+@given(st.tuples(st.integers(1, 60), st.integers(1, 12), st.integers(0, 6),
+                 st.integers(0, 10 ** 6)))
+def test_running_argmin_matches_oneshot_reference(args):
+    # Fold merge_running_best over a random partition of a value array with
+    # deliberate ties (small integer value range): the fold must land on
+    # numpy's one-shot first-hit argmin, whatever the chunk boundaries.
+    n, n_cuts, tie_range, seed = args
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, tie_range + 1, size=n).astype(np.float64)
+    cuts = np.sort(rng.integers(0, n + 1, size=n_cuts))
+    best = (None, float("inf"))
+    for part_idx in np.split(np.arange(n), cuts):
+        if len(part_idx) == 0:
+            continue
+        i = int(np.argmin(vals[part_idx]))
+        best = merge_running_best(best, (int(part_idx[i]),
+                                         float(vals[part_idx][i])))
+    assert best[0] == int(np.argmin(vals))
+    assert best[1] == float(vals.min())
+
+
+@settings(max_examples=40)
+@given(st.tuples(st.integers(1, 80), st.integers(2, 4), st.integers(1, 10),
+                 st.integers(0, 10 ** 6)))
+def test_frontier_merge_matches_oneshot_reference(args):
+    # Fold merge_fronts over locally-reduced chunk frontiers of a random
+    # point set (small integer coordinates force ties and duplicates): the
+    # surviving points must be exactly pareto_mask of the full set —
+    # including duplicate multiplicity, which np.sort equality checks.
+    n, d, n_cuts, seed = args
+    rng = np.random.default_rng(seed)
+    pts = rng.integers(0, 6, size=(n, d)).astype(np.float64)
+    cuts = np.sort(rng.integers(0, n + 1, size=n_cuts))
+    run = np.zeros((0, d))
+    for part in np.split(pts, cuts):
+        if len(part) == 0:
+            continue
+        local = part[pareto_mask(part)]
+        keep = merge_fronts(run, local)
+        run = np.vstack([run, local])[keep]
+    expect = pts[pareto_mask(pts)]
+    assert np.array_equal(np.sort(run, axis=0), np.sort(expect, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Kernel carry operands: per-chunk launches compose at the ops level
+# ---------------------------------------------------------------------------
+
+def test_dse_search_carry_composes_launches():
+    from repro.kernels import dse_search_grid
+    wl = load("deit-b")
+    cons = Constraints()
+    grid = _sample_grid(31, size=1600)
+    i_ref, e_ref, nf_ref = dse_search_grid(grid, wl, cons)
+    cut = 700
+    i1, e1, nf1 = dse_search_grid(grid[:cut], wl, cons)
+    i2, e2, nf2 = dse_search_grid(grid[cut:], wl, cons, carry_edp=e1)
+    assert nf1 + nf2 == nf_ref
+    if i2 >= 0:  # the second chunk strictly improved on the carry
+        assert cut + i2 == i_ref and e2 == e_ref
+    else:        # CARRY_IDX: the carried-in first-chunk best stands
+        assert i2 == -2 and i1 == i_ref and e2 == e1 == e_ref
+
+
+def test_dse_search_carry_wins_exact_ties():
+    # The carried best and the chunk best are the same config (duplicated
+    # grid): identical float32 EDP, and the carry must win the tie so the
+    # earlier chunk's (lower) global index is kept.
+    from repro.kernels import dse_search_grid
+    wl = load("deit-t")
+    cons = Constraints()
+    grid = _sample_grid(37, size=800)
+    i1, e1, nf1 = dse_search_grid(grid, wl, cons)
+    assert i1 >= 0
+    i2, e2, nf2 = dse_search_grid(grid, wl, cons, carry_edp=e1)
+    assert i2 == -2 and e2 == e1 and nf2 == nf1
+
+
+def test_dse_pareto_carry_prunes_dominated_candidates():
+    from repro.core.photonic_model import CONSTANTS
+    from repro.core.search import _pallas_front_points
+    from repro.kernels import dse_pareto_multi
+    wl = load("deit-t")
+    cons = Constraints()
+    grid = _sample_grid(41, size=1600)
+    objectives = ("area", "power", "edp")
+    (cand0, nf0), = dse_pareto_multi(grid, [wl], [cons],
+                                     objectives=objectives)
+    front = search(wl, cons, engine="pallas", grid=grid, objective="pareto",
+                   pareto_metrics=objectives).front
+    carry = [_pallas_front_points(front, wl, CONSTANTS, True, objectives)]
+    (cand1, nf1), = dse_pareto_multi(grid, [wl], [cons],
+                                     objectives=objectives,
+                                     carry_points=carry)
+    assert nf1 == nf0
+    # Carrying the full frontier prunes every candidate it strictly
+    # dominates; what survives must still cover the frontier itself (exact
+    # ties — the frontier rows' own duplicates in the grid — are kept).
+    assert len(cand1) <= len(cand0)
+    front_rows = {tuple(r) for r in front}
+    surviving = {tuple(r) for r in np.asarray(grid)[cand1]}
+    assert front_rows <= surviving
