@@ -16,10 +16,15 @@ machine itself compares. The reference keys (and the host python-loop
 timings) are never gated themselves. Only keys present in *both* files are
 compared — smoke runs legitimately skip the multi-minute sequential sweeps.
 
+`--require k1,k2` additionally demands that the named gated timings exist in
+*both* files — so a benchmark rename can't silently drop a row from the
+gate's coverage (the factorized engine rows are pinned this way in CI).
+
 Exit status: 0 ok, 1 regression, 2 nothing comparable (misconfigured gate).
 
     python benchmarks/check_regression.py \
-        --baseline BENCH_dse.json --fresh BENCH_dse.smoke.json --factor 2.0
+        --baseline BENCH_dse.json --fresh BENCH_dse.smoke.json --factor 2.0 \
+        --require fused_jax_factorized,fused_pallas_factorized
 """
 from __future__ import annotations
 
@@ -34,9 +39,15 @@ GATED_PREFIXES = ("fused_", "pareto_jax", "pareto_pallas", "pareto_batch")
 REFERENCE_KEYS = ("fused_numpy", "pareto_numpy")
 
 
-def gate(baseline: dict, fresh: dict, factor: float) -> int:
+def gate(baseline: dict, fresh: dict, factor: float,
+         require: tuple = ()) -> int:
     base_us = baseline.get("engines_us", {})
     fresh_us = fresh.get("engines_us", {})
+    missing = [k for k in require if k not in base_us or k not in fresh_us]
+    if missing:
+        print(f"benchmark gate: required timing(s) missing from baseline "
+              f"or fresh run: {', '.join(missing)}", file=sys.stderr)
+        return 2
     ref_key = next((k for k in REFERENCE_KEYS
                     if k in base_us and k in fresh_us), None)
     speed = (float(fresh_us[ref_key]) / float(base_us[ref_key])) \
@@ -79,12 +90,16 @@ def main() -> int:
                     help="freshly produced smoke-mode BENCH_*.smoke.json")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max tolerated speed-normalized timing ratio")
+    ap.add_argument("--require", default="",
+                    help="comma-separated gated keys that must be present "
+                         "in both records")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
-    return gate(baseline, fresh, args.factor)
+    require = tuple(k for k in args.require.split(",") if k)
+    return gate(baseline, fresh, args.factor, require)
 
 
 if __name__ == "__main__":

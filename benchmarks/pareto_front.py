@@ -99,6 +99,16 @@ def run():
                     f"single launch, {us_b / len(wls) / 1e3:.1f}ms/workload; "
                     f"front sizes: {sizes}"))
 
+    # The pallas frontier kernel's dominance pass: carry the previous
+    # committed full-run timings forward, so a kernel change's before/after
+    # (e.g. the PR 4 presorted-triangular `_block_front`) is recorded side
+    # by side in the regenerated record instead of only in git history.
+    if not smoke and _BENCH_JSON.exists():
+        prev = json.loads(_BENCH_JSON.read_text()).get("engines_us", {})
+        bench["prev_engines_us"] = {
+            k: prev[k] for k in ("pareto_pallas_hier", "pareto_pallas_flat")
+            if k in prev}
+
     bench["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
     out_path = _BENCH_JSON.with_suffix(".smoke.json") if smoke \
         else _BENCH_JSON  # never clobber the committed full-run record

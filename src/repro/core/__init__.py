@@ -8,20 +8,21 @@ paper_workloads, and repro.configs for the assigned architectures).
 """
 from .arch_params import (ALG1_DEFAULTS, LT_BASE, LT_LARGE, PAPER_CONSTRAINTS,
                           Constraints, PTAConfig, config_grid, iter_configs)
+from .factorized import FactorizedSpace, factorized_evaluate_grid
 from .paper_workloads import PAPER_WORKLOADS
 from .pareto import (DEFAULT_OBJECTIVES, dominates, merge_fronts,
                      pareto_front, pareto_mask, pareto_search_refined)
-from .performance_model import (calc_edp, eval_full, eval_wload,
-                                eval_wload_arrays, fps, gemm_cycles,
-                                workload_statics)
+from .performance_model import (calc_edp, cycle_factor_tables, eval_full,
+                                eval_wload, eval_wload_arrays, fps,
+                                gemm_cycles, workload_statics)
 from .photonic_model import (CONSTANTS, DEFAULT_SRAM_MB, DeviceConstants,
                              area_breakdown, eval_hw, eval_hw_config,
                              power_breakdown, sram_mb_for_workload)
 from .search import (ENGINES, PARETO_ENGINES, REPORT_METRICS, ParetoResult,
                      SearchResult, build_search_space, dxpta_search,
                      evaluate_grid, exhaustive_search, grid_search_vectorized,
-                     hw_prefilter, merge_running_best, progressive_candidates,
-                     search, search_workloads)
+                     hw_prefilter, hw_prefilter_masks, merge_running_best,
+                     progressive_candidates, search, search_workloads)
 from .significance import (SignificanceScore, observe_significance,
                            refinement_sets, significant_params)
 from .workload import Gemm, Workload, merge_workloads, transformer_encoder_workload

@@ -1,0 +1,260 @@
+"""Factorized axis-table evaluation of a product config space.
+
+The DSE grid is the Cartesian product of five candidate sets, and the hot
+term of the cost model factors over low-rank slices of it:
+
+  gemm_cycles = ceil(M / (N_t*N_h)) * ceil(N / N_v) * ceil(K / (N_c*N_l))
+
+so a |T|*|C|*|V|*|H|*|L|-point sweep contains only |T|*|H| + |V| + |C|*|L|
+*distinct* ceil-divisions per GEMM. This module precomputes those per-GEMM
+axis tables (`performance_model.cycle_factor_tables`) and combines them over
+the product space with broadcasted outer products — O(axis-table) divisions
+plus an O(G) combine of cheap multiplies — instead of evaluating the full
+model once per grid point. The separable area/power component model needs no
+tables at all: `eval_hw` broadcasts over the five 1-D axis arrays directly.
+
+Bit-identity contract: the combine replays `eval_wload_arrays`' float
+operations per element, in the same order, on the same values (the factor
+tables hold exactly the intermediates the per-config path computes — integer
+ceil quotients and their float products), so for any xp/dtype the combined
+metric arrays are bit-identical to evaluating the materialized grid:
+`evaluate_space(..., xp=np)` equals `core.search.evaluate_grid`'s float64
+reference down to the last bit, and the float32 jax engines keep their
+metric space unchanged when `factorized=True` flips on. That is what makes
+every factorized engine byte-identical to its unfactorized counterpart
+(n_feasible counts and argmin winners included) — pinned by
+tests/test_factorized.py.
+
+Grid-order convention: `arch_params.config_grid` builds the product with
+meshgrid axes (t, c, v, h, lambda) — N_t slowest, N_lambda fastest — but
+*column* order (n_t, n_c, n_h, n_v, n_lambda). `FactorizedSpace` stores the
+candidate sets in meshgrid axis order and `decode()` reproduces
+`config_grid` rows for any flat-index range (property-tested against
+config_grid, including the on-device Pallas decode of kernels/dse_eval.py).
+
+Both evaluation forms are exposed:
+
+  * `evaluate_space(..., idx=None)` — the whole product space at once,
+    flattened in grid order (no index vector, no (G, 5) rows: pure
+    broadcasting). The one-shot engines use this.
+  * `evaluate_space(..., idx=<flat indices>)` — arbitrary index vectors via
+    mixed-radix decode + table gathers. The streamed/sharded engines use
+    this per chunk; because gathers fetch the very same table entries the
+    broadcast form multiplies, both forms are bit-identical per element and
+    any (shard, chunk_size) partition composes exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence, Tuple
+
+import numpy as np
+
+from .arch_params import config_grid
+from .performance_model import cycle_factor_tables
+from .photonic_model import CONSTANTS, DeviceConstants, eval_hw
+
+# Meshgrid axis order of the product space (see config_grid): N_t slowest,
+# N_lambda fastest. Note V before H — but column order is (t, c, h, v, l).
+AXIS_NAMES = ("n_t", "n_c", "n_v", "n_h", "n_lambda")
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorizedSpace:
+    """A product config space: five candidate-value tuples in meshgrid axis
+    order (t, c, v, h, lambda). Hashable, so it keys jit caches directly."""
+
+    axes: Tuple[Tuple[int, ...], ...]
+
+    def __post_init__(self):
+        if len(self.axes) != 5 or any(len(a) == 0 for a in self.axes):
+            raise ValueError("FactorizedSpace needs five non-empty "
+                             f"candidate sets, got {self.axes!r}")
+
+    @staticmethod
+    def from_space(space) -> "FactorizedSpace":
+        """From a candidate-set mapping with build_search_space's keys."""
+        if isinstance(space, FactorizedSpace):
+            return space
+        if isinstance(space, Mapping):
+            return FactorizedSpace(tuple(
+                tuple(int(v) for v in space[k]) for k in AXIS_NAMES))
+        if isinstance(space, Sequence) and len(space) == 5:
+            return FactorizedSpace(tuple(
+                tuple(int(v) for v in a) for a in space))
+        raise ValueError(f"cannot build a FactorizedSpace from {space!r}")
+
+    @staticmethod
+    def full(n_z: int) -> "FactorizedSpace":
+        inc = tuple(range(1, int(n_z) + 1))
+        return FactorizedSpace((inc,) * 5)
+
+    @property
+    def radices(self) -> Tuple[int, ...]:
+        return tuple(len(a) for a in self.axes)
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.radices)
+
+    def to_grid(self) -> np.ndarray:
+        """Materialize the full (G, 5) grid (tests / reference use only)."""
+        return config_grid(*[list(a) for a in self.axes])
+
+    def decode(self, idx) -> np.ndarray:
+        """Flat indices -> (n, 5) int64 rows, identical to to_grid()[idx]."""
+        d = decode_digits(np.asarray(idx, np.int64), self.radices, np)
+        a = [np.asarray(ax, np.int64) for ax in self.axes]
+        # Column order (n_t, n_c, n_h, n_v, n_lambda): h is meshgrid axis 3,
+        # v is axis 2 (mirrors config_grid's column gather).
+        return np.stack([a[0][d[0]], a[1][d[1]], a[3][d[3]], a[2][d[2]],
+                         a[4][d[4]]], axis=1)
+
+    def rows(self, start: int, stop: int) -> np.ndarray:
+        return self.decode(np.arange(start, stop, dtype=np.int64))
+
+
+def decode_digits(idx, radices, xp=np):
+    """Mixed-radix decode of flat grid indices into per-axis digit arrays.
+
+    Returns (d_t, d_c, d_v, d_h, d_l) in meshgrid axis order: the flat
+    index of config_grid factors as
+    ((((d_t * C + d_c) * V + d_v) * H + d_h) * L + d_l.
+    Exact for any index that fits the integer dtype of `idx` (int32 on the
+    jax engines — plenty for every 5-parameter grid below 2**31 points).
+    """
+    t_r, c_r, v_r, h_r, l_r = (int(r) for r in radices)
+    i = xp.asarray(idx)
+    d_l = i % l_r
+    i = i // l_r
+    d_h = i % h_r
+    i = i // h_r
+    d_v = i % v_r
+    i = i // v_r
+    d_c = i % c_r
+    d_t = i // c_r
+    return d_t, d_c, d_v, d_h, d_l
+
+
+def axis_cycle_tables(axes, gemm_array, xp=np):
+    """Per-GEMM factor tables over a product space's axes.
+
+    Returns (f_m, f_n, f_k) int32 arrays of shape (W, T, H), (W, V) and
+    (W, C, L): every distinct value the three ceil-division factors of
+    `gemm_cycles` take over the space — |T|*|H| + |V| + |C|*|L| divisions
+    per GEMM instead of 3 per grid point.
+    """
+    t, c_, v, h, lam = (xp.asarray(np.asarray(a, np.int32)) for a in axes)
+    d_m = (t[:, None] * h[None, :]).reshape(-1)
+    d_k = (c_[:, None] * lam[None, :]).reshape(-1)
+    f_m, f_n, f_k = cycle_factor_tables(gemm_array, d_m, v, d_k, xp)
+    w = f_m.shape[0]
+    return (f_m.reshape(w, len(t), len(h)), f_n,
+            f_k.reshape(w, len(c_), len(lam)))
+
+
+def _axis_values(axes, xp, dtype):
+    return tuple(xp.asarray(np.asarray(a, dtype)) for a in axes)
+
+
+def _space_cols(axes, xp, col_dtype, digits=None):
+    """(n_t, n_c, n_h, n_v, n_lambda) config-column arrays.
+
+    digits=None: 5-D broadcast views over the meshgrid axes (no per-point
+    storage); otherwise gathered per decoded digit vector. Values equal the
+    materialized grid columns exactly (small integers are exact in every
+    dtype used), so downstream elementwise math is bit-identical to the
+    per-config path.
+    """
+    t, c_, v, h, lam = _axis_values(axes, xp, col_dtype)
+    if digits is None:
+        return (t[:, None, None, None, None], c_[None, :, None, None, None],
+                h[None, None, None, :, None], v[None, None, :, None, None],
+                lam[None, None, None, None, :])
+    d_t, d_c, d_v, d_h, d_l = digits
+    return t[d_t], c_[d_c], h[d_h], v[d_v], lam[d_l]
+
+
+def evaluate_space(axes, gemm_array, elec_ops, weight_bytes, act_io_bytes,
+                   sram_mb, c: DeviceConstants = CONSTANTS, xp=np,
+                   col_dtype=np.int64, idx=None):
+    """Factorized metrics over a product space — the axis-table combine.
+
+    Args:
+      axes: five candidate-value sequences in meshgrid order (t, c, v, h,
+        lambda) — e.g. `FactorizedSpace.axes`.
+      gemm_array / elec_ops / weight_bytes / act_io_bytes / sram_mb: the
+        workload statics, as in `eval_wload_arrays`.
+      col_dtype: dtype of the config-column values fed to the elementwise
+        model terms — np.int64 mirrors `evaluate_grid`'s float64 reference,
+        np.float32 mirrors the jax engines' float32 metric space.
+      idx: None evaluates the whole space, flattened in config_grid order;
+        an integer array evaluates those flat indices (mixed-radix decode +
+        table gathers — the streamed/sharded form).
+
+    Returns the `evaluate_grid` dict: (G,)- or (len(idx),)-shaped area,
+    power, energy, latency, util, edp — bit-identical per element to
+    evaluating the materialized rows, because every float op replays the
+    per-config path's op on the same values in the same order.
+    """
+    radices = tuple(len(a) for a in axes)
+    f_m, f_n, f_k = axis_cycle_tables(axes, gemm_array, xp)
+    g = xp.asarray(gemm_array)
+    m, k, n = g[:, 0], g[:, 1], g[:, 2]
+    count = g[:, 3] * 1.0
+
+    if idx is None:
+        cols = _space_cols(axes, xp, col_dtype)
+        # (T, C, V, H, L, W) per-GEMM cycles: the same ((f_m*f_n)*f_k)*count
+        # product chain gemm_cycles computes per config, with the GEMM axis
+        # last so the reduction mirrors eval_wload_arrays' axis=-1 sums.
+        a_b = xp.transpose(f_m * 1.0, (1, 2, 0))[:, None, None, :, None, :]
+        b_b = xp.transpose(f_n * 1.0, (1, 0))[None, None, :, None, None, :]
+        c_b = xp.transpose(f_k * 1.0, (1, 2, 0))[None, :, None, None, :, :]
+        cyc = a_b * b_b * c_b * count
+    else:
+        digits = decode_digits(idx, radices, xp)
+        d_t, d_c, d_v, d_h, d_l = digits
+        cols = _space_cols(axes, xp, col_dtype, digits)
+        a_i = (f_m * 1.0)[:, d_t, d_h]               # (W, n)
+        b_i = (f_n * 1.0)[:, d_v]
+        c_i = (f_k * 1.0)[:, d_c, d_l]
+        cyc = xp.transpose(a_i * b_i * c_i * count[:, None], (1, 0))
+
+    n_t, n_c, n_h, n_v, n_l = cols
+    total_cycles = xp.sum(cyc, axis=-1)
+    macs = xp.sum((m * 1.0) * (k * 1.0) * (n * 1.0) * count)
+    peak_macs = n_t * n_h * n_v * n_c * n_l
+    util = macs / xp.maximum(total_cycles * peak_macs, 1.0)
+
+    t_photonic = total_cycles / c.f_clk_hz
+    t_mem = (weight_bytes + act_io_bytes) / c.dram_bw_bytes
+    t_elec = elec_ops / c.elec_ops_per_s
+    latency = xp.maximum(t_photonic, t_mem) + t_elec
+
+    area, power = eval_hw(n_t, n_c, n_h, n_v, n_l, sram_mb, c, xp)
+    lanes = (n_t * n_h + n_v) * n_c * n_l
+    sram_bytes = xp.sum(cyc * lanes[..., None], axis=-1) * c.act_bits / 8.0
+    energy = (power * latency
+              + c.e_dram_per_byte * (weight_bytes + act_io_bytes)
+              + c.e_sram_per_byte * sram_bytes)
+
+    out = {"area": area, "power": power, "energy": energy,
+           "latency": latency, "util": util, "edp": energy * latency}
+    if idx is None:
+        out = {key: xp.reshape(xp.broadcast_to(v, radices), (-1,))
+               for key, v in out.items()}
+    return out
+
+
+def factorized_evaluate_grid(fspace: FactorizedSpace, wl,
+                             c: DeviceConstants = CONSTANTS, idx=None):
+    """Float64 reference combiner: `evaluate_grid(fspace.to_grid()[idx])`
+    without materializing any rows — bit-identical output (the test oracle
+    of the factorized subsystem, and the numpy factorized engine)."""
+    from .photonic_model import sram_mb_for_workload
+    sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
+    return evaluate_space(fspace.axes, wl.gemm_array, wl.elec_ops,
+                          wl.weight_bytes, wl.act_io_bytes, sram_mb, c,
+                          xp=np, col_dtype=np.int64, idx=idx)

@@ -53,6 +53,38 @@ def gemm_cycles(m, k, n, n_t, n_c, n_h, n_v, n_l, xp=np):
             * (_ceil_div(k, d_k, xp) * 1.0))
 
 
+def cycle_factor_tables(gemm_array, m_divs, n_divs, k_divs, xp=np):
+    """Per-GEMM axis tables of gemm_cycles' three ceil-division factors.
+
+    `gemm_cycles` is a product of three ceil-divisions that each depend on
+    only a 1- or 2-axis slice of the config grid: the M split sees N_t*N_h,
+    the N split sees N_v, the K split sees N_c*N_lambda. Over a product
+    search space those factors take just |T|*|H| + |V| + |C|*|L| distinct
+    values per GEMM — this is the decomposition the factorized evaluation
+    subsystem (core.factorized) combines with broadcasted outer products.
+
+    Args:
+      gemm_array: (W, 4) [M, K, N, count] rows (count is ignored here).
+      m_divs / n_divs / k_divs: 1-D arrays of divisor values — every
+        distinct N_t*N_h product, N_v candidate, and N_c*N_lambda product
+        of the search space respectively.
+
+    Returns (f_m, f_n, f_k) int32 tables of shape (W, len(divs)) with
+    f_m[w, i] = ceil(M_w / m_divs[i]) etc. — bit-for-bit the factors
+    `gemm_cycles` computes per config (same int32 ceil-division), so
+    gathering f_m * f_n * f_k reproduces its product exactly.
+    """
+    i32 = getattr(xp, "int32")
+    g = xp.asarray(gemm_array)
+    m, k, n = (g[:, i].astype(i32) for i in (0, 1, 2))
+
+    def table(dim, divs):
+        d = xp.asarray(divs).astype(i32)
+        return _ceil_div(dim[:, None], d[None, :], xp)
+
+    return table(m, m_divs), table(n, n_divs), table(k, k_divs)
+
+
 def eval_wload_arrays(n_t, n_c, n_h, n_v, n_l, gemm_array, elec_ops,
                       weight_bytes, act_io_bytes, sram_mb,
                       c: DeviceConstants = CONSTANTS, xp=np):

@@ -53,17 +53,29 @@ kernels, whose launches compose through carry operands). Every
 (shard, chunk_size) setting is byte-identical to the one-shot sweep on
 every engine and objective; tests/test_sharded_search.py is the
 differential harness that pins that down.
+
+When the grid is a Cartesian product of per-parameter candidate sets (every
+paper grid is), `factorized=True` switches the numpy/jax/pallas engines to
+the axis-table evaluation of core.factorized: the cost model's separable
+factors are tabulated per axis slice and combined by broadcasted outer
+products, the (G, 5) grid never exists on the host (the pallas kernels
+decode candidate rows on device from the chunk base + per-axis vectors),
+and results stay byte-identical to the unfactorized engines because the
+combine replays the same float ops per element. Composes with `shard=` /
+`chunk_size=`; tests/test_factorized.py pins the equivalence.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from typing import Dict, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
 from .arch_params import Constraints, PTAConfig, config_grid
+from .factorized import FactorizedSpace, factorized_evaluate_grid
 from .pareto import DEFAULT_OBJECTIVES, pareto_mask
 from .performance_model import (calc_edp, eval_full, eval_wload_arrays,
                                 workload_statics)
@@ -227,19 +239,27 @@ def dxpta_search(wl: Workload, constraints: Constraints = Constraints(),
                  align_dims: Optional[Sequence[int]] = None,
                  prune: bool = True, collect: bool = False,
                  c: DeviceConstants = CONSTANTS, engine: str = "python",
-                 interpret: bool = True) -> SearchResult:
+                 interpret: bool = True,
+                 factorized: bool = False) -> SearchResult:
     """The paper's constraint-aware search (Alg. 2).
 
     `engine` dispatches the significance-reduced grid to any backend of the
     engine layer; `prune` maps to the hierarchical two-phase pass there.
     The default `python` engine is the paper-faithful sequential loop
     (including the EDP_svd=1000 initial cap, which the vectorized engines
-    deliberately drop); `collect=True` requires it.
+    deliberately drop); `collect=True` requires it. `factorized=True`
+    hands the candidate sets to the factorized product-space evaluation
+    (numpy/jax/pallas engines) — Alg. 2's search space is a Cartesian
+    product, so it factorizes directly; `prune` is subsumed there (the
+    axis-table combine prices area/power for free).
     """
     if collect and engine != "python":
         raise ValueError("collect=True (per-candidate history) is only "
                          "implemented by the python engine")
     space = build_search_space(n_z, step, significance, align_dims)
+    if factorized:
+        return search(wl, constraints, engine=engine, factorized=True,
+                      space=space, c=c, interpret=interpret)
     grid = _space_to_grid(space)
     if engine == "python":
         return _sequential_search(grid, wl, constraints, prune, collect, c)
@@ -315,19 +335,79 @@ def _full_grid(n_z: int) -> np.ndarray:
 
 
 @functools.lru_cache(maxsize=8)
-def _hw_mask_fn(c: DeviceConstants):
-    """Jit'd area/power feasibility mask. Grid columns, SRAM size and the
-    bounds are all dynamic operands, so every workload and constraint
-    scenario reuses the single cache entry per DeviceConstants."""
+def _hw_base_fn(c: DeviceConstants):
+    """Jit'd workload-independent area/power prefix columns.
+
+    The derived SRAM size is the *only* workload dependence of the hardware
+    model, and its term sits second-to-last in `eval_hw`'s component sum —
+    so summing every component *before* it once per grid, and replaying
+    `(prefix + sram * coef) + chip_fixed` per workload bucket, reproduces
+    eval_hw's float32 value bit-for-bit (same additions, same order). One
+    grid sweep then serves every workload and constraint scenario without
+    perturbing which edge-of-bound configs the prefilter keeps."""
     import jax
     import jax.numpy as jnp
 
-    def fn(cols, sram_mb, bounds):
-        area, power = eval_hw(*(cols[i] for i in range(5)), sram_mb, c,
-                              xp=jnp)
-        return (area < bounds[0]) & (power < bounds[1])
+    from .photonic_model import area_breakdown, power_breakdown
+
+    def fn(cols):
+        five = tuple(cols[i] for i in range(5))
+
+        def prefix(breakdown):
+            total = None
+            for key, term in breakdown(*five, 0.0, c, xp=jnp).items():
+                if key == "memory":  # chip_misc follows it — stop before
+                    return total
+                total = term if total is None else total + term
+
+        return prefix(area_breakdown), prefix(power_breakdown)
 
     return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=8)
+def _hw_bucket_mask_fn(c: DeviceConstants):
+    """Jit'd (S, G) feasibility masks from the shared prefix columns, one
+    row per distinct (sram_mb, area bound, power bound) bucket — finishing
+    eval_hw's sum in its own order (memory term, then the fixed chip
+    term), so the masks match a full per-workload eval_hw exactly."""
+    import jax
+    import jax.numpy as jnp
+
+    def fn(area0, power0, buckets):
+        area = (area0[None, :] + buckets[:, 0:1] * c.a_sram_per_mb) \
+            + c.a_chip_fixed
+        power = (power0[None, :] + buckets[:, 0:1] * c.p_sram_per_mb) \
+            + c.p_chip_fixed
+        return (area < buckets[:, 1:2]) & (power < buckets[:, 2:3])
+
+    return jax.jit(fn)
+
+
+def hw_prefilter_masks(grid: np.ndarray, wls: Sequence[Workload],
+                       constraints_seq: Sequence[Constraints],
+                       c: DeviceConstants = CONSTANTS):
+    """Per-workload area/power feasibility masks over one grid.
+
+    The workload-independent base columns are computed once per grid
+    (`_hw_base_fn`), each workload then costs one affine (sram, bounds)
+    compare — and workloads landing in the same (sram_mb, area, power)
+    bucket (the paper's five workloads share bounds and several share the
+    derived SRAM size) are deduped down to a single mask row.
+
+    Returns a list of (G,) boolean masks aligned with `wls`.
+    """
+    import jax.numpy as jnp
+    area0, power0 = _hw_base_fn(c)(
+        jnp.asarray(np.asarray(grid).T, jnp.float32))
+    keys = [(float(sram_mb_for_workload(wl.max_act_bytes, c)),
+             float(cc.area_mm2), float(cc.power_w))
+            for wl, cc in zip(wls, constraints_seq)]
+    uniq = sorted(set(keys))
+    masks = np.asarray(_hw_bucket_mask_fn(c)(
+        area0, power0, jnp.asarray(uniq, jnp.float32)))
+    by_key = {key: masks[i] for i, key in enumerate(uniq)}
+    return [by_key[key] for key in keys]
 
 
 def hw_prefilter(grid: np.ndarray, wl: Workload, constraints: Constraints,
@@ -338,15 +418,10 @@ def hw_prefilter(grid: np.ndarray, wl: Workload, constraints: Constraints,
     this is one cheap fused elementwise sweep of the full grid; the
     survivors are then compacted and handed to the workload evaluation —
     the vectorized analogue of Alg. 2's prune-on-violation. Only the (G,)
-    boolean mask leaves the device.
+    boolean mask leaves the device. Multi-workload callers should use
+    `hw_prefilter_masks`, which amortizes the grid sweep across workloads.
     """
-    import jax.numpy as jnp
-    sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
-    bounds = jnp.asarray([constraints.area_mm2, constraints.power_w],
-                         jnp.float32)
-    mask = _hw_mask_fn(c)(jnp.asarray(np.asarray(grid).T, jnp.float32),
-                          jnp.float32(sram_mb), bounds)
-    return np.asarray(mask)
+    return hw_prefilter_masks(grid, [wl], [constraints], c)[0]
 
 
 def _make_result(cfg_row, n_feasible: int, wl: Workload, c: DeviceConstants,
@@ -603,23 +678,63 @@ JAX_PARETO_CHUNK = 2048
 JAX_PARETO_MAX_FRONT = 256
 
 
+def _pareto_scan_mask(objs):
+    """Sort-and-scan dominance pass over already-masked objective vectors.
+
+    objs: list of equal-length float32 arrays (length a JAX_PARETO_CHUNK
+    multiple) with infeasible/padding rows already +inf — they sort last,
+    never dominate (inf <= finite is false), and are excluded by the
+    finite() check. Rows are lex-sorted (so any dominator strictly precedes
+    what it dominates, and frontier membership is decided the moment a row
+    is visited), then scanned in chunks against (a) a bounded
+    running-frontier buffer carried across chunks and (b) the earlier rows
+    of their own chunk. Returns the (n,) candidate mask in input order.
+    Shared by the grid-operand and the factorized jax frontier engines.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    d = len(objs)
+    order = jnp.lexsort(tuple(objs[::-1]))
+    pts = jnp.stack([o[order] for o in objs], axis=1)
+    chunks = pts.reshape(-1, JAX_PARETO_CHUNK, d)
+    tri = jnp.tri(JAX_PARETO_CHUNK, k=-1, dtype=bool)  # [i, j]: j < i
+
+    def step(buf, p):
+        le = jnp.all(buf[None, :, :] <= p[:, None, :], axis=-1)
+        lt = jnp.any(buf[None, :, :] < p[:, None, :], axis=-1)
+        dom_buf = jnp.any(le & lt, axis=1)
+        le_c = jnp.all(p[None, :, :] <= p[:, None, :], axis=-1)
+        lt_c = jnp.any(p[None, :, :] < p[:, None, :], axis=-1)
+        dom_chunk = jnp.any(le_c & lt_c & tri, axis=1)
+        surv = jnp.isfinite(p[:, 0]) & ~dom_buf & ~dom_chunk
+        # Merge survivors into the buffer, preserving lex order (buffer
+        # rows come from earlier chunks, hence lex-precede survivors);
+        # stable-compact the finite rows, drop overflow beyond the cap.
+        pool = jnp.concatenate(
+            [buf, jnp.where(surv[:, None], p, jnp.inf)], axis=0)
+        live = jnp.isfinite(pool[:, 0])
+        key = jnp.where(live, jnp.arange(pool.shape[0]), pool.shape[0])
+        buf = pool[jnp.argsort(key)[:JAX_PARETO_MAX_FRONT]]
+        return buf, surv
+
+    buf0 = jnp.full((JAX_PARETO_MAX_FRONT, d), jnp.inf, jnp.float32)
+    _, surv = jax.lax.scan(step, buf0, chunks)
+    return jnp.zeros(pts.shape[0], bool).at[order].set(surv.reshape(-1))
+
+
 @functools.lru_cache(maxsize=64)
 def _jax_pareto_fn(gemms, wl_scalars, c: DeviceConstants, objectives: tuple):
     """Jit-cached fused frontier-candidate mask for one workload.
 
-    Metrics + feasibility as in `_jax_search_fn`, then a sort-and-scan
-    dominance pass: objective rows are lex-sorted (so any dominator strictly
-    precedes what it dominates, and frontier membership is decided the
-    moment a row is visited), scanned in chunks against (a) a bounded
-    running-frontier buffer carried across chunks and (b) the earlier rows
-    of their own chunk. Constraints stay a dynamic operand; only the (G,)
-    candidate mask and the feasible count leave the device.
+    Metrics + feasibility as in `_jax_search_fn`, then the shared
+    `_pareto_scan_mask` dominance pass. Constraints stay a dynamic operand;
+    only the (G,) candidate mask and the feasible count leave the device.
     """
     import jax
     import jax.numpy as jnp
 
     gemm_arr = jnp.asarray(np.asarray(gemms, np.int64))
-    d = len(objectives)
 
     def fn(cols, valid, cons):
         n_t, n_c, n_h, n_v, n_l = (cols[i] for i in range(5))
@@ -632,37 +747,9 @@ def _jax_pareto_fn(gemms, wl_scalars, c: DeviceConstants, objectives: tuple):
               & (energy < cons[2]) & (latency < cons[3]))
         vals = {"area": area, "power": power, "energy": energy,
                 "latency": latency, "util": util, "edp": energy * latency}
-        # Infeasible rows become all-+inf: they sort last, never dominate
-        # (inf <= finite is false), and are excluded by the finite() check.
         objs = [jnp.where(ok, vals[k].astype(jnp.float32), jnp.inf)
                 for k in objectives]
-        order = jnp.lexsort(tuple(objs[::-1]))
-        pts = jnp.stack([o[order] for o in objs], axis=1)
-        chunks = pts.reshape(-1, JAX_PARETO_CHUNK, d)
-        tri = jnp.tri(JAX_PARETO_CHUNK, k=-1, dtype=bool)  # [i, j]: j < i
-
-        def step(buf, p):
-            le = jnp.all(buf[None, :, :] <= p[:, None, :], axis=-1)
-            lt = jnp.any(buf[None, :, :] < p[:, None, :], axis=-1)
-            dom_buf = jnp.any(le & lt, axis=1)
-            le_c = jnp.all(p[None, :, :] <= p[:, None, :], axis=-1)
-            lt_c = jnp.any(p[None, :, :] < p[:, None, :], axis=-1)
-            dom_chunk = jnp.any(le_c & lt_c & tri, axis=1)
-            surv = jnp.isfinite(p[:, 0]) & ~dom_buf & ~dom_chunk
-            # Merge survivors into the buffer, preserving lex order (buffer
-            # rows come from earlier chunks, hence lex-precede survivors);
-            # stable-compact the finite rows, drop overflow beyond the cap.
-            pool = jnp.concatenate(
-                [buf, jnp.where(surv[:, None], p, jnp.inf)], axis=0)
-            live = jnp.isfinite(pool[:, 0])
-            key = jnp.where(live, jnp.arange(pool.shape[0]), pool.shape[0])
-            buf = pool[jnp.argsort(key)[:JAX_PARETO_MAX_FRONT]]
-            return buf, surv
-
-        buf0 = jnp.full((JAX_PARETO_MAX_FRONT, d), jnp.inf, jnp.float32)
-        _, surv = jax.lax.scan(step, buf0, chunks)
-        mask = jnp.zeros(pts.shape[0], bool).at[order].set(surv.reshape(-1))
-        return mask, jnp.sum(ok)
+        return _pareto_scan_mask(objs), jnp.sum(ok)
 
     return jax.jit(fn)
 
@@ -1076,6 +1163,411 @@ def _pareto_streamed(grid, wl, constraints, engine, hierarchical, c,
                         wall_time_s=time.perf_counter() - t0)
 
 
+# ---------------------------------------------------------------------------
+# Factorized product-space engines (factorized=True)
+#
+# When the candidate grid is a Cartesian product of per-parameter candidate
+# sets (every paper grid is), `factorized=True` evaluates it from per-GEMM
+# axis factor tables (core.factorized) instead of per-point model runs:
+# the ceil-division factors of gemm_cycles cost O(|T||H| + |V| + |C||L|)
+# work per GEMM, combined over the space by broadcasted outer products —
+# and the (G, 5) grid is never materialized on the host at all (the numpy
+# engine combines tables, the jax engines bake the axes into the jit, the
+# pallas kernels reconstruct candidate rows on device from a chunk base
+# offset + the per-axis candidate vectors). Because the combine replays the
+# per-config float ops on the same values in the same order, every
+# factorized engine is *byte-identical* to its unfactorized counterpart —
+# winners, frontiers, n_feasible and all — and `shard=` / `chunk_size=`
+# compose exactly as for materialized grids (index spans instead of row
+# chunks). `hierarchical=True` is rejected: compacting survivors would
+# break the product structure, and the factorized combine already prices
+# the area/power terms at axis-table cost.
+# ---------------------------------------------------------------------------
+
+FACTORIZED_ENGINES = ("numpy", "jax", "pallas")
+
+
+def _factorized_space(space, grid, n_z, engine, hierarchical
+                      ) -> FactorizedSpace:
+    if engine not in FACTORIZED_ENGINES:
+        raise ValueError(f"factorized=True supports engines "
+                         f"{FACTORIZED_ENGINES}, not {engine!r}")
+    if grid is not None:
+        raise ValueError("factorized=True evaluates a product space; pass "
+                         "the candidate sets via space= (or n_z=), not a "
+                         "materialized grid")
+    if hierarchical:
+        raise ValueError("hierarchical=True is incompatible with "
+                         "factorized=True: survivor compaction would break "
+                         "the product structure (the factorized combine "
+                         "already evaluates area/power at axis-table cost)")
+    fspace = (FactorizedSpace.full(n_z) if space is None
+              else FactorizedSpace.from_space(space))
+    if engine == "pallas" and fspace.size > 1 << 24:
+        raise ValueError(
+            f"the factorized pallas engine addresses configs by float32 "
+            f"global index, exact only below 2**24 points; this space has "
+            f"{fspace.size}. Use the jax or numpy factorized engines "
+            f"(exact integer indices) for spaces this large.")
+    return fspace
+
+
+def _span_parts(start: int, n: int, shard):
+    """Contiguous sub-spans of [start, start + n) for the host engines'
+    simulated shard fan-out — same sizes as np.array_split, mirroring
+    `_host_shards`."""
+    if not shard or int(shard) <= 1 or n == 0:
+        return [(start, start + n)]
+    k = min(int(shard), n)
+    base, rem = divmod(n, k)
+    parts, s = [], start
+    for i in range(k):
+        size = base + (1 if i < rem else 0)
+        parts.append((s, s + size))
+        s += size
+    return parts
+
+
+def _np_factorized_metrics(fspace, wl, c, start, stop):
+    """Float64 factorized metrics for an index span (the whole space goes
+    through the index-free broadcast combine)."""
+    if (start, stop) == (0, fspace.size):
+        return factorized_evaluate_grid(fspace, wl, c)
+    return factorized_evaluate_grid(
+        fspace, wl, c, idx=np.arange(start, stop, dtype=np.int64))
+
+
+def _edp_span_numpy_factorized(fspace, wl, constraints, c, start, n, shard):
+    best = (None, float("inf"))
+    nf = 0
+    for s0, s1 in _span_parts(start, n, shard):
+        m = _np_factorized_metrics(fspace, wl, c, s0, s1)
+        ok = np.asarray(constraints.satisfied(m["area"], m["power"],
+                                              m["energy"], m["latency"]))
+        nf += int(ok.sum())
+        if not ok.any():
+            continue
+        edp = np.where(ok, np.asarray(m["edp"]), np.inf)
+        i = int(np.argmin(edp))
+        best = merge_running_best(best, (fspace.decode([s0 + i])[0],
+                                         float(edp[i])))
+    return best[0], best[1], nf, n
+
+
+def _pareto_span_numpy_factorized(fspace, wl, constraints, c, start, n,
+                                  shard, objectives):
+    cands = []
+    nf = 0
+    for s0, s1 in _span_parts(start, n, shard):
+        m = _np_factorized_metrics(fspace, wl, c, s0, s1)
+        ok = np.asarray(constraints.satisfied(m["area"], m["power"],
+                                              m["energy"], m["latency"]))
+        f = int(ok.sum())
+        nf += f
+        if f == 0:
+            continue
+        pts = np.stack([np.asarray(m[k], np.float64)[ok]
+                        for k in objectives], axis=1)
+        sel = s0 + np.where(ok)[0][pareto_mask(pts)]
+        cands.append(fspace.decode(sel))
+    if not cands:
+        return np.zeros((0, 5), np.int64), nf, n
+    return np.concatenate(cands, axis=0), nf, n
+
+
+@functools.lru_cache(maxsize=64)
+def _jax_factorized_full_fn(axes, gemms, wl_scalars, c: DeviceConstants,
+                            objectives):
+    """Jit-cached factorized sweep of the *whole* product space (axes baked
+    static, so the factor tables constant-fold). objectives=None: fused
+    (argmin, EDP, n_feasible); otherwise the frontier-candidate mask."""
+    import jax
+    import jax.numpy as jnp
+
+    from .factorized import evaluate_space
+
+    gemm_arr = np.asarray(gemms, np.int64)
+    size = math.prod(len(a) for a in axes)
+
+    def fn(cons):
+        m = evaluate_space(axes, gemm_arr, *wl_scalars[:3], wl_scalars[3],
+                           c, xp=jnp, col_dtype=np.float32)
+        ok = ((m["area"] < cons[0]) & (m["power"] < cons[1])
+              & (m["energy"] < cons[2]) & (m["latency"] < cons[3]))
+        if objectives is None:
+            edp = jnp.where(ok, m["edp"], jnp.inf)
+            i = jnp.argmin(edp)
+            return i, edp[i], jnp.sum(ok)
+        objs = [jnp.where(ok, m[k].astype(jnp.float32), jnp.inf)
+                for k in objectives]
+        pad = (-size) % JAX_PARETO_CHUNK
+        if pad:
+            objs = [jnp.concatenate([o, jnp.full(pad, jnp.inf, o.dtype)])
+                    for o in objs]
+        return _pareto_scan_mask(objs)[:size], jnp.sum(ok)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def _jax_factorized_span_fn(axes, gemms, wl_scalars, c: DeviceConstants,
+                            objectives):
+    """Jit-cached factorized sweep of a dynamic index span: mixed-radix
+    decode + table gathers (bit-identical per element to the full-space
+    broadcast combine, so chunked/sharded launches compose exactly)."""
+    import jax
+    import jax.numpy as jnp
+
+    from .factorized import evaluate_space
+
+    gemm_arr = np.asarray(gemms, np.int64)
+
+    def fn(idx, valid, cons):
+        m = evaluate_space(axes, gemm_arr, *wl_scalars[:3], wl_scalars[3],
+                           c, xp=jnp, col_dtype=np.float32, idx=idx)
+        ok = (valid & (m["area"] < cons[0]) & (m["power"] < cons[1])
+              & (m["energy"] < cons[2]) & (m["latency"] < cons[3]))
+        if objectives is None:
+            edp = jnp.where(ok, m["edp"], jnp.inf)
+            i = jnp.argmin(edp)
+            return i, edp[i], jnp.sum(ok)
+        objs = [jnp.where(ok, m[k].astype(jnp.float32), jnp.inf)
+                for k in objectives]
+        return _pareto_scan_mask(objs), jnp.sum(ok)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def _jax_factorized_sharded_fn(fn, k: int, mode: str):
+    """shard_map wrapper of a factorized span fn over the candidate mesh:
+    the (n,) index vector and validity mask shard, constraints replicate
+    (the 1-D analogue of `_jax_sharded_fn`)."""
+    import jax
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_candidate_mesh
+    from repro.parallel.sharding import candidate_spec
+
+    mesh = make_candidate_mesh(k)
+    spec1 = candidate_spec(1, 0)
+
+    if mode == "argmin":
+        def body(idx_l, valid_l, cons):
+            i, e, f = fn(idx_l, valid_l, cons)
+            return i[None], e[None], f[None]
+        out_specs = (spec1, spec1, spec1)
+    else:
+        def body(idx_l, valid_l, cons):
+            mask, f = fn(idx_l, valid_l, cons)
+            return mask, f[None]
+        out_specs = (spec1, spec1)
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(spec1, spec1, P(None)),
+                             out_specs=out_specs, check_rep=False))
+
+
+def _span_idx_operands(start: int, n: int, multiple: int):
+    """((n_pad,) int32 global indices, (n_pad,) validity) padded to a
+    `multiple` multiple. Padding indices run past the span; the jax gather
+    clamps them and the validity mask retires them, mirroring
+    `_padded_candidate_cols`."""
+    import jax.numpy as jnp
+    n_pad = n + (-n) % multiple
+    lane = np.arange(n_pad, dtype=np.int32)
+    return jnp.asarray(start + lane), jnp.asarray(lane < n)
+
+
+def _edp_span_jax_factorized(fspace, wl, constraints, c, start, n, shard):
+    gemms, scalars = workload_statics(wl, c)
+    cons_vec = _constraint_vec(constraints)
+    sharded = shard is not None and int(shard) > 1
+    if (start, n) == (0, fspace.size) and not sharded:
+        fn = _jax_factorized_full_fn(fspace.axes, gemms, scalars, c, None)
+        i, e, nf = fn(cons_vec)
+        nf = int(nf)
+        row = fspace.decode([int(i)])[0] if nf > 0 else None
+        return row, float(e), nf, n
+    fn = _jax_factorized_span_fn(fspace.axes, gemms, scalars, c, None)
+    if sharded:
+        from repro.launch.mesh import make_candidate_mesh
+        k = make_candidate_mesh(shard).devices.size
+        idx, valid = _span_idx_operands(start, n, k)
+        f = _jax_factorized_sharded_fn(fn, k, "argmin")
+        i_s, e_s, f_s = (np.asarray(x) for x in f(idx, valid, cons_vec))
+        nf = int(f_s.sum())
+        if nf == 0:
+            return None, float("inf"), 0, n
+        s = int(np.lexsort((np.arange(k), e_s))[0])
+        gi = start + s * (len(idx) // k) + int(i_s[s])
+        return fspace.decode([gi])[0], float(e_s[s]), nf, n
+    idx, valid = _span_idx_operands(start, n, 1)
+    i, e, nf = fn(idx, valid, cons_vec)
+    nf = int(nf)
+    if nf == 0:
+        return None, float("inf"), 0, n
+    return fspace.decode([start + int(i)])[0], float(e), nf, n
+
+
+def _pareto_span_jax_factorized(fspace, wl, constraints, c, start, n, shard,
+                                objectives):
+    gemms, scalars = workload_statics(wl, c)
+    cons_vec = _constraint_vec(constraints)
+    sharded = shard is not None and int(shard) > 1
+    if (start, n) == (0, fspace.size) and not sharded:
+        fn = _jax_factorized_full_fn(fspace.axes, gemms, scalars, c,
+                                     objectives)
+        mask, nf = fn(cons_vec)
+        sel = np.nonzero(np.asarray(mask))[0]
+        return fspace.decode(sel), int(nf), n
+    fn = _jax_factorized_span_fn(fspace.axes, gemms, scalars, c, objectives)
+    if sharded:
+        from repro.launch.mesh import make_candidate_mesh
+        k = make_candidate_mesh(shard).devices.size
+        idx, valid = _span_idx_operands(start, n, k * JAX_PARETO_CHUNK)
+        f = _jax_factorized_sharded_fn(fn, k, "mask")
+        mask, f_s = (np.asarray(x) for x in f(idx, valid, cons_vec))
+        nf = int(f_s.sum())
+    else:
+        idx, valid = _span_idx_operands(start, n, JAX_PARETO_CHUNK)
+        mask, nf = fn(idx, valid, cons_vec)
+        mask, nf = np.asarray(mask), int(nf)
+    sel = start + np.nonzero(mask[:n])[0]
+    return fspace.decode(sel), nf, n
+
+
+def _iter_spans(size: int, chunk_size):
+    cs = int(chunk_size) if chunk_size else max(size, 1)
+    for s in range(0, size, cs):
+        yield s, min(cs, size - s)
+
+
+def _search_factorized(fspace, wl, constraints, engine, c, interpret,
+                       shard, chunk_size) -> SearchResult:
+    """Factorized min-EDP driver (one-shot is the single-span case)."""
+    from repro.kernels.ops import dse_search_multi_factorized
+    t0 = time.perf_counter()
+    best = (None, float("inf"))
+    nf = n_wl = 0
+    for s, n in _iter_spans(fspace.size, chunk_size):
+        if engine == "pallas":
+            carry = best[1] if best[0] is not None else None
+            bi, be, bn = dse_search_multi_factorized(
+                fspace, s, n, [wl], [constraints], c, interpret,
+                shard=shard,
+                carry_edp=None if carry is None else [carry])
+            row = fspace.decode([bi[0]])[0] if bi[0] >= 0 else None
+            e, cf = be[0], bn[0]
+        elif engine == "jax":
+            row, e, cf, _ = _edp_span_jax_factorized(
+                fspace, wl, constraints, c, s, n, shard)
+        else:
+            row, e, cf, _ = _edp_span_numpy_factorized(
+                fspace, wl, constraints, c, s, n, shard)
+        nf += cf
+        n_wl += n
+        best = merge_running_best(best, (row, e))
+    return _make_result(best[0], nf, wl, c, fspace.size, n_wl,
+                        time.perf_counter() - t0)
+
+
+def _pareto_factorized(fspace, wl, constraints, engine, c, interpret,
+                       objectives, shard, chunk_size) -> ParetoResult:
+    """Factorized frontier driver (one-shot is the single-span case)."""
+    from repro.kernels.ops import dse_pareto_multi_factorized
+    t0 = time.perf_counter()
+    run_rows, run_met = _empty_run_state()
+    nf = n_wl = 0
+    for s, n in _iter_spans(fspace.size, chunk_size):
+        if engine == "pallas":
+            carry_points = None
+            if len(run_rows):
+                carry_points = [_pallas_front_points(
+                    run_rows, wl, c, interpret, objectives)]
+            (idx, cf), = dse_pareto_multi_factorized(
+                fspace, s, n, [wl], [constraints], c, interpret,
+                objectives=objectives, shard=shard,
+                carry_points=carry_points)
+            cand = fspace.decode(idx)
+        elif engine == "jax":
+            cand, cf, _ = _pareto_span_jax_factorized(
+                fspace, wl, constraints, c, s, n, shard, objectives)
+        else:
+            cand, cf, _ = _pareto_span_numpy_factorized(
+                fspace, wl, constraints, c, s, n, shard, objectives)
+        nf += cf
+        n_wl += n
+        if len(cand):
+            run_rows, run_met = _merge_running_front(
+                run_rows, run_met, cand, wl, constraints, c, objectives)
+    front, met, _ = _pareto_from_rows(run_rows, wl, constraints, c,
+                                      objectives, m=run_met)
+    return ParetoResult(front=front, metrics=met, objectives=objectives,
+                        n_evaluated=fspace.size, n_feasible=nf,
+                        n_workload_evals=n_wl,
+                        wall_time_s=time.perf_counter() - t0)
+
+
+def _workloads_pallas_factorized(wls, names, cons_for, fspace, c, interpret,
+                                 objective, metrics, shard, chunk_size):
+    """Batched factorized driver: every span is one all-workloads decoded
+    launch, with the same per-workload carries as the grid-operand batched
+    driver."""
+    from repro.kernels.ops import (dse_pareto_multi_factorized,
+                                   dse_search_multi_factorized)
+    t0 = time.perf_counter()
+    wl_list = [wls[nm] for nm in names]
+    cons_list = [cons_for(nm) for nm in names]
+    n_wl = 0
+    if objective == "edp":
+        best = {nm: (None, float("inf")) for nm in names}
+        nf = {nm: 0 for nm in names}
+        for s, n in _iter_spans(fspace.size, chunk_size):
+            n_wl += n
+            carry = [best[nm][1] for nm in names]
+            bi, be, bn = dse_search_multi_factorized(
+                fspace, s, n, wl_list, cons_list, c, interpret,
+                shard=shard, carry_edp=carry)
+            for nm, i, e, f in zip(names, bi, be, bn):
+                nf[nm] += f
+                if i >= 0:
+                    best[nm] = (fspace.decode([i])[0], e)
+        wall = time.perf_counter() - t0
+        return {nm: _make_result(best[nm][0], nf[nm], wls[nm], c,
+                                 fspace.size, n_wl, wall)
+                for nm in names}
+
+    run = {nm: _empty_run_state() for nm in names}
+    nf = {nm: 0 for nm in names}
+    for s, n in _iter_spans(fspace.size, chunk_size):
+        n_wl += n
+        carry_points = [
+            _pallas_front_points(run[nm][0], wls[nm], c, interpret, metrics)
+            if len(run[nm][0]) else None
+            for nm in names]
+        per_wl = dse_pareto_multi_factorized(
+            fspace, s, n, wl_list, cons_list, c, interpret,
+            objectives=metrics, shard=shard, carry_points=carry_points)
+        for nm, (idx, f) in zip(names, per_wl):
+            nf[nm] += f
+            if len(idx):
+                run[nm] = _merge_running_front(
+                    run[nm][0], run[nm][1], fspace.decode(idx), wls[nm],
+                    cons_for(nm), c, metrics)
+    wall = time.perf_counter() - t0
+    out = {}
+    for nm in names:
+        front, met, _ = _pareto_from_rows(run[nm][0], wls[nm], cons_for(nm),
+                                          c, metrics, m=run[nm][1])
+        out[nm] = ParetoResult(front=front, metrics=met, objectives=metrics,
+                               n_evaluated=fspace.size, n_feasible=nf[nm],
+                               n_workload_evals=n_wl, wall_time_s=wall)
+    return out
+
+
 def _check_pareto_metrics(engine: str, pareto_metrics) -> tuple:
     metrics = tuple(pareto_metrics)
     unknown = [k for k in metrics if k not in REPORT_METRICS]
@@ -1101,7 +1593,8 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
            c: DeviceConstants = CONSTANTS, interpret: bool = True,
            objective: str = "edp",
            pareto_metrics: tuple = DEFAULT_OBJECTIVES,
-           shard: Optional[int] = None, chunk_size: Optional[int] = None
+           shard: Optional[int] = None, chunk_size: Optional[int] = None,
+           factorized: bool = False, space=None
            ) -> Union[SearchResult, ParetoResult]:
     """Unified search over a config grid.
 
@@ -1139,11 +1632,34 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
         across chunks — peak memory follows the chunk, not the grid.
         Any (shard, chunk_size) combination is byte-identical to the
         one-shot sweep (tests/test_sharded_search.py).
+      factorized: evaluate the grid as a *product space* from per-GEMM
+        axis factor tables (core.factorized) instead of per-point model
+        runs — byte-identical results at a fraction of the work whenever
+        the grid is a Cartesian product (numpy/jax/pallas engines, both
+        objectives, shard/chunk compose; hierarchical and an explicit
+        `grid` are rejected). See the module section above for the math.
+      space: the candidate sets of the factorized product space — a
+        mapping with `build_search_space`'s keys or a FactorizedSpace;
+        defaults to the full 1..n_z space. Requires factorized=True.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; pick from "
                          f"{sorted(ENGINES)}")
     _check_stream_args(shard, chunk_size)
+    if factorized:
+        fspace = _factorized_space(space, grid, n_z, engine, hierarchical)
+        if objective == "edp":
+            return _search_factorized(fspace, wl, constraints, engine, c,
+                                      interpret, shard, chunk_size)
+        if objective != "pareto":
+            raise ValueError(f"unknown objective {objective!r}; "
+                             f"pick 'edp' or 'pareto'")
+        metrics = _check_pareto_metrics(engine, pareto_metrics)
+        return _pareto_factorized(fspace, wl, constraints, engine, c,
+                                  interpret, metrics, shard, chunk_size)
+    if space is not None:
+        raise ValueError("space= requires factorized=True (pass grid= for "
+                         "materialized candidate sets)")
     if grid is None:
         grid = _full_grid(n_z)
     grid = np.asarray(grid)
@@ -1169,12 +1685,16 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
 def _union_prefiltered(chunk, wls, names, cons_for, c, hierarchical):
     """The batched analogue of `_prefiltered`: union of the per-workload
     area/power survivor sets (the kernel still applies each workload's
-    exact constraints)."""
+    exact constraints). One base-column sweep of the chunk covers all
+    workloads; identical (sram, bounds) buckets are deduped
+    (`hw_prefilter_masks`)."""
     if not hierarchical:
         return chunk
+    masks = hw_prefilter_masks(chunk, [wls[name] for name in names],
+                               [cons_for(name) for name in names], c)
     union = np.zeros(len(chunk), dtype=bool)
-    for name in names:
-        union |= hw_prefilter(chunk, wls[name], cons_for(name), c)
+    for mask in masks:
+        union |= mask
     return chunk[union]
 
 
@@ -1256,7 +1776,8 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                      interpret: bool = True, objective: str = "edp",
                      pareto_metrics: tuple = DEFAULT_OBJECTIVES,
                      shard: Optional[int] = None,
-                     chunk_size: Optional[int] = None
+                     chunk_size: Optional[int] = None,
+                     factorized: bool = False, space=None
                      ) -> Dict[str, Union[SearchResult, ParetoResult]]:
     """Batched search: many workloads against one grid.
 
@@ -1273,12 +1794,12 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
     shared). `shard=` / `chunk_size=` stream and fan out exactly as in
     `search` — on pallas each chunk remains one all-workloads launch, with
     per-workload carries (best EDP / running front) composing the chunks.
+    `factorized=True` evaluates a product `space` from axis factor tables
+    exactly as in `search` — on pallas the batched launches decode their
+    candidates on device.
     """
     if not isinstance(wls, Mapping):
         wls = {wl.name: wl for wl in wls}
-    if grid is None:
-        grid = _full_grid(n_z)
-    grid = np.asarray(grid)
     if objective not in ("edp", "pareto"):
         raise ValueError(f"unknown objective {objective!r}; "
                          f"pick 'edp' or 'pareto'")
@@ -1288,17 +1809,34 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
         return constraints[name] if isinstance(constraints, Mapping) \
             else constraints
 
+    if factorized and engine == "pallas":
+        fspace = _factorized_space(space, grid, n_z, engine, hierarchical)
+        names = list(wls)
+        metrics = (_check_pareto_metrics(engine, pareto_metrics)
+                   if objective == "pareto" else None)
+        return _workloads_pallas_factorized(wls, names, cons_for, fspace,
+                                            c, interpret, objective,
+                                            metrics, shard, chunk_size)
     if engine != "pallas":
+        if grid is None and not factorized:
+            grid = _full_grid(n_z)  # materialize once, share across workloads
         out = {name: search(wl, cons_for(name), engine=engine, grid=grid,
-                            hierarchical=hierarchical, c=c,
+                            n_z=n_z, hierarchical=hierarchical, c=c,
                             interpret=interpret, objective=objective,
                             pareto_metrics=pareto_metrics, shard=shard,
-                            chunk_size=chunk_size)
+                            chunk_size=chunk_size, factorized=factorized,
+                            space=space)
                for name, wl in wls.items()}
         total = sum(r.wall_time_s for r in out.values())
         for r in out.values():
             r.wall_time_s = total
         return out
+    if space is not None:
+        raise ValueError("space= requires factorized=True (pass grid= for "
+                         "materialized candidate sets)")
+    if grid is None:
+        grid = _full_grid(n_z)
+    grid = np.asarray(grid)
 
     names = list(wls)
     if objective == "pareto":

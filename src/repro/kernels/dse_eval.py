@@ -36,6 +36,16 @@ through VMEM in (5, BLOCK) tiles. Both wrappers pad + mask internally, so
 arbitrary grid sizes (e.g. DxPTA's pruned candidate sets) work without
 caller-side padding.
 
+Both search-mode kernels also come in a *decoded* (factorized-space)
+variant (`dse_search_decoded` / `dse_pareto_decoded`): when the grid is a
+Cartesian product of per-axis candidate sets, the kernel takes only the
+(5, max_radix) candidate-value matrix plus a [start, end) index span, and
+every lane reconstructs its own config row on device via iota -> mixed-radix
+decode (`_decode_block`) — the (5, G) grid is never materialized on the
+host, and the only per-launch traffic is the per-block reduction output.
+These compose with the same carry operands, so chunked/sharded factorized
+sweeps stream exactly like the grid-operand ones.
+
 `repro.core.search.evaluate_grid` (pure jnp/numpy) is the oracle these are
 tested against (see kernels/ref.py).
 """
@@ -166,23 +176,53 @@ def _dse_kernel(gemms, wl_scalars, c: DeviceConstants, cfg_ref, out_ref):
     out_ref[3, :] = latency
 
 
-def _dse_search_kernel(workloads, c: DeviceConstants,
-                       cfg_ref, mask_ref, cons_ref, carry_ref, out_ref):
-    """Fused feasibility + EDP argmin over one (5, BLOCK) config tile.
+def _decode_block(radices, axes_ref, meta_ref):
+    """On-device candidate generation: one block's configs from its index.
 
-    workloads: static tuple of (gemms, wl_scalars) pairs; cons_ref holds the
-    dynamic (W, 4) [area, power, energy, latency] bounds; carry_ref the
-    (W, 1) best EDP carried in from earlier chunks of a streamed sweep
-    (+inf when there is none). Emits SEARCH_ROWS rows per workload:
-    block-best EDP, its launch-local config index — or CARRY_IDX when the
-    carried best wins or exactly ties (the carry precedes every config of
-    this launch, so ties go to it, preserving the first-hit rule) — and the
-    block feasible count.
+    The factorized kernels never see a (5, G) config operand — each lane
+    reconstructs its own candidate row from the launch's base offset plus
+    the per-axis candidate vectors:
+
+      global index = meta[0] (chunk base) + program_id * BLOCK + lane,
+
+    mixed-radix decoded with the static `radices` (meshgrid axis order
+    t, c, v, h, lambda — N_lambda fastest) via the same
+    core.factorized.decode_digits the host engines use — host and device
+    decodes cannot diverge — then mapped to candidate values with a
+    one-hot select over axes_ref rows (gather-free, so the decode stays
+    Mosaic-plausible). Lanes past meta[1] (the chunk's exclusive end) — the
+    padded tail of the last block, or indices past the space — fall back to
+    all-ones configs (valid model inputs) and are masked out of every
+    reduction. Out-of-range d_t digits from such lanes miss every one-hot
+    arm and land on the same all-ones fallback.
+
+    Returns ((n_t, n_c, n_h, n_v, n_lambda) float32 columns, float32 global
+    indices, validity mask). Emitted indices are exact for spaces below
+    2**24 points (float32 mantissa), like every kernel index here.
     """
-    cols = _cfg_cols(cfg_ref)
-    valid = mask_ref[0, :] > 0.0
-    base = (pl.program_id(0) * BLOCK).astype(jnp.float32)
-    idx = base + jax.lax.iota(jnp.float32, cols[0].shape[0])
+    from repro.core.factorized import decode_digits
+
+    t_r, c_r, v_r, h_r, l_r = (int(r) for r in radices)
+    gidx = (meta_ref[0, 0] + pl.program_id(0) * BLOCK
+            + jax.lax.iota(jnp.int32, BLOCK))
+    d_t, d_c, d_v, d_h, d_l = decode_digits(gidx, radices, jnp)
+
+    def pick(row, digit, radix):
+        val = jnp.ones(BLOCK, jnp.float32)
+        for j in range(radix):
+            val = jnp.where(digit == j, axes_ref[row, j], val)
+        return val
+
+    cols = (pick(0, d_t, t_r), pick(1, d_c, c_r), pick(3, d_h, h_r),
+            pick(2, d_v, v_r), pick(4, d_l, l_r))
+    return cols, gidx.astype(jnp.float32), gidx < meta_ref[0, 1]
+
+
+def _search_reduce(workloads, c: DeviceConstants, cols, valid, idx,
+                   cons_ref, carry_ref, out_ref):
+    """Shared fused feasibility + EDP argmin reduction over one config tile
+    (used by both the grid-operand and the decode kernels — identical math,
+    so the factorized launches are bit-identical per config)."""
     for w, (gemms, wl_scalars) in enumerate(workloads):
         area, power, energy, latency = _config_metrics(
             gemms, wl_scalars, c, *cols)
@@ -200,29 +240,90 @@ def _dse_search_kernel(workloads, c: DeviceConstants,
             ok.astype(jnp.float32))
 
 
+def _dse_search_kernel(workloads, c: DeviceConstants,
+                       cfg_ref, mask_ref, cons_ref, carry_ref, out_ref):
+    """Fused feasibility + EDP argmin over one (5, BLOCK) config tile.
+
+    workloads: static tuple of (gemms, wl_scalars) pairs; cons_ref holds the
+    dynamic (W, 4) [area, power, energy, latency] bounds; carry_ref the
+    (W, 1) best EDP carried in from earlier chunks of a streamed sweep
+    (+inf when there is none). Emits SEARCH_ROWS rows per workload:
+    block-best EDP, its launch-local config index — or CARRY_IDX when the
+    carried best wins or exactly ties (the carry precedes every config of
+    this launch, so ties go to it, preserving the first-hit rule) — and the
+    block feasible count.
+    """
+    cols = _cfg_cols(cfg_ref)
+    valid = mask_ref[0, :] > 0.0
+    base = (pl.program_id(0) * BLOCK).astype(jnp.float32)
+    idx = base + jax.lax.iota(jnp.float32, cols[0].shape[0])
+    _search_reduce(workloads, c, cols, valid, idx, cons_ref, carry_ref,
+                   out_ref)
+
+
+def _dse_search_decode_kernel(workloads, radices, c: DeviceConstants,
+                              axes_ref, meta_ref, cons_ref, carry_ref,
+                              out_ref):
+    """Factorized-space variant of `_dse_search_kernel`: configs decoded on
+    device (see `_decode_block`) instead of streamed in, and the emitted
+    index is the *global* flat-space index (the decode already knows it),
+    so the host wrapper needs no per-shard base bookkeeping."""
+    cols, idx, valid = _decode_block(radices, axes_ref, meta_ref)
+    _search_reduce(workloads, c, cols, valid, idx, cons_ref, carry_ref,
+                   out_ref)
+
+
 def _block_front(objs, ok):
     """(BLOCK,) mask of block-locally non-dominated feasible configs.
 
     objs: tuple of (BLOCK,) objective vectors (minimized); ok: feasibility.
     Infeasible rows get +inf objectives, so they never dominate (inf <= x is
     false) and are excluded from the front by the `ok &`. Exact ties are
-    kept (dominance needs a strict < somewhere). The pairwise pass runs in
-    (DOM_CHUNK, BLOCK) column chunks, a static unroll.
+    kept (dominance needs a strict < somewhere).
+
+    The block is presorted by objective 0 (ascending, +inf last), which
+    makes the pairwise pass triangular: a dominator's objective 0 is <= its
+    victim's, so after the sort only earlier rows can dominate later ones
+    and each (DOM_CHUNK, ·) tile compares its rows against the columns at
+    and after it instead of the whole block — half the comparisons of the
+    old full (DOM_CHUNK, BLOCK) sweep. Rows tied on objective 0 can hide a
+    dominator *behind* its victim; those pairs are skipped, which only
+    grows the emitted candidate superset (the host's float64 refinement
+    restores the exact frontier — same soundness argument as MAX_FRONT
+    truncation). Chunks whose rows are all infeasible (+inf sorts them
+    last) early-exit via lax.cond, so sparse-feasibility blocks pay for the
+    feasible prefix only.
     """
     o = [jnp.where(ok, x, jnp.inf) for x in objs]
     n = o[0].shape[0]
-    dominated = jnp.zeros(n, dtype=bool)
+    order = jnp.argsort(o[0])
+    so = [x[order] for x in o]
+    segments = []
     for s in range(0, n, DOM_CHUNK):
-        le = None
-        lt = None
-        for x in o:
-            xc = x[s:s + DOM_CHUNK]
-            l_ = xc[:, None] <= x[None, :]
-            t_ = xc[:, None] < x[None, :]
-            le = l_ if le is None else (le & l_)
-            lt = t_ if lt is None else (lt | t_)
-        dominated |= jnp.any(le & lt, axis=0)
-    return ok & ~dominated
+        hi = min(s + DOM_CHUNK, n)
+        rows = [x[:hi] for x in so]      # every potential dominator
+        cols = [x[s:hi] for x in so]     # this chunk's candidates
+
+        def tile(rows=rows, cols=cols, s=s, hi=hi):
+            le = None
+            lt = None
+            for rx, cx in zip(rows, cols):
+                l_ = rx[:, None] <= cx[None, :]
+                t_ = rx[:, None] < cx[None, :]
+                le = l_ if le is None else (le & l_)
+                lt = t_ if lt is None else (lt | t_)
+            # Strictly-earlier rows only: sorted row i may dominate sorted
+            # column s + j just when i < s + j.
+            r_i = jax.lax.iota(jnp.int32, hi)
+            c_i = s + jax.lax.iota(jnp.int32, hi - s)
+            return jnp.any(le & lt & (r_i[:, None] < c_i[None, :]), axis=0)
+
+        segments.append(jax.lax.cond(
+            jnp.isfinite(so[0][s]), tile,
+            lambda hi=hi, s=s: jnp.zeros(hi - s, dtype=bool)))
+    dominated = jnp.concatenate(segments)
+    unsorted = jnp.zeros(n, dtype=bool).at[order].set(dominated)
+    return ok & ~unsorted
 
 
 def _carry_dominated(carry_pts, objs):
@@ -244,27 +345,12 @@ def _carry_dominated(carry_pts, objs):
     return jnp.any(le & lt, axis=0)
 
 
-def _dse_pareto_kernel(workloads, objectives, has_carry: bool,
-                       c: DeviceConstants,
-                       cfg_ref, mask_ref, cons_ref, carry_ref, out_ref):
-    """Per-block dominance reduction over one (5, BLOCK) config tile.
-
-    Emits PARETO_ROWS rows per workload: the block's local-front size, its
-    feasible count, then up to MAX_FRONT global config indices of the local
-    non-dominated set (-1 padding). Local fronts are a superset filter —
-    any point dominated inside its block is dominated globally — so the
-    host only merges the per-block candidate lists; the (4, G) metrics
-    array never leaves the device. carry_ref holds (W * CARRY_FRONT, d)
-    running-front objective points from earlier chunks of a streamed sweep
-    (+inf rows when there is no carry): block candidates strictly dominated
-    by a carried point are pruned before emission, so streamed candidate
-    lists stay bounded by the frontier, not the grid. `has_carry` is
-    static: one-shot launches (no carry possible) specialize the whole
-    (CARRY_FRONT, BLOCK) prune away instead of comparing against +inf.
-    """
-    cols = _cfg_cols(cfg_ref)
-    valid = mask_ref[0, :] > 0.0
-    base = (pl.program_id(0) * BLOCK).astype(jnp.float32)
+def _pareto_reduce(workloads, objectives, has_carry: bool,
+                   c: DeviceConstants, cols, valid, base,
+                   cons_ref, carry_ref, out_ref):
+    """Shared per-block dominance reduction body (grid-operand and decode
+    kernels). `base` is the float32 global index of the block's first lane;
+    emitted indices are base + local offset."""
     local = jax.lax.iota(jnp.float32, cols[0].shape[0])
     n = cols[0].shape[0]
     for w, (gemms, wl_scalars) in enumerate(workloads):
@@ -289,6 +375,53 @@ def _dse_pareto_kernel(workloads, objectives, has_carry: bool,
         out_ref[r0 + 0, 0] = jnp.sum(front.astype(jnp.float32))
         out_ref[r0 + 1, 0] = jnp.sum(ok.astype(jnp.float32))
         out_ref[r0 + PARETO_HEADER:r0 + PARETO_ROWS, 0] = gidx
+
+
+def _dse_pareto_kernel(workloads, objectives, has_carry: bool,
+                       c: DeviceConstants,
+                       cfg_ref, mask_ref, cons_ref, carry_ref, out_ref):
+    """Per-block dominance reduction over one (5, BLOCK) config tile.
+
+    Emits PARETO_ROWS rows per workload: the block's local-front size, its
+    feasible count, then up to MAX_FRONT global config indices of the local
+    non-dominated set (-1 padding). Local fronts are a superset filter —
+    any point dominated inside its block is dominated globally — so the
+    host only merges the per-block candidate lists; the (4, G) metrics
+    array never leaves the device. carry_ref holds (W * CARRY_FRONT, d)
+    running-front objective points from earlier chunks of a streamed sweep
+    (+inf rows when there is no carry): block candidates strictly dominated
+    by a carried point are pruned before emission, so streamed candidate
+    lists stay bounded by the frontier, not the grid. `has_carry` is
+    static: one-shot launches (no carry possible) specialize the whole
+    (CARRY_FRONT, BLOCK) prune away instead of comparing against +inf.
+    """
+    cols = _cfg_cols(cfg_ref)
+    valid = mask_ref[0, :] > 0.0
+    base = (pl.program_id(0) * BLOCK).astype(jnp.float32)
+    _pareto_reduce(workloads, objectives, has_carry, c, cols, valid, base,
+                   cons_ref, carry_ref, out_ref)
+
+
+def _dse_pareto_decode_kernel(workloads, objectives, has_carry: bool,
+                              radices, c: DeviceConstants,
+                              axes_ref, meta_ref, cons_ref, carry_ref,
+                              out_ref):
+    """Factorized-space variant of `_dse_pareto_kernel`: configs decoded on
+    device from the chunk base + per-axis candidate vectors, and emitted
+    candidate indices are global flat-space indices."""
+    cols, idx, valid = _decode_block(radices, axes_ref, meta_ref)
+    _pareto_reduce(workloads, objectives, has_carry, c, cols, valid, idx[0],
+                   cons_ref, carry_ref, out_ref)
+
+
+def _decode_rows_kernel(radices, axes_ref, meta_ref, out_ref):
+    """Decode-proof kernel: emits the decoded (5, BLOCK) config columns plus
+    a validity row, so tests can pin the on-device mixed-radix decode
+    against `config_grid` rows directly."""
+    cols, _, valid = _decode_block(radices, axes_ref, meta_ref)
+    for r, col in enumerate(cols):
+        out_ref[r, :] = col
+    out_ref[5, :] = valid.astype(jnp.float32)
 
 
 def _pad_cols(cfg_cols, mask=None):
@@ -416,3 +549,94 @@ def dse_pareto_padded(cfg_cols, mask, cons, carry, *, workloads: tuple,
                                        jnp.float32),
         interpret=interpret,
     )(cfg_cols, mask, cons, carry)
+
+
+# ---------------------------------------------------------------------------
+# Factorized-space launches: on-device candidate generation (no (5, G) grid)
+# ---------------------------------------------------------------------------
+#
+# The decode wrappers take the tiny (5, max_radix) candidate-value matrix
+# plus a (1, 2) int32 [chunk base, chunk end) index span instead of config
+# columns — the kernels reconstruct every candidate row on device
+# (`_decode_block`), so nothing grid-sized ever crosses the host/device
+# boundary in either direction except the per-block reduction rows.
+# `n_blocks` is static (the launch geometry); callers bucket it to a power
+# of two exactly like `_bucketed_cols` buckets grid shapes, so streamed
+# sweeps of varying chunk sizes reuse O(log G) jit entries.
+
+def _axes_meta_specs(axes, w: int, extra):
+    return [pl.BlockSpec(axes.shape, lambda i: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((w, 4), lambda i: (0, 0)),
+            extra]
+
+
+@functools.partial(jax.jit, static_argnames=("radices", "n_blocks",
+                                             "workloads", "constants",
+                                             "interpret"))
+def dse_search_decoded(axes, meta, cons, carry, *, radices: tuple,
+                       n_blocks: int, workloads: tuple,
+                       constants: DeviceConstants, interpret: bool = True):
+    """Fused search over the index span meta = [[start, end)] of a product
+    space with static `radices`; same operand contract and output layout as
+    `dse_search_padded`, except configs are decoded on device and emitted
+    indices are global flat-space indices (no launch-local rebasing)."""
+    w = len(workloads)
+    kernel = functools.partial(_dse_search_decode_kernel, workloads,
+                               tuple(radices), constants)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=_axes_meta_specs(axes, w,
+                                  pl.BlockSpec((w, 1), lambda i: (0, 0))),
+        out_specs=pl.BlockSpec((SEARCH_ROWS * w, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((SEARCH_ROWS * w, n_blocks),
+                                       jnp.float32),
+        interpret=interpret,
+    )(axes, meta, cons, carry)
+
+
+@functools.partial(jax.jit, static_argnames=("radices", "n_blocks",
+                                             "workloads", "objectives",
+                                             "has_carry", "constants",
+                                             "interpret"))
+def dse_pareto_decoded(axes, meta, cons, carry, *, radices: tuple,
+                       n_blocks: int, workloads: tuple, objectives: tuple,
+                       has_carry: bool = True,
+                       constants: DeviceConstants, interpret: bool = True):
+    """Frontier-candidate search over an index span of a product space;
+    same output layout as `dse_pareto_padded` with global candidate
+    indices."""
+    w = len(workloads)
+    d = len(objectives)
+    kernel = functools.partial(_dse_pareto_decode_kernel, workloads,
+                               objectives, has_carry, tuple(radices),
+                               constants)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=_axes_meta_specs(
+            axes, w, pl.BlockSpec((w * CARRY_FRONT, d), lambda i: (0, 0))),
+        out_specs=pl.BlockSpec((PARETO_ROWS * w, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((PARETO_ROWS * w, n_blocks),
+                                       jnp.float32),
+        interpret=interpret,
+    )(axes, meta, cons, carry)
+
+
+@functools.partial(jax.jit, static_argnames=("radices", "n_blocks",
+                                             "interpret"))
+def dse_decode_rows(axes, meta, *, radices: tuple, n_blocks: int,
+                    interpret: bool = True):
+    """(6, n_blocks * BLOCK) [five decoded config rows; validity] for the
+    index span meta = [[start, end)] — the decode-proof kernel the
+    mixed-radix property tests drive."""
+    return pl.pallas_call(
+        functools.partial(_decode_rows_kernel, tuple(radices)),
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec(axes.shape, lambda i: (0, 0)),
+                  pl.BlockSpec((1, 2), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((6, BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((6, n_blocks * BLOCK), jnp.float32),
+        interpret=interpret,
+    )(axes, meta)

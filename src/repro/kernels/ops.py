@@ -380,6 +380,213 @@ def dse_pareto_multi(grid: np.ndarray, wls, constraints_seq,
     return results
 
 
+# ---------------------------------------------------------------------------
+# Factorized-space launches: on-device candidate generation
+# ---------------------------------------------------------------------------
+#
+# The `*_factorized` wrappers mirror `dse_search_multi` / `dse_pareto_multi`
+# over an index span [start, start + count) of a product space
+# (core.factorized.FactorizedSpace) instead of a materialized (G, 5) grid:
+# the only grid-shaped thing that ever exists is on-device, reconstructed
+# lane-by-lane inside the kernels from the (5, max_radix) candidate-value
+# matrix + the span bounds. Returned indices are global flat-space indices.
+
+
+def _axes_operand(space):
+    """((5, max_radix) float32 candidate-value matrix, radices). Short axes
+    are padded with 1.0 — never selected (digits are in range for valid
+    lanes) but harmless if they were."""
+    radices = space.radices
+    arr = np.ones((5, max(radices)), np.float32)
+    for i, a in enumerate(space.axes):
+        arr[i, :len(a)] = a
+    return jnp.asarray(arr), radices
+
+
+def _bucket_blocks(count: int, floor: int = 8) -> int:
+    """Power-of-two block count covering `count` configs (same bucketing
+    rationale as `_bucketed_cols`: bound the jit-cache shapes to O(log G))."""
+    n_blocks = max(floor, -(-count // _dse.BLOCK))
+    return 1 << (n_blocks - 1).bit_length()
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_decoded_fn(kind: str, statics: tuple, k: int, radices: tuple,
+                        n_blocks: int):
+    """Jit-cached shard_map wrapper of a decoded-kernel launch: the (k, 2)
+    per-shard [base, end) spans are sharded over the candidate mesh, the
+    tiny axes/cons/carry operands are replicated, and each shard runs
+    `n_blocks` blocks of its own index range."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_candidate_mesh
+    from repro.parallel.sharding import candidate_spec
+
+    mesh = make_candidate_mesh(k)
+    meta_spec, out_spec = candidate_spec(2, 0), candidate_spec(2, 1)
+
+    if kind == "search":
+        workloads, constants, interpret = statics
+
+        def body(axes, meta_l, cons, carry):
+            return _dse.dse_search_decoded(
+                axes, meta_l, cons, carry, radices=radices,
+                n_blocks=n_blocks, workloads=workloads, constants=constants,
+                interpret=interpret)
+    else:
+        workloads, objectives, has_carry, constants, interpret = statics
+
+        def body(axes, meta_l, cons, carry):
+            return _dse.dse_pareto_decoded(
+                axes, meta_l, cons, carry, radices=radices,
+                n_blocks=n_blocks, workloads=workloads,
+                objectives=objectives, has_carry=has_carry,
+                constants=constants, interpret=interpret)
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(P(None, None), meta_spec,
+                                       P(None, None), P(None, None)),
+                             out_specs=out_spec, check_rep=False))
+
+
+def _check_decode_span(limit: int):
+    """The decode kernels emit *global* indices as float32 (unlike the
+    grid-operand kernels, whose launch-local indices are rebased in int64
+    on the host), so any index at or past 2**24 would silently round to a
+    neighboring config. Refuse instead of corrupting; spaces that big go
+    through the jax/numpy factorized engines (exact int32/int64 indices)."""
+    if limit > 1 << 24:
+        raise ValueError(
+            f"factorized pallas launches address configs by float32 global "
+            f"index, exact only below 2**24; this span reaches {limit}. "
+            f"Use the jax or numpy factorized engines for larger spaces.")
+
+
+def _decoded_launch(space, start: int, count: int, kind: str, statics: tuple,
+                    cons, carry, shard):
+    """Run a decoded-kernel launch over [start, start + count), optionally
+    fanned out over the candidate mesh. Returns (out, blk_lo): the stacked
+    per-block reduction columns and each column's first global index."""
+    axes_cols, radices = _axes_operand(space)
+    limit = min(start + count, space.size)
+    _check_decode_span(limit)
+    if shard is not None and int(shard) > 1:
+        from repro.launch.mesh import make_candidate_mesh
+        k = make_candidate_mesh(shard).devices.size
+        bps = _bucket_blocks(-(-count // k), floor=1)
+        meta = np.zeros((k, 2), np.int32)
+        meta[:, 0] = start + np.arange(k) * bps * _dse.BLOCK
+        meta[:, 1] = limit
+        fn = _sharded_decoded_fn(kind, statics, k, radices, bps)
+        out = np.asarray(fn(axes_cols, jnp.asarray(meta), cons, carry))
+        blk_lo = (np.repeat(meta[:, 0].astype(np.int64), bps)
+                  + np.tile(np.arange(bps, dtype=np.int64), k) * _dse.BLOCK)
+        return out, blk_lo
+    n_blocks = _bucket_blocks(count)
+    meta = jnp.asarray([[start, limit]], jnp.int32)
+    if kind == "search":
+        workloads, constants, interpret = statics
+        out = _dse.dse_search_decoded(
+            axes_cols, meta, cons, carry, radices=radices,
+            n_blocks=n_blocks, workloads=workloads, constants=constants,
+            interpret=interpret)
+    else:
+        workloads, objectives, has_carry, constants, interpret = statics
+        out = _dse.dse_pareto_decoded(
+            axes_cols, meta, cons, carry, radices=radices,
+            n_blocks=n_blocks, workloads=workloads, objectives=objectives,
+            has_carry=has_carry, constants=constants, interpret=interpret)
+    blk_lo = start + np.arange(n_blocks, dtype=np.int64) * _dse.BLOCK
+    return np.asarray(out), blk_lo
+
+
+def dse_search_multi_factorized(space, start: int, count: int, wls,
+                                constraints_seq,
+                                c: DeviceConstants = CONSTANTS,
+                                interpret: bool = True, *, shard=None,
+                                carry_edp=None):
+    """Batched fused search over an index span of a product space.
+
+    Same contract as `dse_search_multi` — (best_idx, best_edp, n_feasible)
+    lists with the -1 / CARRY_IDX sentinels — except candidates live only
+    on device (decoded from `space`) and `best_idx` is a global flat-space
+    index (materialize the winning row with `space.decode`).
+    """
+    workloads = tuple(workload_statics(wl, c) for wl in wls)
+    cons = _constraint_rows(constraints_seq)
+    carry = _search_carry_rows(carry_edp, len(workloads))
+    out, _ = _decoded_launch(space, start, count, "search",
+                             (workloads, c, interpret), cons, carry, shard)
+    best_idx, best_edp, n_feasible = [], [], []
+    for w in range(len(workloads)):
+        edp_b, idx_b, nf_b = out[_dse.SEARCH_ROWS * w:
+                                 _dse.SEARCH_ROWS * (w + 1)]
+        nf = int(round(float(nf_b.sum())))
+        n_feasible.append(nf)
+        # Indices are already global; min EDP with ties to the lowest index
+        # (CARRY_IDX sorts before every real index, so a carried tie wins).
+        jb = np.lexsort((idx_b, edp_b))[0]
+        i = int(idx_b[jb])
+        best_edp.append(float(edp_b[jb]))
+        if nf == 0 and carry_edp is None:
+            best_idx.append(-1)
+            continue
+        best_idx.append(i if i >= 0 else int(_dse.CARRY_IDX))
+    return best_idx, best_edp, n_feasible
+
+
+def dse_pareto_multi_factorized(space, start: int, count: int, wls,
+                                constraints_seq,
+                                c: DeviceConstants = CONSTANTS,
+                                interpret: bool = True,
+                                objectives: tuple = ("area", "power", "edp"),
+                                *, shard=None, carry_points=None):
+    """Batched frontier-candidate search over an index span of a product
+    space; same contract as `dse_pareto_multi` with global flat-space
+    candidate indices."""
+    workloads = tuple(workload_statics(wl, c) for wl in wls)
+    cons = _constraint_rows(constraints_seq)
+    objectives = tuple(objectives)
+    has_carry = carry_points is not None and any(
+        p is not None and len(p) for p in carry_points)
+    carry = _front_carry_rows(carry_points, len(workloads), len(objectives))
+    out, blk_lo = _decoded_launch(
+        space, start, count, "pareto",
+        (workloads, objectives, has_carry, c, interpret), cons, carry,
+        shard)
+    limit = min(start + count, space.size)
+    results = []
+    for w in range(len(workloads)):
+        rows = out[_dse.PARETO_ROWS * w:_dse.PARETO_ROWS * (w + 1)]
+        counts, nfeas_b = rows[0], rows[1]
+        idx = rows[_dse.PARETO_HEADER:]
+        cand = idx[idx >= 0].astype(np.int64)
+        for b in np.nonzero(counts > _dse.MAX_FRONT)[0]:
+            lo = int(blk_lo[b])
+            cand = np.concatenate(
+                [cand, np.arange(lo, min(lo + _dse.BLOCK, limit))])
+        results.append((np.unique(cand),
+                        int(round(float(nfeas_b.sum())))))
+    return results
+
+
+def decode_rows_device(space, start: int, count: int,
+                       interpret: bool = True) -> np.ndarray:
+    """(count, 5) int64 rows of space.to_grid()[start:start+count], decoded
+    *on device* by the Pallas mixed-radix kernel — the testable surface of
+    the in-kernel candidate generation."""
+    axes_cols, radices = _axes_operand(space)
+    n_blocks = max(1, -(-count // _dse.BLOCK))
+    limit = min(start + count, space.size)
+    _check_decode_span(limit)
+    meta = jnp.asarray([[start, limit]], jnp.int32)
+    out = np.asarray(_dse.dse_decode_rows(axes_cols, meta, radices=radices,
+                                          n_blocks=n_blocks,
+                                          interpret=interpret))
+    return out[:5, out[5] > 0.0].T.astype(np.int64)
+
+
 def pallas_grid_search(grid: np.ndarray, wl: Workload, constraints,
                        c: DeviceConstants = CONSTANTS,
                        interpret: bool = True):

@@ -1,0 +1,330 @@
+"""Differential harness for the factorized product-space evaluation (PR 4).
+
+Three layers of pins:
+
+  * the float64 reference combiner (`core.factorized.evaluate_space`) must
+    reproduce `evaluate_grid` on the materialized grid *bit-for-bit* —
+    both the whole-space broadcast form and the index/gather form;
+  * the mixed-radix decode (host and on-device Pallas kernel) must
+    reproduce `config_grid` rows for arbitrary uneven candidate sets,
+    chunk-offset starts and padded last blocks (hypothesis property test);
+  * `search(..., factorized=True)` must be byte-identical to the
+    unfactorized engine on the same grid — every engine, both objectives,
+    sharded + chunked included — and land on the frozen golden numbers on
+    the full 12^5 grid.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover — CI images without hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (Constraints, FactorizedSpace, REPORT_METRICS,
+                        dxpta_search, factorized_evaluate_grid, search,
+                        search_workloads)
+from repro.core.search import evaluate_grid
+from repro.core.paper_workloads import PAPER_WORKLOADS, load
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "dse_12x5.json"
+
+# An uneven, non-pow2, non-contiguous product space (720 configs) for the
+# differential matrix; the full 12^5 space for the golden/full-grid pins.
+SPACE = FactorizedSpace(((1, 2, 3, 4, 5), (1, 2, 3, 4), (2, 4, 6),
+                         (1, 3, 5, 7), (4, 8, 12)))
+
+
+def _assert_same_search(ref, got, label):
+    assert got.best_cfg == ref.best_cfg, label
+    assert got.n_feasible == ref.n_feasible, label
+    assert got.n_evaluated == ref.n_evaluated, label
+    assert got.n_workload_evals == ref.n_workload_evals, label
+    for f in ("area_mm2", "power_w", "energy_j", "latency_s", "edp"):
+        a, b = getattr(ref, f), getattr(got, f)
+        assert (a == b) or (np.isnan(a) and np.isnan(b)), (label, f)
+
+
+def _assert_same_front(ref, got, label):
+    assert np.array_equal(got.front, ref.front), label
+    assert got.n_feasible == ref.n_feasible, label
+    assert got.n_evaluated == ref.n_evaluated, label
+    assert got.n_workload_evals == ref.n_workload_evals, label
+    for k in REPORT_METRICS:
+        assert np.array_equal(got.metrics[k], ref.metrics[k]), (label, k)
+
+
+def _assert_same(objective, ref, got, label):
+    if objective == "edp":
+        _assert_same_search(ref, got, label)
+    else:
+        _assert_same_front(ref, got, label)
+
+
+# ---------------------------------------------------------------------------
+# The float64 reference combiner: bit-identity to evaluate_grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["deit-t", "bert-l"])
+def test_reference_combiner_bit_identical_full_space(name):
+    wl = load(name)
+    fs = FactorizedSpace.full(12)
+    ref = evaluate_grid(fs.to_grid(), wl)
+    fac = factorized_evaluate_grid(fs, wl)
+    for k in REPORT_METRICS:
+        assert np.array_equal(np.asarray(ref[k]), np.asarray(fac[k])), k
+
+
+def test_reference_combiner_bit_identical_index_form():
+    wl = load("deit-s")
+    grid = SPACE.to_grid()
+    ref = evaluate_grid(grid, wl)
+    rng = np.random.default_rng(3)
+    idx = rng.integers(0, SPACE.size, size=200)
+    fac = factorized_evaluate_grid(SPACE, wl, idx=idx)
+    for k in REPORT_METRICS:
+        assert np.array_equal(np.asarray(ref[k])[idx], np.asarray(fac[k])), k
+
+
+# ---------------------------------------------------------------------------
+# Mixed-radix decode: host and on-device, property-tested
+# ---------------------------------------------------------------------------
+
+def _random_space(rng):
+    axes = tuple(tuple(int(v) for v in rng.integers(
+        1, 13, size=int(rng.integers(1, 6))))
+        for _ in range(5))
+    return FactorizedSpace(axes)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.tuples(st.integers(0, 10 ** 6), st.integers(0, 10 ** 6),
+                 st.integers(0, 10 ** 6)))
+def test_host_decode_matches_config_grid(args):
+    seed, start_seed, count_seed = args
+    rng = np.random.default_rng(seed)
+    sp = _random_space(rng)
+    grid = sp.to_grid()
+    start = start_seed % sp.size
+    count = 1 + count_seed % (sp.size - start)
+    assert np.array_equal(sp.rows(start, start + count),
+                          grid[start:start + count])
+    scattered = np.random.default_rng(seed + 1).integers(0, sp.size, 64)
+    assert np.array_equal(sp.decode(scattered), grid[scattered])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.tuples(st.integers(0, 10 ** 6), st.integers(0, 10 ** 6),
+                 st.integers(0, 10 ** 6)))
+def test_device_decode_matches_config_grid(args):
+    # The Pallas iota -> mixed-radix decode must reproduce config_grid rows
+    # for arbitrary (uneven, non-pow2) candidate sets, including
+    # chunk-offset starts and the padded last block (count never aligns to
+    # BLOCK here, so the masked tail is always exercised).
+    from repro.kernels import decode_rows_device
+    seed, start_seed, count_seed = args
+    rng = np.random.default_rng(seed)
+    sp = _random_space(rng)
+    grid = sp.to_grid()
+    start = start_seed % sp.size
+    count = 1 + count_seed % (sp.size - start)
+    rows = decode_rows_device(sp, start, count)
+    assert np.array_equal(rows, grid[start:start + count])
+
+
+def test_device_decode_multi_block_span():
+    # A span crossing several BLOCK boundaries with a ragged tail.
+    from repro.kernels import decode_rows_device
+    sp = FactorizedSpace((tuple(range(1, 13)), tuple(range(1, 13)),
+                          (2, 4, 6, 8), (1, 3, 5, 7, 9, 11), (4, 8, 12)))
+    assert sp.size > 3 * 2048
+    rows = decode_rows_device(sp, 1500, 5000)
+    assert np.array_equal(rows, sp.to_grid()[1500:6500])
+    # a count running past the end of the space clamps to it
+    tail = decode_rows_device(sp, sp.size - 100, 4000)
+    assert np.array_equal(tail, sp.to_grid()[sp.size - 100:])
+
+
+# ---------------------------------------------------------------------------
+# Factorized engines: byte-identity to the unfactorized counterparts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+@pytest.mark.parametrize("engine", ["numpy", "jax", "pallas"])
+def test_factorized_matches_unfactorized(engine, objective):
+    wl = load("deit-t")
+    cons = Constraints()
+    ref = search(wl, cons, engine=engine, grid=SPACE.to_grid(),
+                 objective=objective)
+    got = search(wl, cons, engine=engine, factorized=True, space=SPACE,
+                 objective=objective)
+    _assert_same(objective, ref, got, f"{engine}/{objective}")
+
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+@pytest.mark.parametrize("engine", ["numpy", "jax", "pallas"])
+def test_factorized_streamed_sharded_matches_oneshot(engine, objective):
+    wl = load("deit-s")
+    cons = Constraints()
+    ref = search(wl, cons, engine=engine, factorized=True, space=SPACE,
+                 objective=objective)
+    for shard, cs in ((4, None), (None, 97), (2, 256), (4, SPACE.size)):
+        got = search(wl, cons, engine=engine, factorized=True, space=SPACE,
+                     objective=objective, shard=shard, chunk_size=cs)
+        _assert_same(objective, ref, got,
+                     f"{engine}/{objective}/shard={shard}/chunk={cs}")
+
+
+@pytest.mark.parametrize("engine", ["numpy", "jax", "pallas"])
+def test_factorized_full_grid_matches_golden(engine):
+    # The full 12^5 space must land on the frozen float64 reference winner.
+    committed = json.loads(GOLDEN.read_text())["workloads"]
+    wl = load("deit-b")
+    r = search(wl, Constraints(), engine=engine, factorized=True,
+               chunk_size=65536, shard=2)
+    assert [int(x) for x in r.best_cfg.as_array()] == \
+        committed["deit-b"]["best"]
+    assert r.n_feasible == committed["deit-b"]["n_feasible"]
+    assert float(r.edp) == committed["deit-b"]["edp"]
+
+
+def test_factorized_full_grid_front_matches_golden():
+    committed = json.loads(GOLDEN.read_text())["workloads"]["deit-t"]
+    wl = load("deit-t")
+    r = search(wl, Constraints(), engine="jax", factorized=True,
+               objective="pareto", pareto_metrics=("area", "power", "edp"))
+    assert [[int(x) for x in row] for row in r.front] == committed["front"]
+    for k in REPORT_METRICS:
+        assert [float(v) for v in r.metrics[k]] == \
+            committed["front_metrics"][k]
+
+
+def test_factorized_zero_feasible():
+    impossible = Constraints(area_mm2=1.0, power_w=0.01, energy_mj=1e-9,
+                             latency_ms=1e-9)
+    wl = load("deit-t")
+    for engine in ("numpy", "jax", "pallas"):
+        r = search(wl, impossible, engine=engine, factorized=True,
+                   space=SPACE, shard=2, chunk_size=333)
+        assert not r.feasible and r.n_feasible == 0
+        assert r.n_evaluated == SPACE.size
+        p = search(wl, impossible, engine=engine, factorized=True,
+                   space=SPACE, objective="pareto")
+        assert p.front.shape == (0, 5)
+
+
+def test_factorized_search_workloads_batched():
+    wls = {name: load(name) for name in sorted(PAPER_WORKLOADS)}
+    cons = Constraints()
+    sp = FactorizedSpace.full(6)
+    for objective in ("edp", "pareto"):
+        ref = search_workloads(wls, cons, engine="pallas", n_z=6,
+                               objective=objective)
+        got = search_workloads(wls, cons, engine="pallas", n_z=6,
+                               objective=objective, factorized=True,
+                               space=sp, shard=2, chunk_size=4001)
+        for name in wls:
+            _assert_same(objective, ref[name], got[name],
+                         f"batch/{objective}/{name}")
+
+
+def test_factorized_search_workloads_nonpallas_engines():
+    wls = {name: load(name) for name in ("deit-t", "bert-b")}
+    cons = Constraints()
+    ref = search_workloads(wls, cons, engine="numpy", n_z=6)
+    got = search_workloads(wls, cons, engine="numpy", n_z=6,
+                           factorized=True)
+    for name in wls:
+        _assert_same_search(ref[name], got[name], name)
+
+
+def test_dxpta_search_factorized():
+    wl = load("deit-b")
+    cons = Constraints()
+    ref = dxpta_search(wl, cons, engine="jax")
+    got = dxpta_search(wl, cons, engine="jax", factorized=True)
+    assert got.best_cfg == ref.best_cfg
+    assert got.edp == ref.edp
+
+
+def test_factorized_space_from_mapping_and_validation():
+    sp = FactorizedSpace.from_space(
+        {"n_t": [1, 2], "n_c": [1], "n_h": [3, 4], "n_v": [5],
+         "n_lambda": [6, 7]})
+    assert sp.radices == (2, 1, 1, 2, 2)  # meshgrid order (t, c, v, h, l)
+    assert sp.size == 8
+    grid = sp.to_grid()
+    assert np.array_equal(sp.rows(0, sp.size), grid)
+    with pytest.raises(ValueError, match="non-empty"):
+        FactorizedSpace(((1,), (2,), (), (3,), (4,)))
+
+
+def test_factorized_arg_validation():
+    wl = load("deit-t")
+    with pytest.raises(ValueError, match="engines"):
+        search(wl, engine="python", factorized=True)
+    with pytest.raises(ValueError, match="materialized grid"):
+        search(wl, engine="jax", factorized=True, grid=SPACE.to_grid())
+    with pytest.raises(ValueError, match="hierarchical"):
+        search(wl, engine="jax", factorized=True, hierarchical=True)
+    with pytest.raises(ValueError, match="factorized=True"):
+        search(wl, engine="jax", space=SPACE)
+    with pytest.raises(ValueError, match="factorized=True"):
+        search_workloads({"w": wl}, engine="pallas", space=SPACE)
+
+
+def test_factorized_pallas_rejects_spaces_past_float32_indices():
+    # The decode kernels emit global float32 indices — exact only below
+    # 2**24. A bigger space must refuse up front (the jax/numpy factorized
+    # engines carry exact integer indices and stay available).
+    wl = load("deit-t")
+    big = FactorizedSpace.full(29)
+    assert big.size > 1 << 24
+    with pytest.raises(ValueError, match="2\\*\\*24"):
+        search(wl, Constraints(), engine="pallas", factorized=True,
+               space=big)
+    from repro.kernels.ops import _check_decode_span
+    with pytest.raises(ValueError, match="2\\*\\*24"):
+        _check_decode_span((1 << 24) + 1)
+    _check_decode_span(1 << 24)  # at the bound: largest index is 2**24 - 1
+
+
+def test_hw_prefilter_mask_bit_identical_to_eval_hw():
+    # The amortized prefilter must keep *exactly* the float32
+    # area/power-feasible set the engines' own checks accept: the prefix
+    # replay of eval_hw's component sum is bit-identical, so hierarchical
+    # pruning can never disagree with the unpruned engines at the bound.
+    import jax.numpy as jnp
+    from repro.core import hw_prefilter
+    from repro.core.photonic_model import eval_hw, sram_mb_for_workload
+    grid = SPACE.to_grid()
+    cons = Constraints()
+    for name in ("deit-t", "bert-l"):
+        wl = load(name)
+        sram = sram_mb_for_workload(wl.max_act_bytes)
+        cols = jnp.asarray(grid.T, jnp.float32)
+        area, power = eval_hw(*(cols[i] for i in range(5)),
+                              jnp.float32(sram), xp=jnp)
+        ref = np.asarray((area < cons.area_mm2) & (power < cons.power_w))
+        assert np.array_equal(hw_prefilter(grid, wl, cons), ref), name
+
+
+def test_hw_prefilter_masks_dedupes_buckets():
+    # Satellite: the multi-workload prefilter computes the grid sweep once
+    # and dedupes identical (sram, bounds) buckets; per-workload masks must
+    # match the single-workload API exactly.
+    from repro.core import hw_prefilter, hw_prefilter_masks
+    grid = SPACE.to_grid()
+    cons = Constraints()
+    wls = [load(n) for n in sorted(PAPER_WORKLOADS)]
+    masks = hw_prefilter_masks(grid, wls, [cons] * len(wls))
+    for wl, mask in zip(wls, masks):
+        assert np.array_equal(mask, hw_prefilter(grid, wl, cons))
+    # deit-b and deit-s share the derived SRAM size -> one bucket, and so
+    # byte-identical masks.
+    by_name = dict(zip(sorted(PAPER_WORKLOADS), masks))
+    assert np.array_equal(by_name["deit-b"], by_name["deit-s"])
