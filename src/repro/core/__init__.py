@@ -8,7 +8,9 @@ paper_workloads, and repro.configs for the assigned architectures).
 """
 from .arch_params import (ALG1_DEFAULTS, LT_BASE, LT_LARGE, PAPER_CONSTRAINTS,
                           Constraints, PTAConfig, config_grid, iter_configs)
-from .factorized import FactorizedSpace, factorized_evaluate_grid
+from .factorized import (FactorizedSpace, SlabBoundEvaluator,
+                         factorized_evaluate_grid, slab_bounding_span,
+                         slab_indices, slab_size, slab_spans)
 from .paper_workloads import PAPER_WORKLOADS
 from .pareto import (DEFAULT_OBJECTIVES, dominates, merge_fronts,
                      pareto_front, pareto_mask, pareto_search_refined)

@@ -63,6 +63,15 @@ decode candidate rows on device from the chunk base + per-axis vectors),
 and results stay byte-identical to the unfactorized engines because the
 combine replays the same float ops per element. Composes with `shard=` /
 `chunk_size=`; tests/test_factorized.py pins the equivalence.
+
+Finally, `prune="bound"` (factorized engines, both objectives) stops
+evaluating the space point-by-point at all: a significance-ordered
+branch-and-bound recursion prices whole mixed-radix slabs with admissible
+interval lower bounds (core.factorized.SlabBoundEvaluator) and discards
+every slab that cannot contain the winner (or a frontier member) before
+any engine sees it — winners and frontiers stay byte-identical to the
+unpruned sweep, with the skipped volume reported in `n_pruned`.
+tests/test_bnb.py pins the equivalence and the bound soundness.
 """
 from __future__ import annotations
 
@@ -99,12 +108,22 @@ class SearchResult:
     n_feasible: int = 0
     n_workload_evals: int = 0
     wall_time_s: float = 0.0
+    # Bound-guided search (prune="bound") counters: configs skipped by the
+    # admissible slab bounds (never evaluated) and slab bound evaluations
+    # performed. Zero on every other path.
+    n_pruned: int = 0
+    n_bounds: int = 0
     # Optional (collect=True): per-candidate metric arrays for Fig. 9 scatter.
     history: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def feasible(self) -> bool:
         return self.best_cfg is not None
+
+    @property
+    def pruned_fraction(self) -> float:
+        """Fraction of the candidate space the bound pruning skipped."""
+        return self.n_pruned / max(self.n_evaluated, 1)
 
 
 @dataclasses.dataclass
@@ -125,10 +144,18 @@ class ParetoResult:
     n_feasible: int = 0
     n_workload_evals: int = 0
     wall_time_s: float = 0.0
+    # Bound-guided search counters, as on SearchResult.
+    n_pruned: int = 0
+    n_bounds: int = 0
 
     @property
     def size(self) -> int:
         return len(self.front)
+
+    @property
+    def pruned_fraction(self) -> float:
+        """Fraction of the candidate space the bound pruning skipped."""
+        return self.n_pruned / max(self.n_evaluated, 1)
 
     @property
     def feasible(self) -> bool:
@@ -237,7 +264,7 @@ def dxpta_search(wl: Workload, constraints: Constraints = Constraints(),
                  n_z: int = 12, step: int = 2,
                  significance: Optional[Dict[str, SignificanceScore]] = None,
                  align_dims: Optional[Sequence[int]] = None,
-                 prune: bool = True, collect: bool = False,
+                 prune: Union[bool, str] = True, collect: bool = False,
                  c: DeviceConstants = CONSTANTS, engine: str = "python",
                  interpret: bool = True,
                  factorized: bool = False) -> SearchResult:
@@ -250,13 +277,22 @@ def dxpta_search(wl: Workload, constraints: Constraints = Constraints(),
     deliberately drop); `collect=True` requires it. `factorized=True`
     hands the candidate sets to the factorized product-space evaluation
     (numpy/jax/pallas engines) — Alg. 2's search space is a Cartesian
-    product, so it factorizes directly; `prune` is subsumed there (the
-    axis-table combine prices area/power for free).
+    product, so it factorizes directly; boolean `prune` is subsumed there
+    (the axis-table combine prices area/power for free).
+    `prune="bound"` goes one step further: the candidate space is explored
+    by the bound-guided branch-and-bound driver (implies factorized=True;
+    numpy/jax/pallas engines), which skips whole slabs whose admissible
+    lower bounds already violate the constraints or cannot beat the
+    running incumbent — the vectorized realization of the paper's claim
+    that constraint-aware significance-guided search beats sweeping.
     """
     if collect and engine != "python":
         raise ValueError("collect=True (per-candidate history) is only "
                          "implemented by the python engine")
     space = build_search_space(n_z, step, significance, align_dims)
+    if prune == "bound":
+        return search(wl, constraints, engine=engine, factorized=True,
+                      space=space, c=c, interpret=interpret, prune="bound")
     if factorized:
         return search(wl, constraints, engine=engine, factorized=True,
                       space=space, c=c, interpret=interpret)
@@ -1237,8 +1273,24 @@ def _np_factorized_metrics(fspace, wl, c, start, stop):
         fspace, wl, c, idx=np.arange(start, stop, dtype=np.int64))
 
 
+def _merge_best_indexed(best, cand):
+    """Running argmin over (global index, edp) pairs: strictly lower EDP
+    wins, exact EDP ties go to the lower flat-space index — the first-hit
+    rule stated over indices instead of arrival order, so the bound-guided
+    traversal (which may visit slabs out of flat order) composes exactly
+    like the ascending span streams. Index -1 means 'no candidate'."""
+    gi, ge = cand
+    if gi < 0:
+        return best
+    bi, be = best
+    if bi < 0 or ge < be or (ge == be and gi < bi):
+        return cand
+    return best
+
+
 def _edp_span_numpy_factorized(fspace, wl, constraints, c, start, n, shard):
-    best = (None, float("inf"))
+    """(best gidx or -1, its engine EDP, n_feasible, n) over an index span."""
+    best = (-1, float("inf"))
     nf = 0
     for s0, s1 in _span_parts(start, n, shard):
         m = _np_factorized_metrics(fspace, wl, c, s0, s1)
@@ -1249,13 +1301,39 @@ def _edp_span_numpy_factorized(fspace, wl, constraints, c, start, n, shard):
             continue
         edp = np.where(ok, np.asarray(m["edp"]), np.inf)
         i = int(np.argmin(edp))
-        best = merge_running_best(best, (fspace.decode([s0 + i])[0],
-                                         float(edp[i])))
+        best = _merge_best_indexed(best, (s0 + i, float(edp[i])))
     return best[0], best[1], nf, n
+
+
+def _pareto_idx_numpy(fspace, wl, constraints, c, idx_arr, shard,
+                      objectives):
+    """Frontier candidates (gidx array) + feasible count over an explicit
+    ascending flat-index vector, float64 metrics, split per host shard —
+    the gather-form work unit of the bound-guided numpy engine."""
+    cands = []
+    nf = 0
+    for part in _host_shards(np.asarray(idx_arr, np.int64), shard):
+        if len(part) == 0:
+            continue
+        m = factorized_evaluate_grid(fspace, wl, c, idx=part)
+        ok = np.asarray(constraints.satisfied(m["area"], m["power"],
+                                              m["energy"], m["latency"]))
+        f = int(ok.sum())
+        nf += f
+        if f == 0:
+            continue
+        pts = np.stack([np.asarray(m[k], np.float64)[ok]
+                        for k in objectives], axis=1)
+        cands.append(part[ok][pareto_mask(pts)])
+    if not cands:
+        return np.zeros(0, np.int64), nf
+    return np.concatenate(cands), nf
 
 
 def _pareto_span_numpy_factorized(fspace, wl, constraints, c, start, n,
                                   shard, objectives):
+    """(cand gidx array, n_feasible, n) over a contiguous index span (the
+    whole-space span takes the index-free broadcast combine)."""
     cands = []
     nf = 0
     for s0, s1 in _span_parts(start, n, shard):
@@ -1268,11 +1346,10 @@ def _pareto_span_numpy_factorized(fspace, wl, constraints, c, start, n,
             continue
         pts = np.stack([np.asarray(m[k], np.float64)[ok]
                         for k in objectives], axis=1)
-        sel = s0 + np.where(ok)[0][pareto_mask(pts)]
-        cands.append(fspace.decode(sel))
+        cands.append(s0 + np.where(ok)[0][pareto_mask(pts)])
     if not cands:
-        return np.zeros((0, 5), np.int64), nf, n
-    return np.concatenate(cands, axis=0), nf, n
+        return np.zeros(0, np.int64), nf, n
+    return np.concatenate(cands), nf, n
 
 
 @functools.lru_cache(maxsize=64)
@@ -1370,18 +1447,58 @@ def _jax_factorized_sharded_fn(fn, k: int, mode: str):
                              out_specs=out_specs, check_rep=False))
 
 
-def _span_idx_operands(start: int, n: int, multiple: int):
-    """((n_pad,) int32 global indices, (n_pad,) validity) padded to a
-    `multiple` multiple. Padding indices run past the span; the jax gather
-    clamps them and the validity mask retires them, mirroring
-    `_padded_candidate_cols`."""
+def _padded_idx_operands(idx_arr, multiple: int):
+    """((n_pad,) int32 global indices, (n_pad,) validity) for an arbitrary
+    ascending flat-index vector, padded to a `multiple` multiple with the
+    unit count bucketed to a power of two (index vectors of the
+    bound-guided leaves vary in length; bucketing bounds the jitted span
+    fn to O(log n) distinct shapes, mirroring `_bucketed_cols`). Padding
+    lanes repeat the last real index — always decodable — and are retired
+    by the validity mask."""
     import jax.numpy as jnp
-    n_pad = n + (-n) % multiple
-    lane = np.arange(n_pad, dtype=np.int32)
-    return jnp.asarray(start + lane), jnp.asarray(lane < n)
+    idx_arr = np.asarray(idx_arr, np.int32)
+    n = len(idx_arr)
+    units = max(1, -(-n // multiple))
+    units = 1 << (units - 1).bit_length()
+    n_pad = units * multiple
+    out = np.full(n_pad, idx_arr[-1] if n else 0, np.int32)
+    out[:n] = idx_arr
+    valid = np.zeros(n_pad, bool)
+    valid[:n] = True
+    return jnp.asarray(out), jnp.asarray(valid)
+
+
+def _jax_factorized_idx_argmin(fspace, wl, constraints, c, idx_arr, shard):
+    """Fused jax argmin over an explicit ascending flat-index vector (the
+    gather-form work unit — contiguous spans and bound-guided slab leaves
+    alike). Returns (best gidx or -1, its EDP, n_feasible)."""
+    import jax.numpy as jnp
+    gemms, scalars = workload_statics(wl, c)
+    cons_vec = _constraint_vec(constraints)
+    fn = _jax_factorized_span_fn(fspace.axes, gemms, scalars, c, None)
+    sharded = shard is not None and int(shard) > 1
+    if sharded:
+        from repro.launch.mesh import make_candidate_mesh
+        k = make_candidate_mesh(shard).devices.size
+        idx, valid = _padded_idx_operands(idx_arr, k)
+        f = _jax_factorized_sharded_fn(fn, k, "argmin")
+        i_s, e_s, f_s = (np.asarray(x) for x in f(idx, valid, cons_vec))
+        nf = int(f_s.sum())
+        if nf == 0:
+            return -1, float("inf"), 0
+        s = int(np.lexsort((np.arange(k), e_s))[0])
+        gi = int(np.asarray(idx)[s * (len(idx) // k) + int(i_s[s])])
+        return gi, float(e_s[s]), nf
+    idx, valid = _padded_idx_operands(idx_arr, 1)
+    i, e, nf = fn(idx, valid, cons_vec)
+    nf = int(nf)
+    if nf == 0:
+        return -1, float("inf"), 0
+    return int(np.asarray(idx)[int(i)]), float(e), nf
 
 
 def _edp_span_jax_factorized(fspace, wl, constraints, c, start, n, shard):
+    """(best gidx or -1, its engine EDP, n_feasible, n) over an index span."""
     gemms, scalars = workload_statics(wl, c)
     cons_vec = _constraint_vec(constraints)
     sharded = shard is not None and int(shard) > 1
@@ -1389,31 +1506,59 @@ def _edp_span_jax_factorized(fspace, wl, constraints, c, start, n, shard):
         fn = _jax_factorized_full_fn(fspace.axes, gemms, scalars, c, None)
         i, e, nf = fn(cons_vec)
         nf = int(nf)
-        row = fspace.decode([int(i)])[0] if nf > 0 else None
-        return row, float(e), nf, n
-    fn = _jax_factorized_span_fn(fspace.axes, gemms, scalars, c, None)
+        return (int(i) if nf > 0 else -1), float(e), nf, n
+    idx = np.arange(start, start + n, dtype=np.int32)
+    gi, e, nf = _jax_factorized_idx_argmin(fspace, wl, constraints, c, idx,
+                                           shard)
+    return gi, e, nf, n
+
+
+def _edp_idx_numpy(fspace, wl, constraints, c, idx_arr, shard):
+    """(best gidx or -1, EDP, n_feasible) over an explicit ascending
+    flat-index vector, float64 metrics — the numpy bound-guided leaf."""
+    best = (-1, float("inf"))
+    nf = 0
+    for part in _host_shards(np.asarray(idx_arr, np.int64), shard):
+        if len(part) == 0:
+            continue
+        m = factorized_evaluate_grid(fspace, wl, c, idx=part)
+        ok = np.asarray(constraints.satisfied(m["area"], m["power"],
+                                              m["energy"], m["latency"]))
+        nf += int(ok.sum())
+        if not ok.any():
+            continue
+        edp = np.where(ok, np.asarray(m["edp"]), np.inf)
+        i = int(np.argmin(edp))
+        best = _merge_best_indexed(best, (int(part[i]), float(edp[i])))
+    return best[0], best[1], nf
+
+
+def _jax_factorized_idx_mask(fspace, wl, constraints, c, idx_arr, shard,
+                             objectives):
+    """(cand gidx array, n_feasible) over an explicit ascending flat-index
+    vector via the jitted frontier-candidate mask."""
+    gemms, scalars = workload_statics(wl, c)
+    cons_vec = _constraint_vec(constraints)
+    fn = _jax_factorized_span_fn(fspace.axes, gemms, scalars, c, objectives)
+    sharded = shard is not None and int(shard) > 1
     if sharded:
         from repro.launch.mesh import make_candidate_mesh
         k = make_candidate_mesh(shard).devices.size
-        idx, valid = _span_idx_operands(start, n, k)
-        f = _jax_factorized_sharded_fn(fn, k, "argmin")
-        i_s, e_s, f_s = (np.asarray(x) for x in f(idx, valid, cons_vec))
+        idx, valid = _padded_idx_operands(idx_arr, k * JAX_PARETO_CHUNK)
+        f = _jax_factorized_sharded_fn(fn, k, "mask")
+        mask, f_s = (np.asarray(x) for x in f(idx, valid, cons_vec))
         nf = int(f_s.sum())
-        if nf == 0:
-            return None, float("inf"), 0, n
-        s = int(np.lexsort((np.arange(k), e_s))[0])
-        gi = start + s * (len(idx) // k) + int(i_s[s])
-        return fspace.decode([gi])[0], float(e_s[s]), nf, n
-    idx, valid = _span_idx_operands(start, n, 1)
-    i, e, nf = fn(idx, valid, cons_vec)
-    nf = int(nf)
-    if nf == 0:
-        return None, float("inf"), 0, n
-    return fspace.decode([start + int(i)])[0], float(e), nf, n
+    else:
+        idx, valid = _padded_idx_operands(idx_arr, JAX_PARETO_CHUNK)
+        mask, nf = fn(idx, valid, cons_vec)
+        mask, nf = np.asarray(mask), int(nf)
+    # Padding lanes are invalid, hence infeasible, hence never masked in.
+    return np.asarray(idx)[mask].astype(np.int64), nf
 
 
 def _pareto_span_jax_factorized(fspace, wl, constraints, c, start, n, shard,
                                 objectives):
+    """(cand gidx array, n_feasible, n) over a contiguous index span."""
     gemms, scalars = workload_statics(wl, c)
     cons_vec = _constraint_vec(constraints)
     sharded = shard is not None and int(shard) > 1
@@ -1421,22 +1566,11 @@ def _pareto_span_jax_factorized(fspace, wl, constraints, c, start, n, shard,
         fn = _jax_factorized_full_fn(fspace.axes, gemms, scalars, c,
                                      objectives)
         mask, nf = fn(cons_vec)
-        sel = np.nonzero(np.asarray(mask))[0]
-        return fspace.decode(sel), int(nf), n
-    fn = _jax_factorized_span_fn(fspace.axes, gemms, scalars, c, objectives)
-    if sharded:
-        from repro.launch.mesh import make_candidate_mesh
-        k = make_candidate_mesh(shard).devices.size
-        idx, valid = _span_idx_operands(start, n, k * JAX_PARETO_CHUNK)
-        f = _jax_factorized_sharded_fn(fn, k, "mask")
-        mask, f_s = (np.asarray(x) for x in f(idx, valid, cons_vec))
-        nf = int(f_s.sum())
-    else:
-        idx, valid = _span_idx_operands(start, n, JAX_PARETO_CHUNK)
-        mask, nf = fn(idx, valid, cons_vec)
-        mask, nf = np.asarray(mask), int(nf)
-    sel = start + np.nonzero(mask[:n])[0]
-    return fspace.decode(sel), nf, n
+        return np.nonzero(np.asarray(mask))[0], int(nf), n
+    idx = np.arange(start, start + n, dtype=np.int32)
+    cand, nf = _jax_factorized_idx_mask(fspace, wl, constraints, c, idx,
+                                        shard, objectives)
+    return cand, nf, n
 
 
 def _iter_spans(size: int, chunk_size):
@@ -1450,27 +1584,27 @@ def _search_factorized(fspace, wl, constraints, engine, c, interpret,
     """Factorized min-EDP driver (one-shot is the single-span case)."""
     from repro.kernels.ops import dse_search_multi_factorized
     t0 = time.perf_counter()
-    best = (None, float("inf"))
+    best = (-1, float("inf"))
     nf = n_wl = 0
     for s, n in _iter_spans(fspace.size, chunk_size):
         if engine == "pallas":
-            carry = best[1] if best[0] is not None else None
+            carry = best[1] if best[0] >= 0 else None
             bi, be, bn = dse_search_multi_factorized(
                 fspace, s, n, [wl], [constraints], c, interpret,
                 shard=shard,
                 carry_edp=None if carry is None else [carry])
-            row = fspace.decode([bi[0]])[0] if bi[0] >= 0 else None
-            e, cf = be[0], bn[0]
+            gi, e, cf = bi[0], be[0], bn[0]
         elif engine == "jax":
-            row, e, cf, _ = _edp_span_jax_factorized(
+            gi, e, cf, _ = _edp_span_jax_factorized(
                 fspace, wl, constraints, c, s, n, shard)
         else:
-            row, e, cf, _ = _edp_span_numpy_factorized(
+            gi, e, cf, _ = _edp_span_numpy_factorized(
                 fspace, wl, constraints, c, s, n, shard)
         nf += cf
         n_wl += n
-        best = merge_running_best(best, (row, e))
-    return _make_result(best[0], nf, wl, c, fspace.size, n_wl,
+        best = _merge_best_indexed(best, (gi, e))
+    row = fspace.decode([best[0]])[0] if best[0] >= 0 else None
+    return _make_result(row, nf, wl, c, fspace.size, n_wl,
                         time.perf_counter() - t0)
 
 
@@ -1491,24 +1625,502 @@ def _pareto_factorized(fspace, wl, constraints, engine, c, interpret,
                 fspace, s, n, [wl], [constraints], c, interpret,
                 objectives=objectives, shard=shard,
                 carry_points=carry_points)
-            cand = fspace.decode(idx)
         elif engine == "jax":
-            cand, cf, _ = _pareto_span_jax_factorized(
+            idx, cf, _ = _pareto_span_jax_factorized(
                 fspace, wl, constraints, c, s, n, shard, objectives)
         else:
-            cand, cf, _ = _pareto_span_numpy_factorized(
+            idx, cf, _ = _pareto_span_numpy_factorized(
                 fspace, wl, constraints, c, s, n, shard, objectives)
         nf += cf
         n_wl += n
-        if len(cand):
+        if len(idx):
             run_rows, run_met = _merge_running_front(
-                run_rows, run_met, cand, wl, constraints, c, objectives)
+                run_rows, run_met, fspace.decode(idx), wl, constraints, c,
+                objectives)
     front, met, _ = _pareto_from_rows(run_rows, wl, constraints, c,
                                       objectives, m=run_met)
     return ParetoResult(front=front, metrics=met, objectives=objectives,
                         n_evaluated=fspace.size, n_feasible=nf,
                         n_workload_evals=n_wl,
                         wall_time_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Bound-guided branch-and-bound over the factorized space (prune="bound")
+#
+# The paper's core claim is that a constraint-aware, significance-guided
+# search beats exhaustive sweeps; the engines above are fast per point but
+# still *touch* every point. `prune="bound"` stops touching them: the
+# mixed-radix space is recursively split into slabs — the Alg. 1-most-
+# significant axes first, so the bounds that matter (area/power explode in
+# N_t, N_c) tighten earliest — and each slab is priced by the admissible
+# interval lower bounds of core.factorized.SlabBoundEvaluator (float64,
+# replaying the reference model's own float ops, so pruning decisions are
+# engine-independent). A slab dies when a constraint lower bound already
+# violates its limit, when its EDP lower bound exceeds the running
+# incumbent (strictly — ties survive, preserving the first-hit rule), or —
+# in pareto mode — when its objective lower-bound corner is strictly
+# dominated by a running-frontier point (then every slab point is strictly
+# dominated too, transitively safe even if that frontier point is later
+# evicted). Surviving slabs at or below the fixed BNB_LEAF size are
+# evaluated exactly by the selected engine: numpy/jax through the
+# gather-form index evaluators, pallas through one decoded slab launch per
+# leaf (the kernels' slab meta masks non-member lanes of the bounding
+# span; the carry operands compose the in-leaf chunk splits — no new
+# kernel semantics). Winners/frontiers are byte-identical to the unpruned
+# factorized sweep (the pruned regions cannot contain a winner or frontier
+# member, and the (EDP, index) merge reproduces argmin tie-breaking
+# exactly); n_feasible / n_workload_evals count only the evaluated
+# survivors, with the skipped volume reported via n_pruned / n_bounds.
+# The slab tree, its traversal order and the leaf size are fixed and
+# engine-independent, so every engine x (shard, chunk_size) setting visits
+# identical survivors and returns identical counters.
+#
+# Caveat (shared with hierarchical=True and the jax/pallas engines): the
+# bounds are float64-admissible; a config whose float32 engine metric sits
+# within one ulp of a constraint bound or an exact EDP tie can classify
+# differently than under float64 — real design points never ride that
+# edge, and the differential tests pin the equivalence on the real grids.
+# ---------------------------------------------------------------------------
+
+BNB_LEAF = 4096  # slab size at or below which a surviving slab is evaluated
+# exactly. Fixed (not a tuning knob surfaced per call) so the pruning
+# schedule — and with it every counter — is identical across engines,
+# shards and chunk sizes.
+
+
+@functools.lru_cache(maxsize=8)
+def _bnb_axis_order(c: DeviceConstants = CONSTANTS):
+    """Meshgrid-axis indices ranked by Alg. 1 significance (descending),
+    ties broken toward the slower-varying (outer) meshgrid axis. The
+    calibrated model ranks (n_t, n_c, n_lambda, n_h, n_v) with n_h == n_v
+    exactly (the component model is symmetric in them); the outer-axis tie
+    break keeps leaf slabs as contiguous as the ranking allows."""
+    from .factorized import AXIS_NAMES
+    scores = observe_significance(c=c)
+    return tuple(sorted(
+        range(5),
+        key=lambda ax: (-(scores[AXIS_NAMES[ax]].s_area
+                          + scores[AXIS_NAMES[ax]].s_power), ax)))
+
+
+def _bnb_split(ranges, order):
+    """Halve the most significant axis that still has width > 1; returns
+    (left, right) child slabs in ascending digit order."""
+    for ax in order:
+        lo, hi = ranges[ax]
+        if hi - lo > 1:
+            mid = (lo + hi) // 2
+            left = ranges[:ax] + ((lo, mid),) + ranges[ax + 1:]
+            right = ranges[:ax] + ((mid, hi),) + ranges[ax + 1:]
+            return left, right
+    return None
+
+
+BNB_BATCH = 16384  # points per leaf-evaluation batch: the incumbent /
+# running frontier refreshes between batches, so later batches prune
+# against near-final bounds. Fixed for the same determinism reason as
+# BNB_LEAF.
+
+BNB_FINE = 16  # slab size floor of the post-incumbent refinement rounds:
+# once a probe batch has seeded the incumbent (or running frontier), the
+# remaining leaves are re-split down to this size — the interval corners
+# of a fine slab nearly touch, so the objective bounds finally bite.
+
+
+def _bnb_infeasible_mask(lbs, constraints):
+    """(B,) mask of slabs whose constraint *lower* bounds already violate
+    a limit — every point inside is infeasible. Used at every pruning
+    stage: the constraint bounds tighten dramatically as slabs narrow, so
+    re-checking them each refinement round is where most of the space
+    dies (the min-corner area/power of a near-singleton slab is almost
+    the exact value)."""
+    return ((np.asarray(lbs["area"]) >= constraints.area_mm2)
+            | (np.asarray(lbs["power"]) >= constraints.power_w)
+            | (np.asarray(lbs["energy"]) >= constraints.energy_j)
+            | (np.asarray(lbs["latency"]) >= constraints.latency_s))
+
+
+def _slab_sizes(ranges_list) -> np.ndarray:
+    if len(ranges_list) == 0:
+        return np.zeros(0, np.int64)
+    arr = np.asarray(ranges_list, np.int64)
+    return np.prod(arr[:, :, 1] - arr[:, :, 0], axis=1)
+
+
+def _slab_first_indices(radices, ranges_list) -> np.ndarray:
+    """(B,) first (lowest) flat index of each slab — the deterministic
+    tie-break key of the best-first leaf ordering."""
+    strides = np.ones(5, np.int64)
+    for i in range(3, -1, -1):
+        strides[i] = strides[i + 1] * int(radices[i + 1])
+    if len(ranges_list) == 0:
+        return np.zeros(0, np.int64)
+    arr = np.asarray(ranges_list, np.int64)
+    return arr[:, :, 0] @ strides
+
+
+def _bnb_descend(fspace, ev, prune_mask_fn, start, start_lbs, leaf_size,
+                 stats, c):
+    """Shared slab-tree descent: process the active set — a (B, 5, 2)
+    digit-range array — level by level. Each level is one *vectorized*
+    `lower_bounds_batch` call plus one vectorized halving of the
+    survivors along the significance order; nothing in the loop is
+    per-slab python. Returns the surviving
+    ((L, 5, 2) leaf array, {metric: (L,) bound arrays})."""
+    order = np.asarray(_bnb_axis_order(c))
+    active, lbs = np.asarray(start, np.int64).reshape(-1, 5, 2), start_lbs
+    leaf_parts = []
+    leaf_lbs = []
+    while len(active):
+        die = prune_mask_fn(lbs)
+        widths = active[:, :, 1] - active[:, :, 0]
+        sizes = np.prod(widths, axis=1)
+        stats["n_pruned"] += int(sizes[die].sum())
+        keep = ~die
+        is_leaf = keep & (sizes <= leaf_size)
+        leaf_parts.append(active[is_leaf])
+        leaf_lbs.append({k: v[is_leaf] for k, v in lbs.items()})
+        sub = active[keep & ~is_leaf]
+        if not len(sub):
+            break
+        # Vectorized significance-ordered halving: each slab splits its
+        # most significant axis with width > 1 (size > leaf_size >= 1
+        # guarantees one exists) at mid = (lo + hi) // 2.
+        wid = (sub[:, :, 1] - sub[:, :, 0])[:, order] > 1
+        ax = order[np.argmax(wid, axis=1)]
+        rows = np.arange(len(sub))
+        lo = sub[rows, ax, 0]
+        hi = sub[rows, ax, 1]
+        mid = (lo + hi) // 2
+        left = sub.copy()
+        left[rows, ax, 1] = mid
+        right = sub.copy()
+        right[rows, ax, 0] = mid
+        active = np.concatenate([left, right])
+        lbs = ev.lower_bounds_batch(active)
+        stats["n_bounds"] += len(active)
+    leaves = (np.concatenate(leaf_parts) if leaf_parts
+              else np.zeros((0, 5, 2), np.int64))
+    out_lbs = {k: (np.concatenate([d[k] for d in leaf_lbs])
+                   if leaf_lbs else np.zeros(0))
+               for k in REPORT_METRICS}
+    return leaves, out_lbs
+
+
+def _bnb_frontier(fspace, ev, constraints, c, stats):
+    """Constraint-driven descent from the whole space to BNB_LEAF leaves.
+
+    Objective pruning (incumbent EDP / frontier dominance) happens later,
+    against the stored leaf bounds — constraints don't move during the
+    search, so splitting the phases costs nothing in pruning power and
+    keeps every level one vectorized bound pass.
+    """
+    from .factorized import full_ranges
+    root = np.asarray([full_ranges(fspace.radices)], np.int64)
+    lbs = ev.lower_bounds_batch(root)
+    stats["n_bounds"] += 1
+    return _bnb_descend(fspace, ev,
+                        lambda b: _bnb_infeasible_mask(b, constraints),
+                        root, lbs, BNB_LEAF, stats, c)
+
+
+def _bnb_order(fspace, ranges_list, lbs, objectives=None) -> np.ndarray:
+    """Deterministic best-first permutation: ascending EDP lower bound
+    (or the objective lower-bound vectors in pareto mode), ties broken by
+    each leaf's first flat index — the evaluation order is a pure
+    function of the slab tree, never of the engine."""
+    first = _slab_first_indices(fspace.radices, ranges_list)
+    keys = ([first, lbs["edp"]] if objectives is None
+            else [first] + [lbs[k] for k in reversed(objectives)])
+    return np.lexsort(tuple(keys))
+
+
+def _bnb_batch_slices(sizes: np.ndarray):
+    """Consecutive [s, e) leaf slices of at most BNB_BATCH total points
+    (a lone bigger leaf still forms its own slice)."""
+    out = []
+    s = 0
+    pts = 0
+    for j, n in enumerate(sizes):
+        if j > s and pts + int(n) > BNB_BATCH:
+            out.append((s, j))
+            s, pts = j, 0
+        pts += int(n)
+    if s < len(sizes):
+        out.append((s, len(sizes)))
+    return out
+
+
+def _bnb_leaf_items(fspace, ranges, chunk_size):
+    """A leaf slab as decoded-launch work items [(start, count, slab), ...]
+    for the pallas span-list driver: the slab's bounding index range,
+    chunked to at most `chunk_size` lanes per launch (the kernel masks
+    non-member lanes, so chunk splits never change membership)."""
+    from .factorized import slab_bounding_span
+    b0, b1 = slab_bounding_span(fspace.radices, ranges)
+    cs = int(chunk_size) if chunk_size else b1 - b0
+    return [(s, min(cs, b1 - s), ranges) for s in range(b0, b1, cs)]
+
+
+def _bnb_eval_edp(engine, fspace, wl, constraints, c, interpret,
+                  ranges_list, shard, chunk_size):
+    """(best gidx or -1, its engine EDP, n_feasible) over one batch of
+    leaf slabs.
+
+    numpy/jax evaluate the batch's ascending concatenated index vector
+    (chunked by `chunk_size`, fanned out by `shard`). pallas picks its
+    launch form per batch: coarse slabs (the probe phase) go through the
+    span-list driver — one decoded launch per leaf over its bounding
+    span, the slab meta masking non-members — while batches of fine
+    refined slabs (whose members are scattered single indices, hopeless
+    as spans) materialize just the survivor rows and reuse the
+    grid-operand kernel, one bucketed launch per chunk. Either way only
+    survivor-sized data ever exists on the host."""
+    from .factorized import slab_indices_batch, slab_size
+    best = (-1, float("inf"))
+    nf = 0
+    if engine == "pallas" and any(slab_size(r) > BNB_FINE
+                                  for r in ranges_list):
+        from repro.kernels.ops import dse_search_spans_factorized
+        for ranges in ranges_list:
+            items = _bnb_leaf_items(fspace, ranges, chunk_size)
+            bi, be, bn = dse_search_spans_factorized(
+                fspace, items, [wl], [constraints], c, interpret,
+                shard=shard)
+            nf += int(bn[0])
+            best = _merge_best_indexed(best, (int(bi[0]), float(be[0])))
+        return best[0], best[1], nf
+    idx = slab_indices_batch(fspace.radices, ranges_list)
+    cs = int(chunk_size) if chunk_size else len(idx)
+    for s in range(0, len(idx), cs):
+        part = idx[s:s + cs]
+        if engine == "pallas":
+            from repro.kernels.ops import dse_search_multi
+            rows = fspace.decode(part)
+            (bi,), (be,), (bn,) = dse_search_multi(
+                rows, [wl], [constraints], c, interpret, shard=shard)
+            gi, e, f = (int(part[bi]) if bi >= 0 else -1), float(be), \
+                int(bn)
+        elif engine == "jax":
+            gi, e, f = _jax_factorized_idx_argmin(fspace, wl, constraints,
+                                                  c, part, shard)
+        else:
+            gi, e, f = _edp_idx_numpy(fspace, wl, constraints, c, part,
+                                      shard)
+        nf += f
+        best = _merge_best_indexed(best, (gi, e))
+    return best[0], best[1], nf
+
+
+def _bnb_eval_pareto(engine, fspace, wl, constraints, c, interpret,
+                     ranges_list, shard, chunk_size, objectives, run_rows):
+    """(cand gidx array, n_feasible) over one batch of leaf slabs; launch
+    forms as in `_bnb_eval_edp`."""
+    from .factorized import slab_indices_batch, slab_size
+    cands = []
+    nf = 0
+    carry_points = None
+    if engine == "pallas" and len(run_rows):
+        carry_points = [_pallas_front_points(run_rows, wl, c, interpret,
+                                             objectives)]
+    if engine == "pallas" and any(slab_size(r) > BNB_FINE
+                                  for r in ranges_list):
+        from repro.kernels.ops import dse_pareto_spans_factorized
+        for ranges in ranges_list:
+            items = _bnb_leaf_items(fspace, ranges, chunk_size)
+            (idx, f), = dse_pareto_spans_factorized(
+                fspace, items, [wl], [constraints], c, interpret,
+                objectives=objectives, shard=shard,
+                carry_points=carry_points)
+            nf += f
+            if len(idx):
+                cands.append(idx)
+        return (np.concatenate(cands) if cands
+                else np.zeros(0, np.int64)), nf
+    idx = slab_indices_batch(fspace.radices, ranges_list)
+    cs = int(chunk_size) if chunk_size else len(idx)
+    for s in range(0, len(idx), cs):
+        part = idx[s:s + cs]
+        if engine == "pallas":
+            from repro.kernels.ops import dse_pareto_multi
+            rows = fspace.decode(part)
+            (local, f), = dse_pareto_multi(
+                rows, [wl], [constraints], c, interpret,
+                objectives=objectives, shard=shard,
+                carry_points=carry_points)
+            cand = part[local]
+        elif engine == "jax":
+            cand, f = _jax_factorized_idx_mask(fspace, wl, constraints, c,
+                                               part, shard, objectives)
+        else:
+            cand, f = _pareto_idx_numpy(fspace, wl, constraints, c, part,
+                                        shard, objectives)
+        nf += f
+        if len(cand):
+            cands.append(cand)
+    return (np.concatenate(cands) if cands else np.zeros(0, np.int64)), nf
+
+
+def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
+                           shard, chunk_size) -> SearchResult:
+    """Bound-guided min-EDP driver.
+
+    Phase 1 (`_bnb_frontier`): constraint-prune the slab tree down to
+    BNB_LEAF-sized leaves with vectorized interval bounds. Phase 2:
+    *probe* — evaluate the most promising leaves (ascending EDP lower
+    bound) until an incumbent exists; *refine* — re-split everything else
+    down to BNB_FINE against the incumbent (`_bnb_descend` again, now
+    with the incumbent-EDP test joined to the constraint test), which is
+    where the bulk of the space dies; *sweep* — evaluate the refined
+    survivors best-first in BNB_BATCH batches, stopping the moment the
+    smallest remaining bound clears the incumbent. The evaluated volume
+    stops growing with the space once the incumbent region is covered,
+    which is what makes the win over streamed sweeps super-linear.
+    """
+    from .factorized import SlabBoundEvaluator
+    t0 = time.perf_counter()
+    ev = SlabBoundEvaluator.from_workload(fspace, wl, c)
+    stats = {"n_pruned": 0, "n_bounds": 0}
+    leaves, lbs = _bnb_frontier(fspace, ev, constraints, c, stats)
+    state = {"inc": float("inf"), "best": (-1, float("inf")),
+             "nf": 0, "n_eval": 0}
+
+    def evaluate(ranges_list, n_points):
+        gi, e, f = _bnb_eval_edp(engine, fspace, wl, constraints, c,
+                                 interpret, ranges_list, shard, chunk_size)
+        state["nf"] += f
+        state["n_eval"] += n_points
+        merged = _merge_best_indexed(state["best"], (gi, e))
+        if merged is not state["best"]:
+            state["best"] = merged
+            # The pruning incumbent is the winner's float64 reference EDP,
+            # so the slab schedule is identical no matter which engine
+            # proposed the winner.
+            cfg = PTAConfig.from_array(fspace.decode([merged[0]])[0])
+            _, _, energy, latency = eval_full(cfg, wl, c)[:4]
+            state["inc"] = calc_edp(energy, latency)
+
+    # Probe: evaluate best-first batches until an incumbent exists (one
+    # batch, unless the most promising leaves turn out infeasible).
+    order = _bnb_order(fspace, leaves, lbs)
+    leaves = leaves[order]
+    lbs = {k: v[order] for k, v in lbs.items()}
+    sizes = _slab_sizes(leaves)
+    slices = _bnb_batch_slices(sizes)
+    bi = 0
+    while bi < len(slices) and state["inc"] == float("inf"):
+        s, e = slices[bi]
+        evaluate(leaves[s:e], int(sizes[s:e].sum()))
+        bi += 1
+    rs = slices[bi][0] if bi < len(slices) else len(leaves)
+
+    # Refine the remainder against the incumbent, then evaluate whatever
+    # survives, best-first — the sorted early-exit stops the sweep the
+    # moment the smallest remaining bound clears the incumbent.
+    ready, rlbs = _bnb_descend(
+        fspace, ev,
+        lambda b: (_bnb_infeasible_mask(b, constraints)
+                   | (np.asarray(b["edp"]) > state["inc"])),
+        leaves[rs:], {k: v[rs:] for k, v in lbs.items()}, BNB_FINE, stats,
+        c)
+    order = _bnb_order(fspace, ready, rlbs)
+    ready = ready[order]
+    edp_lo = rlbs["edp"][order] if len(ready) else np.zeros(0)
+    sizes = _slab_sizes(ready)
+    for s, e in _bnb_batch_slices(sizes):
+        if edp_lo[s] > state["inc"]:
+            # Sorted leaves: once the smallest remaining bound exceeds
+            # the incumbent, everything left is prunable.
+            stats["n_pruned"] += int(sizes[s:].sum())
+            break
+        live = edp_lo[s:e] <= state["inc"]
+        stats["n_pruned"] += int(sizes[s:e][~live].sum())
+        evaluate(ready[s:e][live], int(sizes[s:e][live].sum()))
+    best = state["best"]
+    row = fspace.decode([best[0]])[0] if best[0] >= 0 else None
+    r = _make_result(row, state["nf"], wl, c, fspace.size, state["n_eval"],
+                     time.perf_counter() - t0)
+    r.n_pruned = stats["n_pruned"]
+    r.n_bounds = stats["n_bounds"]
+    return r
+
+
+def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
+                           objectives, shard, chunk_size) -> ParetoResult:
+    """Bound-guided frontier driver: probe the objective-sorted leaves to
+    seed the running (float64-refined) frontier, refine the remainder
+    against it, then evaluate the survivors in batches. A slab is pruned
+    when its objective lower-bound corner is strictly dominated by a
+    running-frontier point — every point of such a slab is strictly
+    dominated too, transitively safe even if that frontier point is
+    later evicted (its evictor dominates the slab as well)."""
+    from .factorized import SlabBoundEvaluator
+    t0 = time.perf_counter()
+    ev = SlabBoundEvaluator.from_workload(fspace, wl, c)
+    stats = {"n_pruned": 0, "n_bounds": 0}
+    leaves, lbs = _bnb_frontier(fspace, ev, constraints, c, stats)
+    state = {"rows": _empty_run_state()[0], "met": _empty_run_state()[1],
+             "pts": np.zeros((0, len(objectives))), "nf": 0, "n_eval": 0}
+
+    def dominated_mask(lbs_arrays):
+        pts = state["pts"]
+        corners = np.stack([np.asarray(lbs_arrays[k], np.float64)
+                            for k in objectives], axis=1)
+        if not len(pts):
+            return np.zeros(len(corners), bool)
+        le = np.all(pts[None, :, :] <= corners[:, None, :], axis=-1)
+        lt = np.any(pts[None, :, :] < corners[:, None, :], axis=-1)
+        return np.any(le & lt, axis=1)
+
+    def evaluate(ranges_list, n_points):
+        idx, f = _bnb_eval_pareto(engine, fspace, wl, constraints, c,
+                                  interpret, ranges_list, shard,
+                                  chunk_size, objectives, state["rows"])
+        state["nf"] += f
+        state["n_eval"] += n_points
+        if len(idx):
+            state["rows"], state["met"] = _merge_running_front(
+                state["rows"], state["met"], fspace.decode(idx), wl,
+                constraints, c, objectives)
+            state["pts"] = (np.stack([state["met"][k] for k in objectives],
+                                     axis=1) if len(state["rows"])
+                            else np.zeros((0, len(objectives))))
+
+    order = _bnb_order(fspace, leaves, lbs, objectives)
+    leaves = leaves[order]
+    lbs = {k: v[order] for k, v in lbs.items()}
+    sizes = _slab_sizes(leaves)
+    slices = _bnb_batch_slices(sizes)
+    bi = 0
+    while bi < len(slices) and not len(state["pts"]):
+        s, e = slices[bi]
+        evaluate(leaves[s:e], int(sizes[s:e].sum()))
+        bi += 1
+    rs = slices[bi][0] if bi < len(slices) else len(leaves)
+    ready, rlbs = _bnb_descend(
+        fspace, ev,
+        lambda b: (_bnb_infeasible_mask(b, constraints)
+                   | dominated_mask(b)),
+        leaves[rs:], {k: v[rs:] for k, v in lbs.items()}, BNB_FINE, stats,
+        c)
+    order = _bnb_order(fspace, ready, rlbs, objectives)
+    ready = ready[order]
+    rlbs = {k: v[order] for k, v in rlbs.items()}
+    sizes = _slab_sizes(ready)
+    for s, e in _bnb_batch_slices(sizes):
+        die = dominated_mask({k: v[s:e] for k, v in rlbs.items()})
+        stats["n_pruned"] += int(sizes[s:e][die].sum())
+        if not die.all():
+            evaluate(ready[s:e][~die], int(sizes[s:e][~die].sum()))
+    front, met, _ = _pareto_from_rows(state["rows"], wl, constraints, c,
+                                      objectives, m=state["met"])
+    return ParetoResult(front=front, metrics=met, objectives=objectives,
+                        n_evaluated=fspace.size, n_feasible=state["nf"],
+                        n_workload_evals=state["n_eval"],
+                        wall_time_s=time.perf_counter() - t0,
+                        n_pruned=stats["n_pruned"],
+                        n_bounds=stats["n_bounds"])
 
 
 def _workloads_pallas_factorized(wls, names, cons_for, fspace, c, interpret,
@@ -1587,6 +2199,19 @@ def _check_stream_args(shard, chunk_size):
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size!r}")
 
 
+def _check_prune_arg(prune, factorized):
+    if prune is None:
+        return
+    if prune != "bound":
+        raise ValueError(f"unknown prune mode {prune!r}; the engine layer "
+                         f"supports prune='bound' (branch-and-bound slab "
+                         f"pruning) or None")
+    if not factorized:
+        raise ValueError("prune='bound' prices slabs of a product space "
+                         "via the factorized axis tables; it requires "
+                         "factorized=True (numpy/jax/pallas engines)")
+
+
 def search(wl: Workload, constraints: Constraints = Constraints(), *,
            engine: str = "numpy", grid: Optional[np.ndarray] = None,
            n_z: int = 12, hierarchical: bool = False,
@@ -1594,7 +2219,8 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
            objective: str = "edp",
            pareto_metrics: tuple = DEFAULT_OBJECTIVES,
            shard: Optional[int] = None, chunk_size: Optional[int] = None,
-           factorized: bool = False, space=None
+           factorized: bool = False, space=None,
+           prune: Optional[str] = None
            ) -> Union[SearchResult, ParetoResult]:
     """Unified search over a config grid.
 
@@ -1641,20 +2267,42 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
       space: the candidate sets of the factorized product space — a
         mapping with `build_search_space`'s keys or a FactorizedSpace;
         defaults to the full 1..n_z space. Requires factorized=True.
+      prune: "bound" switches the factorized engines to the bound-guided
+        branch-and-bound driver: the space is recursively split into
+        slabs (most Alg. 1-significant axes first), each slab priced by
+        the admissible interval lower bounds of
+        `core.factorized.SlabBoundEvaluator`, and only the slabs that
+        survive the constraint / incumbent-EDP / frontier-dominance
+        pruning are ever evaluated. Winners and frontiers stay
+        byte-identical to the unpruned sweep; `n_feasible` and
+        `n_workload_evals` count the evaluated survivors only, with the
+        skipped volume in `n_pruned` (see `SearchResult.pruned_fraction`).
+        Composes with `shard=` / `chunk_size=` without changing the slab
+        tree, so counters match across every setting. Requires
+        factorized=True.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; pick from "
                          f"{sorted(ENGINES)}")
     _check_stream_args(shard, chunk_size)
+    _check_prune_arg(prune, factorized)
     if factorized:
         fspace = _factorized_space(space, grid, n_z, engine, hierarchical)
         if objective == "edp":
+            if prune == "bound":
+                return _search_factorized_bnb(fspace, wl, constraints,
+                                              engine, c, interpret, shard,
+                                              chunk_size)
             return _search_factorized(fspace, wl, constraints, engine, c,
                                       interpret, shard, chunk_size)
         if objective != "pareto":
             raise ValueError(f"unknown objective {objective!r}; "
                              f"pick 'edp' or 'pareto'")
         metrics = _check_pareto_metrics(engine, pareto_metrics)
+        if prune == "bound":
+            return _pareto_factorized_bnb(fspace, wl, constraints, engine,
+                                          c, interpret, metrics, shard,
+                                          chunk_size)
         return _pareto_factorized(fspace, wl, constraints, engine, c,
                                   interpret, metrics, shard, chunk_size)
     if space is not None:
@@ -1777,7 +2425,8 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                      pareto_metrics: tuple = DEFAULT_OBJECTIVES,
                      shard: Optional[int] = None,
                      chunk_size: Optional[int] = None,
-                     factorized: bool = False, space=None
+                     factorized: bool = False, space=None,
+                     prune: Optional[str] = None
                      ) -> Dict[str, Union[SearchResult, ParetoResult]]:
     """Batched search: many workloads against one grid.
 
@@ -1796,7 +2445,10 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
     per-workload carries (best EDP / running front) composing the chunks.
     `factorized=True` evaluates a product `space` from axis factor tables
     exactly as in `search` — on pallas the batched launches decode their
-    candidates on device.
+    candidates on device. `prune="bound"` runs the bound-guided
+    branch-and-bound driver per workload (the slab tree is specialized by
+    each workload's bounds and incumbent, so there is no shared batched
+    launch to fuse — wall time reports the whole batch as usual).
     """
     if not isinstance(wls, Mapping):
         wls = {wl.name: wl for wl in wls}
@@ -1804,10 +2456,28 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
         raise ValueError(f"unknown objective {objective!r}; "
                          f"pick 'edp' or 'pareto'")
     _check_stream_args(shard, chunk_size)
+    _check_prune_arg(prune, factorized)
 
     def cons_for(name):
         return constraints[name] if isinstance(constraints, Mapping) \
             else constraints
+
+    if prune == "bound":
+        # Same argument contract as search(): a materialized grid or the
+        # hierarchical prefilter cannot combine with the factorized slab
+        # pruning — validate here rather than silently searching the
+        # default product space.
+        _factorized_space(space, grid, n_z, engine, hierarchical)
+        out = {name: search(wl, cons_for(name), engine=engine, n_z=n_z,
+                            c=c, interpret=interpret, objective=objective,
+                            pareto_metrics=pareto_metrics, shard=shard,
+                            chunk_size=chunk_size, factorized=True,
+                            space=space, prune="bound")
+               for name, wl in wls.items()}
+        total = sum(r.wall_time_s for r in out.values())
+        for r in out.values():
+            r.wall_time_s = total
+        return out
 
     if factorized and engine == "pallas":
         fspace = _factorized_space(space, grid, n_z, engine, hierarchical)

@@ -61,6 +61,15 @@ from repro.core.photonic_model import DeviceConstants
 
 BLOCK = 2048  # configs per grid step (16 sublane rows x 128 lanes)
 
+# Lane count per grid step of the *decoded search* kernel. Decoded lanes
+# are generated from an iota — no (5, BLOCK) operand tile to stream — so
+# the block can be much wider than the grid-operand kernels': under
+# interpret mode the per-block dispatch overhead dominates the whole
+# launch, and 8x wider blocks cut it 8x (the decoded frontier kernel keeps
+# BLOCK — its pairwise dominance pass is O(block^2)). Mosaic VMEM limits
+# for this width on real TPUs are untested; see ROADMAP open items.
+DECODE_BLOCK = 16384
+
 # Per-workload rows in the fused-search reduction output.
 SEARCH_ROWS = 3  # (best_edp, best_idx, n_feasible)
 
@@ -83,6 +92,12 @@ DOM_CHUNK = 256
 # Frontier mode: carried-in running-front points per workload. +inf padding
 # rows never dominate anything, so any shorter carry is just padded out.
 CARRY_FRONT = 128
+
+# Decoded-kernel meta row: [start, end) of the launch's flat-index span
+# followed by five [lo, hi) digit ranges (meshgrid axis order t, c, v, h,
+# lambda) — the slab the lanes must fall inside to count. Full ranges
+# reduce the slab test to the plain span test.
+META_COLS = 12
 
 
 def _to_i32(x):
@@ -109,17 +124,11 @@ def _ceil_div(a, b):
     return (ai + bi - 1) // bi
 
 
-def _config_metrics(gemms, wl_scalars, c: DeviceConstants,
-                    n_t, n_c, n_h, n_v, n_l):
-    """(area, power, energy, latency) for a (BLOCK,) vector of configs.
-
-    gemms: static python tuple of (m, k, n, count); wl_scalars: static
-    (elec_ops, weight_bytes, act_io_bytes, sram_mb). Shared by the metrics
-    kernel and the fused search kernel.
-    """
-    elec_ops, weight_bytes, act_io_bytes, sram_mb = wl_scalars
-
-    # ---- eval_hw: component model (mirrors photonic_model.py) ----
+def _config_metrics_hw(wl_scalars, c: DeviceConstants,
+                       n_t, n_c, n_h, n_v, n_l):
+    """(area, power) for a config tile — the cheap hardware half of the
+    cost model (mirrors photonic_model.py)."""
+    sram_mb = wl_scalars[3]
     cores = n_t * n_c
     mod_channels = cores * (n_h + n_v) * n_l
     ddots = cores * n_h * n_v
@@ -140,8 +149,15 @@ def _config_metrics(gemms, wl_scalars, c: DeviceConstants,
              + n_t * c.p_tile_fixed
              + c.p_inter_tile_net * n_t * n_t
              + sram_mb * c.p_sram_per_mb + c.p_chip_fixed)
+    return area, power
 
-    # ---- eval_wload: dataflow model (mirrors performance_model.py) ----
+
+def _config_metrics_wl(gemms, wl_scalars, c: DeviceConstants, power,
+                       n_t, n_c, n_h, n_v, n_l):
+    """(energy, latency) for a config tile — the per-GEMM dataflow half of
+    the cost model (mirrors performance_model.py); `power` from
+    `_config_metrics_hw`."""
+    elec_ops, weight_bytes, act_io_bytes, _ = wl_scalars
     total_cycles = jnp.zeros_like(n_t)
     sram_lane_cycles = jnp.zeros_like(n_t)
     lanes = (n_t * n_h + n_v) * n_c * n_l
@@ -159,6 +175,22 @@ def _config_metrics(gemms, wl_scalars, c: DeviceConstants,
     energy = (power * latency
               + c.e_dram_per_byte * (weight_bytes + act_io_bytes)
               + c.e_sram_per_byte * sram_bytes)
+    return energy, latency
+
+
+def _config_metrics(gemms, wl_scalars, c: DeviceConstants,
+                    n_t, n_c, n_h, n_v, n_l):
+    """(area, power, energy, latency) for a (BLOCK,) vector of configs.
+
+    gemms: static python tuple of (m, k, n, count); wl_scalars: static
+    (elec_ops, weight_bytes, act_io_bytes, sram_mb). Shared by the metrics
+    kernel and the fused search kernels (which call the two halves
+    separately, so an all-hw-infeasible block can skip the GEMM loop).
+    """
+    area, power = _config_metrics_hw(wl_scalars, c, n_t, n_c, n_h, n_v,
+                                     n_l)
+    energy, latency = _config_metrics_wl(gemms, wl_scalars, c, power,
+                                         n_t, n_c, n_h, n_v, n_l)
     return area, power, energy, latency
 
 
@@ -176,25 +208,36 @@ def _dse_kernel(gemms, wl_scalars, c: DeviceConstants, cfg_ref, out_ref):
     out_ref[3, :] = latency
 
 
-def _decode_block(radices, axes_ref, meta_ref):
+def _decode_block(radices, axes_ref, meta_ref, block=BLOCK):
     """On-device candidate generation: one block's configs from its index.
 
     The factorized kernels never see a (5, G) config operand — each lane
     reconstructs its own candidate row from the launch's base offset plus
     the per-axis candidate vectors:
 
-      global index = meta[0] (chunk base) + program_id * BLOCK + lane,
+      global index = meta[0, 0] (chunk base) + program_id * BLOCK + lane,
 
     mixed-radix decoded with the static `radices` (meshgrid axis order
     t, c, v, h, lambda — N_lambda fastest) via the same
     core.factorized.decode_digits the host engines use — host and device
-    decodes cannot diverge — then mapped to candidate values with a
-    one-hot select over axes_ref rows (gather-free, so the decode stays
-    Mosaic-plausible). Lanes past meta[1] (the chunk's exclusive end) — the
-    padded tail of the last block, or indices past the space — fall back to
-    all-ones configs (valid model inputs) and are masked out of every
-    reduction. Out-of-range d_t digits from such lanes miss every one-hot
-    arm and land on the same all-ones fallback.
+    decodes cannot diverge — then mapped to candidate values with one
+    clamped gather per axis out of the axes_ref row (the previous one-hot
+    select cost `radix` vector selects per axis; the gather is a single
+    take, which is what makes the decoded engines beat their grid-operand
+    counterparts under interpret mode — Mosaic lowering of the 1-D gather
+    is an open item in ROADMAP.md).
+
+    Validity is a *slab* test, not just a span test: meta rows are
+    [start, end, lo_t, hi_t, lo_c, hi_c, lo_v, hi_v, lo_h, hi_h,
+    lo_l, hi_l] (META_COLS int32 entries) and a lane is valid when its
+    global index sits inside [start, end) *and* every decoded digit sits
+    inside its axis's [lo, hi) range. A contiguous span is the special
+    case of full ranges; the bound-guided (branch-and-bound) search uses
+    the general form to launch one kernel over a pruned slab's bounding
+    index range with the non-member lanes masked out. Invalid lanes (the
+    padded tail of the last block, indices past the space, slab
+    non-members) gather a clamped — still valid, never div-by-zero —
+    candidate value and are masked out of every reduction.
 
     Returns ((n_t, n_c, n_h, n_v, n_lambda) float32 columns, float32 global
     indices, validity mask). Emitted indices are exact for spaces below
@@ -202,42 +245,82 @@ def _decode_block(radices, axes_ref, meta_ref):
     """
     from repro.core.factorized import decode_digits
 
-    t_r, c_r, v_r, h_r, l_r = (int(r) for r in radices)
-    gidx = (meta_ref[0, 0] + pl.program_id(0) * BLOCK
-            + jax.lax.iota(jnp.int32, BLOCK))
-    d_t, d_c, d_v, d_h, d_l = decode_digits(gidx, radices, jnp)
+    gidx = (meta_ref[0, 0] + pl.program_id(0) * block
+            + jax.lax.iota(jnp.int32, block))
+    digits = decode_digits(gidx, radices, jnp)
+    d_t, d_c, d_v, d_h, d_l = digits
 
-    def pick(row, digit, radix):
-        val = jnp.ones(BLOCK, jnp.float32)
-        for j in range(radix):
-            val = jnp.where(digit == j, axes_ref[row, j], val)
-        return val
+    valid = gidx < meta_ref[0, 1]
+    for ax, d in enumerate(digits):
+        valid &= (d >= meta_ref[0, 2 + 2 * ax]) \
+            & (d < meta_ref[0, 3 + 2 * ax])
 
-    cols = (pick(0, d_t, t_r), pick(1, d_c, c_r), pick(3, d_h, h_r),
-            pick(2, d_v, v_r), pick(4, d_l, l_r))
-    return cols, gidx.astype(jnp.float32), gidx < meta_ref[0, 1]
+    def pick(row, digit):
+        return jnp.take(axes_ref[row, :], digit, axis=0, mode="clip")
+
+    cols = (pick(0, d_t), pick(1, d_c), pick(3, d_h),
+            pick(2, d_v), pick(4, d_l))
+    return cols, gidx.astype(jnp.float32), valid
 
 
 def _search_reduce(workloads, c: DeviceConstants, cols, valid, idx,
                    cons_ref, carry_ref, out_ref):
     """Shared fused feasibility + EDP argmin reduction over one config tile
     (used by both the grid-operand and the decode kernels — identical math,
-    so the factorized launches are bit-identical per config)."""
+    so the factorized launches are bit-identical per config).
+
+    Early exits mirror the frontier kernel's all-infeasible chunk skip: a
+    block with no valid lane (the padded tail of a bucketed launch, or a
+    bound-pruned slab's dead bounding-range block) skips the cost model
+    entirely; a block whose valid lanes all violate the cheap area/power
+    half skips the per-GEMM dataflow loop (the in-kernel analogue of the
+    hierarchical prefilter — exact, because feasibility requires the
+    area/power pass anyway); and a block whose lanes are all infeasible
+    skips the argmin/select. Every branch emits exactly what the
+    straight-line code emitted for those blocks — (carried EDP, CARRY_IDX,
+    feasible count) — so the reduction output is byte-identical either
+    way.
+    """
+    any_valid = jnp.any(valid)
     for w, (gemms, wl_scalars) in enumerate(workloads):
-        area, power, energy, latency = _config_metrics(
-            gemms, wl_scalars, c, *cols)
-        ok = (valid
-              & (area < cons_ref[w, 0]) & (power < cons_ref[w, 1])
-              & (energy < cons_ref[w, 2]) & (latency < cons_ref[w, 3]))
-        edp = jnp.where(ok, energy * latency, jnp.inf)
-        i = jnp.argmin(edp)
-        carried = carry_ref[w, 0] <= edp[i]
-        out_ref[SEARCH_ROWS * w + 0, 0] = jnp.where(carried, carry_ref[w, 0],
-                                                    edp[i])
-        out_ref[SEARCH_ROWS * w + 1, 0] = jnp.where(carried, CARRY_IDX,
-                                                    idx[i])
-        out_ref[SEARCH_ROWS * w + 2, 0] = jnp.sum(
-            ok.astype(jnp.float32))
+
+        def live(w=w, gemms=gemms, wl_scalars=wl_scalars):
+            area, power = _config_metrics_hw(wl_scalars, c, *cols)
+            hw_ok = (valid
+                     & (area < cons_ref[w, 0]) & (power < cons_ref[w, 1]))
+
+            def hw_feasible(w=w, gemms=gemms, wl_scalars=wl_scalars):
+                energy, latency = _config_metrics_wl(
+                    gemms, wl_scalars, c, power, *cols)
+                ok = (hw_ok & (energy < cons_ref[w, 2])
+                      & (latency < cons_ref[w, 3]))
+                edp = jnp.where(ok, energy * latency, jnp.inf)
+                nf = jnp.sum(ok.astype(jnp.float32))
+
+                def feasible():
+                    i = jnp.argmin(edp)
+                    carried = carry_ref[w, 0] <= edp[i]
+                    return (jnp.where(carried, carry_ref[w, 0], edp[i]),
+                            jnp.where(carried, CARRY_IDX, idx[i]), nf)
+
+                def infeasible():
+                    return carry_ref[w, 0], jnp.float32(CARRY_IDX), nf
+
+                return jax.lax.cond(jnp.any(ok), feasible, infeasible)
+
+            def hw_dead(w=w):
+                return (carry_ref[w, 0], jnp.float32(CARRY_IDX),
+                        jnp.float32(0.0))
+
+            return jax.lax.cond(jnp.any(hw_ok), hw_feasible, hw_dead)
+
+        def dead(w=w):
+            return carry_ref[w, 0], jnp.float32(CARRY_IDX), jnp.float32(0.0)
+
+        edp_out, idx_out, nf_out = jax.lax.cond(any_valid, live, dead)
+        out_ref[SEARCH_ROWS * w + 0, 0] = edp_out
+        out_ref[SEARCH_ROWS * w + 1, 0] = idx_out
+        out_ref[SEARCH_ROWS * w + 2, 0] = nf_out
 
 
 def _dse_search_kernel(workloads, c: DeviceConstants,
@@ -265,10 +348,12 @@ def _dse_search_decode_kernel(workloads, radices, c: DeviceConstants,
                               axes_ref, meta_ref, cons_ref, carry_ref,
                               out_ref):
     """Factorized-space variant of `_dse_search_kernel`: configs decoded on
-    device (see `_decode_block`) instead of streamed in, and the emitted
-    index is the *global* flat-space index (the decode already knows it),
-    so the host wrapper needs no per-shard base bookkeeping."""
-    cols, idx, valid = _decode_block(radices, axes_ref, meta_ref)
+    device (see `_decode_block`, DECODE_BLOCK lanes per step) instead of
+    streamed in, and the emitted index is the *global* flat-space index
+    (the decode already knows it), so the host wrapper needs no per-shard
+    base bookkeeping."""
+    cols, idx, valid = _decode_block(radices, axes_ref, meta_ref,
+                                     DECODE_BLOCK)
     _search_reduce(workloads, c, cols, valid, idx, cons_ref, carry_ref,
                    out_ref)
 
@@ -556,8 +641,9 @@ def dse_pareto_padded(cfg_cols, mask, cons, carry, *, workloads: tuple,
 # ---------------------------------------------------------------------------
 #
 # The decode wrappers take the tiny (5, max_radix) candidate-value matrix
-# plus a (1, 2) int32 [chunk base, chunk end) index span instead of config
-# columns — the kernels reconstruct every candidate row on device
+# plus a (1, META_COLS) int32 meta row — the [chunk base, chunk end) index
+# span and the slab digit ranges (full ranges = a plain span) — instead of
+# config columns: the kernels reconstruct every candidate row on device
 # (`_decode_block`), so nothing grid-sized ever crosses the host/device
 # boundary in either direction except the per-block reduction rows.
 # `n_blocks` is static (the launch geometry); callers bucket it to a power
@@ -566,7 +652,7 @@ def dse_pareto_padded(cfg_cols, mask, cons, carry, *, workloads: tuple,
 
 def _axes_meta_specs(axes, w: int, extra):
     return [pl.BlockSpec(axes.shape, lambda i: (0, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, META_COLS), lambda i: (0, 0)),
             pl.BlockSpec((w, 4), lambda i: (0, 0)),
             extra]
 
@@ -577,8 +663,9 @@ def _axes_meta_specs(axes, w: int, extra):
 def dse_search_decoded(axes, meta, cons, carry, *, radices: tuple,
                        n_blocks: int, workloads: tuple,
                        constants: DeviceConstants, interpret: bool = True):
-    """Fused search over the index span meta = [[start, end)] of a product
-    space with static `radices`; same operand contract and output layout as
+    """Fused search over the index span (and slab digit ranges) named by
+    the (1, META_COLS) meta row, over a product space with static
+    `radices`; same operand contract and output layout as
     `dse_search_padded`, except configs are decoded on device and emitted
     indices are global flat-space indices (no launch-local rebasing)."""
     w = len(workloads)
@@ -629,13 +716,13 @@ def dse_pareto_decoded(axes, meta, cons, carry, *, radices: tuple,
 def dse_decode_rows(axes, meta, *, radices: tuple, n_blocks: int,
                     interpret: bool = True):
     """(6, n_blocks * BLOCK) [five decoded config rows; validity] for the
-    index span meta = [[start, end)] — the decode-proof kernel the
-    mixed-radix property tests drive."""
+    index span + slab ranges named by the (1, META_COLS) meta row — the
+    decode-proof kernel the mixed-radix property tests drive."""
     return pl.pallas_call(
         functools.partial(_decode_rows_kernel, tuple(radices)),
         grid=(n_blocks,),
         in_specs=[pl.BlockSpec(axes.shape, lambda i: (0, 0)),
-                  pl.BlockSpec((1, 2), lambda i: (0, 0))],
+                  pl.BlockSpec((1, META_COLS), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((6, BLOCK), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((6, n_blocks * BLOCK), jnp.float32),
         interpret=interpret,

@@ -403,10 +403,37 @@ def _axes_operand(space):
     return jnp.asarray(arr), radices
 
 
-def _bucket_blocks(count: int, floor: int = 8) -> int:
+def _meta_rows(radices, bases, limit: int, slab=None) -> np.ndarray:
+    """(len(bases), META_COLS) int32 decode-kernel meta rows: each row is
+    [base, limit) plus the five [lo, hi) slab digit ranges (the whole-space
+    ranges when `slab` is None — reducing the in-kernel slab test to the
+    plain span test)."""
+    from repro.core.factorized import full_ranges
+    ranges = full_ranges(radices) if slab is None else tuple(slab)
+    meta = np.zeros((len(bases), _dse.META_COLS), np.int32)
+    meta[:, 0] = bases
+    meta[:, 1] = limit
+    for ax, (lo, hi) in enumerate(ranges):
+        meta[:, 2 + 2 * ax] = lo
+        meta[:, 3 + 2 * ax] = hi
+    return meta
+
+
+def _slab_member_mask(radices, slab, idx: np.ndarray) -> np.ndarray:
+    """Boolean mask of flat indices whose digits fall inside the slab."""
+    from repro.core.factorized import decode_digits
+    digits = decode_digits(np.asarray(idx, np.int64), radices, np)
+    ok = np.ones(len(idx), bool)
+    for d, (lo, hi) in zip(digits, slab):
+        ok &= (d >= lo) & (d < hi)
+    return ok
+
+
+def _bucket_blocks(count: int, floor: int = 8,
+                   block: int = _dse.BLOCK) -> int:
     """Power-of-two block count covering `count` configs (same bucketing
     rationale as `_bucketed_cols`: bound the jit-cache shapes to O(log G))."""
-    n_blocks = max(floor, -(-count // _dse.BLOCK))
+    n_blocks = max(floor, -(-count // block))
     return 1 << (n_blocks - 1).bit_length()
 
 
@@ -464,27 +491,33 @@ def _check_decode_span(limit: int):
 
 
 def _decoded_launch(space, start: int, count: int, kind: str, statics: tuple,
-                    cons, carry, shard):
+                    cons, carry, shard, slab=None):
     """Run a decoded-kernel launch over [start, start + count), optionally
-    fanned out over the candidate mesh. Returns (out, blk_lo): the stacked
-    per-block reduction columns and each column's first global index."""
+    fanned out over the candidate mesh and optionally masked to a slab's
+    digit ranges. Returns (out, blk_lo): the stacked per-block reduction
+    columns and each column's first global index."""
     axes_cols, radices = _axes_operand(space)
     limit = min(start + count, space.size)
     _check_decode_span(limit)
+    # The decoded search kernel generates its lanes from an iota, so it
+    # runs much wider blocks than the operand-streaming kernels (see
+    # dse_eval.DECODE_BLOCK); the frontier kernel keeps BLOCK (its
+    # dominance pass is quadratic in the block).
+    block = _dse.DECODE_BLOCK if kind == "search" else _dse.BLOCK
     if shard is not None and int(shard) > 1:
         from repro.launch.mesh import make_candidate_mesh
         k = make_candidate_mesh(shard).devices.size
-        bps = _bucket_blocks(-(-count // k), floor=1)
-        meta = np.zeros((k, 2), np.int32)
-        meta[:, 0] = start + np.arange(k) * bps * _dse.BLOCK
-        meta[:, 1] = limit
+        bps = _bucket_blocks(-(-count // k), floor=1, block=block)
+        bases = start + np.arange(k) * bps * block
+        meta = _meta_rows(radices, bases, limit, slab)
         fn = _sharded_decoded_fn(kind, statics, k, radices, bps)
         out = np.asarray(fn(axes_cols, jnp.asarray(meta), cons, carry))
         blk_lo = (np.repeat(meta[:, 0].astype(np.int64), bps)
-                  + np.tile(np.arange(bps, dtype=np.int64), k) * _dse.BLOCK)
+                  + np.tile(np.arange(bps, dtype=np.int64), k) * block)
         return out, blk_lo
-    n_blocks = _bucket_blocks(count)
-    meta = jnp.asarray([[start, limit]], jnp.int32)
+    n_blocks = _bucket_blocks(count, floor=1 if kind == "search" else 8,
+                              block=block)
+    meta = jnp.asarray(_meta_rows(radices, [start], limit, slab))
     if kind == "search":
         workloads, constants, interpret = statics
         out = _dse.dse_search_decoded(
@@ -497,7 +530,7 @@ def _decoded_launch(space, start: int, count: int, kind: str, statics: tuple,
             axes_cols, meta, cons, carry, radices=radices,
             n_blocks=n_blocks, workloads=workloads, objectives=objectives,
             has_carry=has_carry, constants=constants, interpret=interpret)
-    blk_lo = start + np.arange(n_blocks, dtype=np.int64) * _dse.BLOCK
+    blk_lo = start + np.arange(n_blocks, dtype=np.int64) * block
     return np.asarray(out), blk_lo
 
 
@@ -505,19 +538,23 @@ def dse_search_multi_factorized(space, start: int, count: int, wls,
                                 constraints_seq,
                                 c: DeviceConstants = CONSTANTS,
                                 interpret: bool = True, *, shard=None,
-                                carry_edp=None):
+                                carry_edp=None, slab=None):
     """Batched fused search over an index span of a product space.
 
     Same contract as `dse_search_multi` — (best_idx, best_edp, n_feasible)
     lists with the -1 / CARRY_IDX sentinels — except candidates live only
     on device (decoded from `space`) and `best_idx` is a global flat-space
-    index (materialize the winning row with `space.decode`).
+    index (materialize the winning row with `space.decode`). `slab` (five
+    [lo, hi) digit ranges) additionally masks the span's lanes to the
+    slab's members in-kernel — the bound-guided search launches each
+    surviving slab over its bounding index range this way.
     """
     workloads = tuple(workload_statics(wl, c) for wl in wls)
     cons = _constraint_rows(constraints_seq)
     carry = _search_carry_rows(carry_edp, len(workloads))
     out, _ = _decoded_launch(space, start, count, "search",
-                             (workloads, c, interpret), cons, carry, shard)
+                             (workloads, c, interpret), cons, carry, shard,
+                             slab)
     best_idx, best_edp, n_feasible = [], [], []
     for w in range(len(workloads)):
         edp_b, idx_b, nf_b = out[_dse.SEARCH_ROWS * w:
@@ -541,10 +578,13 @@ def dse_pareto_multi_factorized(space, start: int, count: int, wls,
                                 c: DeviceConstants = CONSTANTS,
                                 interpret: bool = True,
                                 objectives: tuple = ("area", "power", "edp"),
-                                *, shard=None, carry_points=None):
+                                *, shard=None, carry_points=None, slab=None):
     """Batched frontier-candidate search over an index span of a product
     space; same contract as `dse_pareto_multi` with global flat-space
-    candidate indices."""
+    candidate indices. `slab` masks the span to a slab's members exactly as
+    in `dse_search_multi_factorized` (an overflowing block's whole-block
+    fallback is clipped back to slab members, so candidate lists never leak
+    lanes the launch was asked to mask)."""
     workloads = tuple(workload_statics(wl, c) for wl in wls)
     cons = _constraint_rows(constraints_seq)
     objectives = tuple(objectives)
@@ -554,7 +594,7 @@ def dse_pareto_multi_factorized(space, start: int, count: int, wls,
     out, blk_lo = _decoded_launch(
         space, start, count, "pareto",
         (workloads, objectives, has_carry, c, interpret), cons, carry,
-        shard)
+        shard, slab)
     limit = min(start + count, space.size)
     results = []
     for w in range(len(workloads)):
@@ -564,23 +604,95 @@ def dse_pareto_multi_factorized(space, start: int, count: int, wls,
         cand = idx[idx >= 0].astype(np.int64)
         for b in np.nonzero(counts > _dse.MAX_FRONT)[0]:
             lo = int(blk_lo[b])
-            cand = np.concatenate(
-                [cand, np.arange(lo, min(lo + _dse.BLOCK, limit))])
+            fallback = np.arange(lo, min(lo + _dse.BLOCK, limit))
+            if slab is not None:
+                fallback = fallback[
+                    _slab_member_mask(space.radices, slab, fallback)]
+            cand = np.concatenate([cand, fallback])
         results.append((np.unique(cand),
                         int(round(float(nfeas_b.sum())))))
     return results
 
 
+# ---------------------------------------------------------------------------
+# Span-list drivers: compose decoded launches over a bound-guided work list
+# ---------------------------------------------------------------------------
+
+def dse_search_spans_factorized(space, items, wls, constraints_seq,
+                                c: DeviceConstants = CONSTANTS,
+                                interpret: bool = True, *, shard=None,
+                                carry_edp=None):
+    """Compose `dse_search_multi_factorized` launches over a work list.
+
+    `items` is a sequence of (start, count, slab) triples in ascending
+    index order (slab None = plain contiguous span) — the surviving leaf
+    slabs of the bound-guided search, or a chunked split of one. Each
+    workload's running best EDP rides between launches through the
+    kernels' existing carry operand, so exact ties keep the earlier item's
+    winner (the global first-hit rule). Returns (best_idx, best_edp,
+    n_feasible) lists like `dse_search_multi_factorized`; `best_idx` is -1
+    when nothing was feasible anywhere (or CARRY_IDX when only the
+    caller's `carry_edp` stands).
+    """
+    w = len(wls)
+    carry = list(carry_edp) if carry_edp is not None \
+        else [float("inf")] * w
+    best_idx = [-1 if carry_edp is None else int(_dse.CARRY_IDX)] * w
+    best_edp = list(carry)
+    n_feasible = [0] * w
+    for start, count, slab in items:
+        bi, be, bn = dse_search_multi_factorized(
+            space, start, count, wls, constraints_seq, c, interpret,
+            shard=shard, carry_edp=carry, slab=slab)
+        for wi in range(w):
+            n_feasible[wi] += bn[wi]
+            if bi[wi] >= 0:  # beat the carry (ties stay with the carry)
+                best_idx[wi], best_edp[wi] = bi[wi], be[wi]
+                carry[wi] = be[wi]
+    return best_idx, best_edp, n_feasible
+
+
+def dse_pareto_spans_factorized(space, items, wls, constraints_seq,
+                                c: DeviceConstants = CONSTANTS,
+                                interpret: bool = True,
+                                objectives: tuple = ("area", "power", "edp"),
+                                *, shard=None, carry_points=None):
+    """Compose `dse_pareto_multi_factorized` launches over a work list of
+    (start, count, slab) triples: per-workload candidate-index unions and
+    summed feasible counts. `carry_points` (the running front at entry)
+    prunes every launch's emissions; candidates proposed by earlier items
+    of the same list are *not* folded into the carry — the union is a
+    candidate superset either way and the caller's float64 refinement
+    restores exactness, identical to the chunked streaming contract."""
+    w = len(wls)
+    cands = [[] for _ in range(w)]
+    n_feasible = [0] * w
+    for start, count, slab in items:
+        per_wl = dse_pareto_multi_factorized(
+            space, start, count, wls, constraints_seq, c, interpret,
+            objectives=objectives, shard=shard, carry_points=carry_points,
+            slab=slab)
+        for wi, (idx, f) in enumerate(per_wl):
+            n_feasible[wi] += f
+            if len(idx):
+                cands[wi].append(idx)
+    return [(np.unique(np.concatenate(cc)) if cc
+             else np.zeros(0, np.int64), f)
+            for cc, f in zip(cands, n_feasible)]
+
+
 def decode_rows_device(space, start: int, count: int,
-                       interpret: bool = True) -> np.ndarray:
+                       interpret: bool = True, slab=None) -> np.ndarray:
     """(count, 5) int64 rows of space.to_grid()[start:start+count], decoded
     *on device* by the Pallas mixed-radix kernel — the testable surface of
-    the in-kernel candidate generation."""
+    the in-kernel candidate generation. With `slab` (five [lo, hi) digit
+    ranges), only the span's slab-member lanes survive the validity mask —
+    the decoded form of `space.decode(slab_indices(...))`."""
     axes_cols, radices = _axes_operand(space)
     n_blocks = max(1, -(-count // _dse.BLOCK))
     limit = min(start + count, space.size)
     _check_decode_span(limit)
-    meta = jnp.asarray([[start, limit]], jnp.int32)
+    meta = jnp.asarray(_meta_rows(radices, [start], limit, slab))
     out = np.asarray(_dse.dse_decode_rows(axes_cols, meta, radices=radices,
                                           n_blocks=n_blocks,
                                           interpret=interpret))

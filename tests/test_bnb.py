@@ -1,0 +1,325 @@
+"""Differential + soundness harness for the bound-guided branch-and-bound
+search (PR 5, `prune="bound"`).
+
+Three layers of pins:
+
+  * every slab interval lower bound is *sound* — at or below the exact
+    minimum of the metric over the slab's enumerated points, in float64
+    and in float32 arithmetic alike (hypothesis property test), with the
+    float64 singleton form bit-identical to the reference combiner;
+  * `search(..., prune="bound")` is byte-identical to the unpruned
+    factorized sweep — winners, frontiers, reported metrics — for every
+    engine x objective x (shard, chunk_size) setting, and its pruning
+    counters are identical across all of those settings (the slab
+    schedule is a pure function of the space + workload + constraints);
+  * the full 12^5 space lands on the frozen golden-reference numbers for
+    all five paper workloads.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover — CI images without hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (Constraints, FactorizedSpace, REPORT_METRICS,
+                        SlabBoundEvaluator, dxpta_search,
+                        factorized_evaluate_grid, search, search_workloads,
+                        slab_bounding_span, slab_indices, slab_size,
+                        slab_spans)
+from repro.core.paper_workloads import PAPER_WORKLOADS, load
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "dse_12x5.json"
+
+# The uneven product space of the factorized differential matrix (720
+# configs — small enough that every engine setting runs in seconds).
+SPACE = FactorizedSpace(((1, 2, 3, 4, 5), (1, 2, 3, 4), (2, 4, 6),
+                        (1, 3, 5, 7), (4, 8, 12)))
+
+
+def _random_space(rng):
+    axes = tuple(tuple(int(v) for v in rng.integers(
+        1, 13, size=int(rng.integers(1, 6))))
+        for _ in range(5))
+    return FactorizedSpace(axes)
+
+
+def _random_ranges(rng, radices):
+    out = []
+    for r in radices:
+        lo = int(rng.integers(0, r))
+        out.append((lo, int(rng.integers(lo + 1, r + 1))))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Slab utilities: spans / indices / bounding span agree
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_slab_index_forms_agree(seed):
+    rng = np.random.default_rng(seed)
+    sp = _random_space(rng)
+    ranges = _random_ranges(rng, sp.radices)
+    idx = slab_indices(sp.radices, ranges)
+    assert len(idx) == slab_size(ranges)
+    from_spans = np.concatenate(
+        [np.arange(s, s + n) for s, n in slab_spans(sp.radices, ranges)])
+    assert np.array_equal(np.sort(from_spans), idx)
+    b0, b1 = slab_bounding_span(sp.radices, ranges)
+    assert b0 == idx[0] and b1 == idx[-1] + 1
+    # members decode to exactly the grid rows inside the digit box
+    rows = sp.decode(idx)
+    grid = sp.to_grid()
+    assert np.array_equal(rows, grid[idx])
+
+
+def test_device_decode_slab_masking():
+    # The Pallas decode kernels' slab meta must keep exactly the slab
+    # members of the bounding span.
+    from repro.kernels import decode_rows_device
+    ranges = ((1, 4), (0, 3), (1, 2), (2, 4), (0, 2))
+    idx = slab_indices(SPACE.radices, ranges)
+    b0, b1 = slab_bounding_span(SPACE.radices, ranges)
+    rows = decode_rows_device(SPACE, b0, b1 - b0, slab=ranges)
+    assert np.array_equal(rows, SPACE.to_grid()[idx])
+
+
+# ---------------------------------------------------------------------------
+# Bound soundness: interval lower bound <= exact min over the slab
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_slab_lower_bounds_sound_float64(seed):
+    rng = np.random.default_rng(seed)
+    sp = _random_space(rng)
+    wl = load("deit-t")
+    ev = SlabBoundEvaluator.from_workload(sp, wl)
+    ref = factorized_evaluate_grid(sp, wl)
+    for _ in range(8):
+        ranges = _random_ranges(rng, sp.radices)
+        idx = slab_indices(sp.radices, ranges)
+        lb = ev.lower_bounds(ranges)
+        for k in REPORT_METRICS:
+            assert lb[k] <= np.min(np.asarray(ref[k])[idx]), (k, ranges)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_slab_lower_bounds_sound_float32(seed):
+    # Same property in a self-consistent float32 pipeline: the interval
+    # combine of a slab must lower-bound its own singleton (exact point)
+    # form on every enumerated member.
+    rng = np.random.default_rng(seed)
+    sp = _random_space(rng)
+    wl = load("deit-s")
+    ev = SlabBoundEvaluator.from_workload(sp, wl, dtype=np.float32)
+    for _ in range(4):
+        ranges = _random_ranges(rng, sp.radices)
+        idx = slab_indices(sp.radices, ranges)
+        lb = ev.lower_bounds(ranges)
+        digits = [np.unravel_index(int(j), sp.radices) for j in idx]
+        pts = [ev.lower_bounds(tuple((int(d), int(d) + 1) for d in dig))
+               for dig in digits]
+        for k in REPORT_METRICS:
+            assert lb[k] <= min(p[k] for p in pts), (k, ranges)
+
+
+def test_singleton_bounds_bit_identical_to_reference():
+    # A width-1 slab degenerates to the exact float64 reference model —
+    # bit-identical, which anchors the whole soundness argument to the
+    # engines' metric space.
+    wl = load("bert-b")
+    ev = SlabBoundEvaluator.from_workload(SPACE, wl)
+    ref = factorized_evaluate_grid(SPACE, wl)
+    rng = np.random.default_rng(7)
+    for j in rng.integers(0, SPACE.size, 40):
+        digits = np.unravel_index(int(j), SPACE.radices)
+        lb = ev.lower_bounds(tuple((int(d), int(d) + 1) for d in digits))
+        for k in REPORT_METRICS:
+            assert lb[k] == float(np.asarray(ref[k])[int(j)]), k
+
+
+def test_batched_bounds_match_scalar_form():
+    # The eager dyadic-table path and the memoized fallback must agree
+    # exactly (non-dyadic ranges force the fallback).
+    wl = load("deit-t")
+    ev = SlabBoundEvaluator.from_workload(SPACE, wl)
+    fallback = SlabBoundEvaluator.from_workload(SPACE, wl)
+    rng = np.random.default_rng(3)
+    batch = [_random_ranges(rng, SPACE.radices) for _ in range(64)]
+    got = ev.lower_bounds_batch(batch)
+    for k in REPORT_METRICS:
+        per_slab = np.array([fallback.lower_bounds(r)[k] for r in batch])
+        assert np.array_equal(got[k], per_slab), k
+
+
+# ---------------------------------------------------------------------------
+# prune="bound": byte-identical to the unpruned factorized sweep
+# ---------------------------------------------------------------------------
+
+def _assert_same_search(ref, got, label):
+    assert got.best_cfg == ref.best_cfg, label
+    for f in ("area_mm2", "power_w", "energy_j", "latency_s", "edp"):
+        a, b = getattr(ref, f), getattr(got, f)
+        assert (a == b) or (np.isnan(a) and np.isnan(b)), (label, f)
+
+
+def _assert_same_front(ref, got, label):
+    assert np.array_equal(got.front, ref.front), label
+    for k in REPORT_METRICS:
+        assert np.array_equal(got.metrics[k], ref.metrics[k]), (label, k)
+
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+@pytest.mark.parametrize("engine", ["numpy", "jax", "pallas"])
+def test_bnb_matches_unpruned(engine, objective):
+    wl = load("deit-t")
+    cons = Constraints()
+    ref = search(wl, cons, engine=engine, factorized=True, space=SPACE,
+                 objective=objective)
+    got = search(wl, cons, engine=engine, factorized=True, space=SPACE,
+                 objective=objective, prune="bound")
+    if objective == "edp":
+        _assert_same_search(ref, got, engine)
+    else:
+        _assert_same_front(ref, got, engine)
+    assert got.n_evaluated == SPACE.size
+    # every config is either evaluated or bound-pruned, never both
+    assert got.n_workload_evals + got.n_pruned == SPACE.size
+    assert 0.0 <= got.pruned_fraction <= 1.0
+
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+def test_bnb_counters_identical_across_engines_and_settings(objective):
+    # The slab schedule is engine-independent (float64 bounds, float64
+    # incumbents), so n_feasible / n_pruned / n_bounds / n_workload_evals
+    # must agree bit-for-bit across engines AND across (shard, chunk)
+    # settings.
+    wl = load("deit-s")
+    cons = Constraints()
+    results = []
+    for engine in ("numpy", "jax", "pallas"):
+        for shard, cs in ((None, None), (4, None), (None, 97), (2, 256)):
+            r = search(wl, cons, engine=engine, factorized=True,
+                       space=SPACE, objective=objective, prune="bound",
+                       shard=shard, chunk_size=cs)
+            results.append(((engine, shard, cs), r))
+    (label0, r0) = results[0]
+    for label, r in results[1:]:
+        assert (r.n_feasible, r.n_pruned, r.n_bounds, r.n_workload_evals) \
+            == (r0.n_feasible, r0.n_pruned, r0.n_bounds,
+                r0.n_workload_evals), (label0, label)
+        if objective == "edp":
+            _assert_same_search(r0, r, label)
+        else:
+            _assert_same_front(r0, r, label)
+
+
+@pytest.mark.parametrize("engine", ["numpy", "jax", "pallas"])
+def test_bnb_full_grid_matches_golden(engine):
+    committed = json.loads(GOLDEN.read_text())["workloads"]
+    wl = load("deit-b")
+    r = search(wl, Constraints(), engine=engine, factorized=True,
+               prune="bound")
+    assert [int(x) for x in r.best_cfg.as_array()] == \
+        committed["deit-b"]["best"]
+    assert float(r.edp) == committed["deit-b"]["edp"]
+    assert r.n_pruned > 0 and r.pruned_fraction > 0.5
+
+
+def test_bnb_full_grid_counters_identical_across_engines():
+    # Survivor n_feasible (and every other schedule counter) on the full
+    # 12^5 grid is engine-independent.
+    wl = load("deit-b")
+    rs = [search(wl, Constraints(), engine=e, factorized=True,
+                 prune="bound") for e in ("numpy", "jax", "pallas")]
+    for r in rs[1:]:
+        assert (r.n_feasible, r.n_pruned, r.n_bounds,
+                r.n_workload_evals) == \
+            (rs[0].n_feasible, rs[0].n_pruned, rs[0].n_bounds,
+             rs[0].n_workload_evals)
+        assert r.best_cfg == rs[0].best_cfg and r.edp == rs[0].edp
+
+
+def test_bnb_golden_all_paper_workloads():
+    committed = json.loads(GOLDEN.read_text())["workloads"]
+    for name in sorted(PAPER_WORKLOADS):
+        r = search(load(name), Constraints(), engine="jax",
+                   factorized=True, prune="bound")
+        if committed[name]["best"] is None:
+            assert not r.feasible, name
+        else:
+            assert [int(x) for x in r.best_cfg.as_array()] == \
+                committed[name]["best"], name
+            assert float(r.edp) == committed[name]["edp"], name
+
+
+def test_bnb_full_grid_front_matches_golden():
+    committed = json.loads(GOLDEN.read_text())["workloads"]["deit-t"]
+    wl = load("deit-t")
+    r = search(wl, Constraints(), engine="jax", factorized=True,
+               objective="pareto", prune="bound",
+               pareto_metrics=("area", "power", "edp"))
+    assert [[int(x) for x in row] for row in r.front] == committed["front"]
+    for k in REPORT_METRICS:
+        assert [float(v) for v in r.metrics[k]] == \
+            committed["front_metrics"][k]
+
+
+def test_bnb_zero_feasible():
+    impossible = Constraints(area_mm2=1.0, power_w=0.01, energy_mj=1e-9,
+                             latency_ms=1e-9)
+    wl = load("deit-t")
+    for engine in ("numpy", "jax", "pallas"):
+        r = search(wl, impossible, engine=engine, factorized=True,
+                   space=SPACE, prune="bound")
+        assert not r.feasible and r.n_feasible == 0
+        assert r.n_evaluated == SPACE.size
+        p = search(wl, impossible, engine=engine, factorized=True,
+                   space=SPACE, objective="pareto", prune="bound")
+        assert p.front.shape == (0, 5)
+
+
+def test_bnb_search_workloads_and_dxpta():
+    wls = {name: load(name) for name in ("deit-t", "bert-b")}
+    cons = Constraints()
+    ref = search_workloads(wls, cons, engine="jax", n_z=6,
+                           factorized=True)
+    got = search_workloads(wls, cons, engine="jax", n_z=6,
+                           factorized=True, prune="bound")
+    for name in wls:
+        _assert_same_search(ref[name], got[name], name)
+    dref = dxpta_search(load("deit-b"), cons, engine="jax",
+                        factorized=True)
+    dgot = dxpta_search(load("deit-b"), cons, engine="jax", prune="bound")
+    assert dgot.best_cfg == dref.best_cfg
+    assert dgot.edp == dref.edp
+
+
+def test_bnb_arg_validation():
+    wl = load("deit-t")
+    with pytest.raises(ValueError, match="factorized=True"):
+        search(wl, prune="bound")
+    with pytest.raises(ValueError, match="prune"):
+        search(wl, factorized=True, prune="hierarchical")
+    with pytest.raises(ValueError, match="factorized=True"):
+        search_workloads({"w": wl}, engine="jax", prune="bound")
+    # search_workloads must reject grid=/hierarchical= exactly like
+    # search() instead of silently searching the default product space.
+    with pytest.raises(ValueError, match="materialized grid"):
+        search_workloads({"w": wl}, engine="jax", factorized=True,
+                         prune="bound", grid=SPACE.to_grid())
+    with pytest.raises(ValueError, match="hierarchical"):
+        search_workloads({"w": wl}, engine="jax", factorized=True,
+                         prune="bound", hierarchical=True)
+    with pytest.raises(ValueError, match="engines"):
+        search_workloads({"w": wl}, engine="python", factorized=True,
+                         prune="bound")
