@@ -54,12 +54,19 @@ def _tree_paths(tree):
 
 
 class CheckpointManager:
+    # In-flight async saves allowed before save() blocks: one running plus
+    # one queued. Bounds host memory to two snapshots while letting a
+    # burst of small, fast-arriving saves (the DSE runtime's per-unit
+    # snapshots during heavily-pruned sweep phases) queue without stalling
+    # the producer on the previous write's fsyncs.
+    MAX_IN_FLIGHT = 2
+
     def __init__(self, directory: str, keep_last: int = 3):
         self.dir = directory
         self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
         self._pool = futures.ThreadPoolExecutor(max_workers=1)
-        self._pending: Optional[futures.Future] = None
+        self._pending: list = []  # FIFO of submitted write futures
         self._lock = threading.Lock()
 
     # ---- save ----
@@ -105,18 +112,21 @@ class CheckpointManager:
             return final
 
         with self._lock:
-            self.wait()
-            self._pending = self._pool.submit(_write)
+            # The single-worker pool already serializes writes in FIFO
+            # order; only block when the in-flight bound is hit.
+            while len(self._pending) >= self.MAX_IN_FLIGHT:
+                self._pending.pop(0).result()
+            self._pending.append(self._pool.submit(_write))
         if blocking:
             return self.wait()
         return None
 
     def wait(self):
-        if self._pending is not None:
-            result = self._pending.result()
-            self._pending = None
-            return result
-        return None
+        result = None
+        with self._lock:
+            while self._pending:
+                result = self._pending.pop(0).result()
+        return result
 
     # ---- restore ----
     def committed_steps(self):
@@ -131,10 +141,14 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore(self, target_tree, step: Optional[int] = None,
-                shardings=None, verify: bool = True):
+                shardings=None, verify: bool = True, host: bool = False):
         """Restore into the structure of target_tree (values replaced).
         shardings: optional matching pytree of jax.sharding.Sharding — the
-        *current* mesh's shardings (elastic restore)."""
+        *current* mesh's shardings (elastic restore).
+        host: return host numpy arrays without a device_put. Required for
+        exact float64 state (device_put silently narrows to float32 when
+        jax_enable_x64 is off, which would break the resume byte-identity
+        the resilient-search runtime guarantees)."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError("no committed checkpoint found")
@@ -157,7 +171,9 @@ class CheckpointManager:
                                   f"sha mismatch")
             arr = np.load(f).view(_np_dtype(meta["dtype"])).reshape(
                 meta["shape"])
-            if shd is not None:
+            if host:
+                out.append(arr)
+            elif shd is not None:
                 out.append(jax.device_put(arr, shd))
             else:
                 out.append(jax.device_put(arr))

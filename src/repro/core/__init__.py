@@ -20,6 +20,9 @@ from .performance_model import (calc_edp, cycle_factor_tables, eval_full,
 from .photonic_model import (CONSTANTS, DEFAULT_SRAM_MB, DeviceConstants,
                              area_breakdown, eval_hw, eval_hw_config,
                              power_breakdown, sram_mb_for_workload)
+from .runtime import (FALLBACK_CHAIN, CheckpointMismatch, KillSearch,
+                      LaunchError, LaunchExhausted, LaunchTimeout,
+                      NanDetected, RuntimePolicy, SearchFault, SearchRuntime)
 from .search import (ENGINES, PARETO_ENGINES, REPORT_METRICS, ParetoResult,
                      SearchResult, build_search_space, dxpta_search,
                      evaluate_grid, exhaustive_search, grid_search_vectorized,

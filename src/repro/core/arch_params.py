@@ -80,12 +80,28 @@ ALG1_DEFAULTS = PTAConfig(n_t=4, n_c=2, n_h=12, n_v=12, n_lambda=12)
 
 @dataclasses.dataclass(frozen=True)
 class Constraints:
-    """Application constraints (Section IV): defaults are the paper's."""
+    """Application constraints (Section IV): defaults are the paper's.
+
+    Every bound must be a positive number; +inf means "unconstrained" on
+    that axis (pareto_front builds such relaxations). NaN and non-positive
+    bounds are rejected at construction — a NaN bound makes every
+    feasibility comparison silently False, which is indistinguishable
+    from a genuinely infeasible search.
+    """
 
     area_mm2: float = 50.0
     power_w: float = 5.0
     energy_mj: float = 50.0
     latency_ms: float = 10.0
+
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if not isinstance(v, (int, float, np.integer, np.floating)) \
+                    or isinstance(v, bool) or v != v or v <= 0:
+                raise ValueError(
+                    f"constraint bound {f.name}={v!r} must be a positive "
+                    f"number (+inf = unconstrained)")
 
     @property
     def energy_j(self) -> float:

@@ -71,6 +71,9 @@ class FactorizedSpace:
         if len(self.axes) != 5 or any(len(a) == 0 for a in self.axes):
             raise ValueError("FactorizedSpace needs five non-empty "
                              f"candidate sets, got {self.axes!r}")
+        if any(v < 1 for a in self.axes for v in a):
+            raise ValueError("candidate values are parallelism degrees and "
+                             f"must all be >= 1, got {self.axes!r}")
 
     @staticmethod
     def from_space(space) -> "FactorizedSpace":

@@ -1,0 +1,507 @@
+"""Resilient search runtime: checkpoint/resume, retry, degradation.
+
+Long searches — a 24^5 branch-and-bound run, a streamed scenario sweep —
+outlive single processes: they get preempted, a Pallas launch fails, a
+metric block comes back NaN. This module is the control plane that makes
+every engine-layer search mode (`core.search.search` / `search_workloads`)
+survivable without ever changing its answer:
+
+  * **checkpoint/resume** — the streamed / factorized / bound-guided
+    drivers process their grid as a deterministic sequence of evaluation
+    *units* (chunks, index spans, leaf-slab batches). After each unit the
+    driver hands the runtime its cross-unit state (running argmin /
+    frontier / BnB incumbent and counters); the runtime snapshots it
+    through the step-atomic checkpoint layer (repro.checkpoint: manifest +
+    COMMITTED marker written last, sha256 per array, keep_last GC). A
+    killed search re-run against the same checkpoint directory restores
+    the last COMMITTED unit cursor and replays only the tail — and because
+    every unit is deterministic and the cross-unit merges are exact, the
+    resumed search returns **byte-identical** winners, frontiers and
+    counters to the uninterrupted run, on every engine x objective x
+    (shard, chunk_size) combination (tests/test_resilience.py pins this).
+    At most `checkpoint_every` units of work are repeated; nothing is
+    skipped or double-counted.
+  * **retry with graceful degradation** — each unit evaluation is guarded:
+    transient launch failures retry with bounded exponential backoff
+    (`max_retries`, `backoff_base_s`); a unit that exhausts its retries
+    falls down the engine chain pallas -> jax -> numpy (the engines are
+    byte-identical, so degradation never changes the result); an optional
+    per-launch watchdog (`timeout_s`) turns a hung launch into a retryable
+    `LaunchTimeout`. Every retry/fallback is counted and surfaced on
+    `SearchResult` / `ParetoResult`.
+  * **numerical integrity** — unit results are scanned for NaN (injected
+    or real); a poisoned unit is quarantined and re-evaluated through the
+    host float64 numpy path — the same "superset, then exact refine"
+    soundness argument as the kernels' MAX_FRONT overflow fallback, except
+    here the refinement *is* the reference model, so the answer is again
+    unchanged.
+  * **fault injection** — `repro.testing.faults` installs a seeded,
+    deterministic `FaultInjector` on a runtime; the guard consults it at
+    named sites ("launch" before each evaluation attempt, "checkpoint"
+    after each committed snapshot), so CI can kill, fail, hang or poison a
+    search at exact, reproducible points.
+
+The runtime holds no search semantics: drivers own their state encoding
+(core.search), kernels their launch surfaces (kernels.ops); this module
+only sequences, guards and persists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import logging
+import os
+import time
+from concurrent import futures
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+log = logging.getLogger("repro.runtime")
+
+# Engine degradation order: every entry is byte-identical to the engine it
+# replaces (the engine-layer contract), so falling down the chain trades
+# speed for survival, never correctness.
+FALLBACK_CHAIN: Dict[str, Tuple[str, ...]] = {
+    "pallas": ("jax", "numpy"),
+    "jax": ("numpy",),
+}
+
+
+class SearchFault(Exception):
+    """Base of the runtime's fault taxonomy."""
+
+
+class LaunchError(SearchFault):
+    """A unit evaluation failed (kernel launch error, injected failure)."""
+
+
+class LaunchTimeout(SearchFault):
+    """A unit evaluation exceeded the watchdog timeout."""
+
+
+class LaunchExhausted(SearchFault):
+    """A unit evaluation failed every retry on one engine."""
+
+
+class NanDetected(SearchFault):
+    """A unit result contained NaN — quarantine and re-evaluate."""
+
+
+class CheckpointMismatch(SearchFault):
+    """A checkpoint directory holds state for a *different* search."""
+
+
+class KillSearch(BaseException):
+    """Injected process death. Derives from BaseException so no guard in
+    the retry/fallback machinery can swallow it — it must propagate out of
+    search() exactly like a real SIGKILL ends the process."""
+
+
+def _retryable_exceptions() -> tuple:
+    """Exception types the per-launch retry treats as transient."""
+    excs = [LaunchError, LaunchTimeout]
+    try:
+        from jax.errors import JaxRuntimeError
+        excs.append(JaxRuntimeError)
+    except ImportError:  # pragma: no cover — very old jax
+        try:
+            from jax.lib.xla_extension import XlaRuntimeError
+            excs.append(XlaRuntimeError)
+        except ImportError:
+            pass
+    return tuple(excs)
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimePolicy:
+    """Resilience knobs for one search campaign.
+
+    checkpoint_dir: step-atomic snapshot directory (None disables
+      checkpointing — retries/fallback/quarantine still apply).
+    checkpoint_every: snapshot every N completed evaluation units. At most
+      this many units are re-executed after a kill.
+    keep_last: committed snapshots retained (older ones are GC'd).
+    max_retries: retries per engine per unit after the first attempt.
+    backoff_base_s / backoff_cap_s: bounded exponential backoff between
+      retries (base * 2^attempt, capped).
+    timeout_s: per-launch watchdog; None disables it (a first pallas/jax
+      launch legitimately spends minutes compiling — only set a timeout
+      when launch times are known).
+    fallback: engine degradation chain; every fallback engine returns
+      byte-identical results, so degradation is invisible in the answer.
+    sleep: injectable sleep (tests pass a recorder to keep backoff
+      deterministic and instant).
+    """
+
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 1
+    keep_last: int = 3
+    max_retries: int = 2
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    timeout_s: Optional[float] = None
+    fallback: Mapping[str, Tuple[str, ...]] = \
+        dataclasses.field(default_factory=lambda: dict(FALLBACK_CHAIN))
+    sleep: Callable[[float], None] = time.sleep
+
+    def __post_init__(self):
+        if self.checkpoint_every < 1:
+            raise ValueError(f"checkpoint_every must be >= 1, got "
+                             f"{self.checkpoint_every}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+
+
+COUNTER_KEYS = ("n_retries", "n_fallbacks", "n_quarantined", "n_checkpoints")
+
+
+def _has_nan(out) -> bool:
+    """True if any float leaf of a (possibly nested) unit result is NaN.
+
+    +/-inf is *legitimate* unit output (an infeasible chunk's best EDP), so
+    only NaN counts as poison. Integer arrays can't be poisoned.
+    """
+    if out is None:
+        return False
+    if isinstance(out, (tuple, list)):
+        return any(_has_nan(x) for x in out)
+    if isinstance(out, dict):
+        return any(_has_nan(v) for v in out.values())
+    if isinstance(out, float):
+        return out != out
+    if isinstance(out, np.ndarray):
+        return out.dtype.kind == "f" and bool(np.isnan(out).any())
+    if isinstance(out, np.floating):
+        return bool(np.isnan(out))
+    return False
+
+
+def _poisoned(out):
+    """Replace every float leaf with NaN (the injected-NaN-block shape):
+    the result still has the structure the driver expects, but the
+    integrity scan must catch it."""
+    if isinstance(out, tuple):
+        return tuple(_poisoned(x) for x in out)
+    if isinstance(out, list):
+        return [_poisoned(x) for x in out]
+    if isinstance(out, dict):
+        return {k: _poisoned(v) for k, v in out.items()}
+    if isinstance(out, float) or isinstance(out, np.floating):
+        return float("nan")
+    if isinstance(out, np.ndarray) and out.dtype.kind == "f":
+        return np.full_like(out, np.nan)
+    return out
+
+
+def fingerprint(**fields) -> str:
+    """Order-independent digest of a search signature. A checkpoint
+    directory is bound to one exact search (workload, grid/space,
+    constraints, engine, objective, streaming shape, constants); resuming
+    anything else raises CheckpointMismatch instead of silently merging
+    incompatible state."""
+    h = hashlib.sha256()
+    for k in sorted(fields):
+        v = fields[k]
+        h.update(k.encode())
+        if isinstance(v, np.ndarray):
+            h.update(str(v.dtype).encode())
+            h.update(str(v.shape).encode())
+            h.update(np.ascontiguousarray(v).tobytes())
+        else:
+            h.update(repr(v).encode())
+        h.update(b";")
+    return h.hexdigest()
+
+
+class SearchRuntime:
+    """One resilient search campaign: counters, guard, checkpoint cursor.
+
+    Pass an instance (or a bare RuntimePolicy) as `search(..., runtime=)`.
+    Counters accumulate across everything the runtime guards and are
+    copied onto the returned result.
+    """
+
+    def __init__(self, policy: Optional[RuntimePolicy] = None):
+        self.policy = policy or RuntimePolicy()
+        self.counters = {k: 0 for k in COUNTER_KEYS}
+        self.resumed_step = 0
+        self.fault_injector = None  # set by repro.testing.faults.inject
+        self._ckpt = None
+        self._retryable = _retryable_exceptions()
+        self._pool = None
+
+    @staticmethod
+    def of(runtime) -> "SearchRuntime":
+        """Coerce a user-facing runtime= argument (policy or runtime)."""
+        if isinstance(runtime, SearchRuntime):
+            return runtime
+        if isinstance(runtime, RuntimePolicy):
+            return SearchRuntime(runtime)
+        raise TypeError(f"runtime= expects a RuntimePolicy or "
+                        f"SearchRuntime, got {type(runtime).__name__}")
+
+    # ---- fault injection ----
+
+    def _consult(self, site: str) -> bool:
+        """Fire the fault injector at a named site. Returns True when the
+        injector asks for a poisoned (NaN) result; raises for injected
+        failures/timeouts/kills."""
+        inj = self.fault_injector
+        if inj is None:
+            return False
+        return bool(inj.fire(site))
+
+    # ---- guarded evaluation ----
+
+    def _call(self, thunk):
+        """One attempt, under the watchdog when configured. The worker
+        thread of a timed-out launch cannot be killed — it is abandoned
+        (documented limitation of in-process watchdogs); the retry runs
+        alongside it."""
+        t = self.policy.timeout_s
+        if t is None:
+            return thunk()
+        if self._pool is None:
+            self._pool = futures.ThreadPoolExecutor(max_workers=2)
+        fut = self._pool.submit(thunk)
+        try:
+            return fut.result(timeout=t)
+        except futures.TimeoutError:
+            raise LaunchTimeout(f"launch exceeded {t}s watchdog") from None
+
+    def _attempts(self, thunk):
+        """Retry one engine's unit evaluation with bounded exponential
+        backoff. Returns (result, poisoned); raises LaunchExhausted when
+        every attempt failed."""
+        p = self.policy
+        last = None
+        for attempt in range(p.max_retries + 1):
+            try:
+                poison = self._consult("launch")
+                out = self._call(thunk)
+                return (_poisoned(out), True) if poison else (out, False)
+            except NanDetected:
+                # The launch layer spotted NaN in a metric block: not a
+                # transient failure (retrying replays the same numerics) —
+                # hand the unit straight to quarantine.
+                return None, True
+            except self._retryable as e:
+                last = e
+                self.counters["n_retries"] += 1
+                if attempt < p.max_retries:
+                    p.sleep(min(p.backoff_base_s * (2 ** attempt),
+                                p.backoff_cap_s))
+        raise LaunchExhausted(
+            f"unit failed after {p.max_retries + 1} attempts") from last
+
+    def eval_unit(self, engine: str, thunks: Mapping[str, Callable],
+                  refine: Optional[Callable] = None):
+        """Evaluate one unit resilently.
+
+        thunks: byte-identical evaluation alternatives keyed by engine
+        name; `engine` is tried first, then its fallback chain. refine:
+        the host float64 re-evaluation a NaN-poisoned result quarantines
+        to (defaults to thunks["numpy"]).
+        """
+        chain = [engine] + [e for e in self.policy.fallback.get(engine, ())
+                            if e in thunks]
+        last = None
+        for pos, eng in enumerate(chain):
+            try:
+                out, poisoned = self._attempts(thunks[eng])
+            except LaunchExhausted as e:
+                last = e
+                if pos + 1 < len(chain):
+                    self.counters["n_fallbacks"] += 1
+                    log.warning("engine %r exhausted retries; degrading "
+                                "to %r", eng, chain[pos + 1])
+                continue
+            if poisoned or _has_nan(out):
+                self.counters["n_quarantined"] += 1
+                log.warning("NaN in unit result (engine %r); quarantining "
+                            "to host float64 re-evaluation", eng)
+                refine_fn = refine if refine is not None \
+                    else thunks.get("numpy")
+                if refine_fn is None:
+                    raise NanDetected("poisoned unit and no host float64 "
+                                      "refinement available")
+                return refine_fn()
+            return out
+        raise last
+
+    # ---- checkpoint cursor ----
+
+    def _manager(self):
+        if self._ckpt is None and self.policy.checkpoint_dir:
+            from repro.checkpoint.checkpointing import CheckpointManager
+            self._ckpt = CheckpointManager(self.policy.checkpoint_dir,
+                                           keep_last=self.policy.keep_last)
+        return self._ckpt
+
+    def resume(self, fp: str):
+        """Latest committed (unit_count, state, extra) for fingerprint
+        `fp`, or None on a cold start. state arrays come back as host
+        numpy arrays; the runtime's counters are restored from the
+        snapshot (work before the cursor is never re-counted)."""
+        mgr = self._manager()
+        if mgr is None:
+            return None
+        step = mgr.latest_step()
+        if step is None:
+            return None
+        # The state tree's key set is search-mode-specific; recover it
+        # from the manifest so restore() can rebuild any driver's state.
+        import json
+        with open(os.path.join(mgr.dir, f"step_{step:06d}",
+                               "manifest.json")) as fh:
+            manifest = json.load(fh)
+        extra = manifest.get("extra", {})
+        if extra.get("fingerprint") != fp:
+            raise CheckpointMismatch(
+                f"checkpoint directory {self.policy.checkpoint_dir!r} "
+                f"belongs to a different search (fingerprint mismatch); "
+                f"use a fresh directory per search signature")
+        target = {leaf["path"]: np.zeros(0) for leaf in manifest["leaves"]}
+        # host=True: a device_put would narrow the float64 state to
+        # float32 (x64 is off), breaking resume byte-identity.
+        tree, extra, step = mgr.restore(target, step=step, host=True)
+        state = {k: np.asarray(v) for k, v in tree.items()}
+        for k in COUNTER_KEYS:
+            self.counters[k] = int(extra.get("counters", {}).get(k, 0))
+        self.resumed_step = step
+        log.info("resumed search at unit %d from %r", step,
+                 self.policy.checkpoint_dir)
+        return step, state, extra
+
+    def unit_done(self, fp: str, unit: int, state: Mapping[str, np.ndarray],
+                  scalars: Optional[Mapping] = None):
+        """Mark evaluation unit `unit` (0-based) complete; snapshot at the
+        configured interval. The saved step is the number of *completed*
+        units, so resume() re-enters at exactly the first unit whose work
+        is not in the snapshot. Consults the fault injector's "checkpoint"
+        site after a commit — the kill-at-every-boundary tests hook here.
+
+        Saves are asynchronous (the manager's single writer thread
+        serializes them and the COMMITTED marker keeps each step
+        crash-atomic), so the snapshot I/O overlaps the next unit's
+        compute — this is what keeps checkpointing overhead in the noise
+        on BnB-scale units. flush() drains the writer; activate() calls
+        it on every search exit so a returned (or injection-killed)
+        search always has its last snapshot durable.
+        """
+        mgr = self._manager()
+        if mgr is None:
+            return
+        if (unit + 1) % self.policy.checkpoint_every:
+            return
+        # Count this snapshot *before* capturing the counters: the
+        # restored counter set must equal the uninterrupted run's at the
+        # same cursor, and that run has taken this checkpoint too.
+        self.counters["n_checkpoints"] += 1
+        extra = {"fingerprint": fp, "unit": unit + 1,
+                 "counters": dict(self.counters)}
+        if scalars:
+            extra.update(scalars)
+        # Copy the leaves: the async writer must not race a driver that
+        # reuses its running-state buffers for the next unit.
+        mgr.save(unit + 1, {k: np.array(v) for k, v in state.items()},
+                 extra=extra, blocking=False)
+        self._consult("checkpoint")
+
+    def flush(self):
+        """Drain any in-flight snapshot write (no-op without one)."""
+        if self._ckpt is not None:
+            self._ckpt.wait()
+
+    # ---- result surfacing ----
+
+    def annotate(self, result):
+        """Copy the campaign counters onto a SearchResult/ParetoResult."""
+        for k in COUNTER_KEYS:
+            setattr(result, k, self.counters[k])
+        result.resumed_step = self.resumed_step
+        return result
+
+
+# ---------------------------------------------------------------------------
+# Active-runtime context: lets the kernel launch wrappers (kernels.ops)
+# surface integrity faults without threading the runtime through every
+# signature. Not thread-local by design — searches are single-threaded
+# drivers; the watchdog worker never launches nested searches.
+# ---------------------------------------------------------------------------
+
+_ACTIVE: list = []
+
+
+class activate:
+    """Context manager marking `runtime` as the active campaign."""
+
+    def __init__(self, runtime: SearchRuntime):
+        self.runtime = runtime
+
+    def __enter__(self):
+        _ACTIVE.append(self.runtime)
+        return self.runtime
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+        # Durability on exit, normal or not: an injected KillSearch must
+        # leave the same committed snapshots a blocking save would have
+        # (a real process death simply replays one extra unit instead).
+        if self.runtime is not None:
+            self.runtime.flush()
+        return False
+
+
+def current() -> Optional[SearchRuntime]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+# ---------------------------------------------------------------------------
+# Driver state codecs: the cross-unit state each search mode carries,
+# encoded as flat {name: array} trees for the checkpoint layer. Scalars
+# ride in float64/int64 arrays (exact round-trip); None-ness is encoded
+# in array length so every leaf always exists.
+# ---------------------------------------------------------------------------
+
+def encode_best_row(best) -> Dict[str, np.ndarray]:
+    """(row-or-None, edp) running argmin of the streamed EDP driver."""
+    row, edp = best
+    return {"best_row": (np.zeros(0, np.int64) if row is None
+                         else np.asarray(row, np.int64).reshape(5)),
+            "best_edp": np.asarray([edp], np.float64)}
+
+
+def decode_best_row(state) -> tuple:
+    row = state["best_row"]
+    return (None if row.size == 0 else row.astype(np.int64),
+            float(state["best_edp"][0]))
+
+
+def encode_best_indexed(best) -> Dict[str, np.ndarray]:
+    """(global index or -1, edp) running argmin of the factorized drivers."""
+    gi, edp = best
+    return {"best_gi": np.asarray([gi], np.int64),
+            "best_edp": np.asarray([edp], np.float64)}
+
+
+def decode_best_indexed(state) -> tuple:
+    return int(state["best_gi"][0]), float(state["best_edp"][0])
+
+
+def encode_front(rows: np.ndarray, met: Mapping[str, np.ndarray],
+                 metric_keys: Sequence[str]) -> Dict[str, np.ndarray]:
+    """Bounded running frontier (rows + reference-model metric columns)."""
+    out = {"front_rows": np.asarray(rows, np.int64).reshape(-1, 5)}
+    for k in metric_keys:
+        out[f"met_{k}"] = np.asarray(met[k], np.float64)
+    return out
+
+
+def decode_front(state, metric_keys: Sequence[str]) -> tuple:
+    rows = np.asarray(state["front_rows"], np.int64).reshape(-1, 5)
+    met = {k: np.asarray(state[f"met_{k}"], np.float64)
+           for k in metric_keys}
+    return rows, met

@@ -78,6 +78,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import os
 import time
 from typing import Dict, Mapping, Optional, Sequence, Union
 
@@ -89,6 +90,10 @@ from .pareto import DEFAULT_OBJECTIVES, pareto_mask
 from .performance_model import (calc_edp, eval_full, eval_wload_arrays,
                                 workload_statics)
 from .photonic_model import CONSTANTS, DeviceConstants, eval_hw, sram_mb_for_workload
+from .runtime import (SearchRuntime, activate as _activate_rt,
+                      decode_best_indexed, decode_best_row, decode_front,
+                      encode_best_indexed, encode_best_row, encode_front,
+                      fingerprint as _fingerprint)
 from .significance import SignificanceScore, observe_significance, significant_params
 from .workload import Workload
 
@@ -113,6 +118,15 @@ class SearchResult:
     # performed. Zero on every other path.
     n_pruned: int = 0
     n_bounds: int = 0
+    # Resilient-runtime counters (search(..., runtime=)): transient launch
+    # retries, engine degradations, NaN-quarantined units re-evaluated on
+    # the host, committed snapshots, and the unit cursor this run resumed
+    # from (0 = cold start). Zero when no runtime is attached.
+    n_retries: int = 0
+    n_fallbacks: int = 0
+    n_quarantined: int = 0
+    n_checkpoints: int = 0
+    resumed_step: int = 0
     # Optional (collect=True): per-candidate metric arrays for Fig. 9 scatter.
     history: Optional[Dict[str, np.ndarray]] = None
 
@@ -147,6 +161,16 @@ class ParetoResult:
     # Bound-guided search counters, as on SearchResult.
     n_pruned: int = 0
     n_bounds: int = 0
+    # Resilient-runtime counters, as on SearchResult.
+    n_retries: int = 0
+    n_fallbacks: int = 0
+    n_quarantined: int = 0
+    n_checkpoints: int = 0
+    resumed_step: int = 0
+    # Pallas kernel blocks whose per-block frontier overflowed MAX_FRONT
+    # and were host-refined from the whole block (exact, just slower).
+    # Always 0 on the host/jax engines.
+    n_overflow: int = 0
 
     @property
     def size(self) -> int:
@@ -816,10 +840,13 @@ def _pareto_pallas(grid, wl, constraints, c, hierarchical, interpret,
     if len(sub) == 0:
         return _pareto_result(sub, 0, wl, constraints, c, objectives,
                               len(grid), 0, t0)
-    (cand_idx, nf), = dse_pareto_multi(sub, [wl], [constraints], c,
-                                       interpret, objectives=objectives)
-    return _pareto_result(sub[cand_idx], nf, wl, constraints, c, objectives,
-                          len(grid), n_wl, t0)
+    (cand_idx, nf, n_over), = dse_pareto_multi(sub, [wl], [constraints], c,
+                                               interpret,
+                                               objectives=objectives)
+    r = _pareto_result(sub[cand_idx], nf, wl, constraints, c, objectives,
+                       len(grid), n_wl, t0)
+    r.n_overflow = n_over
+    return r
 
 
 PARETO_ENGINES = {"python": _pareto_python, "numpy": _pareto_numpy,
@@ -1018,16 +1045,63 @@ EDP_CHUNK_ENGINES = {"python": _edp_chunk_python, "numpy": _edp_chunk_numpy,
                      "jax": _edp_chunk_jax}
 
 
+def _rt_fp(tag, wl, constraints, engine, c, interpret, shard, chunk_size,
+           **extra):
+    """Search-signature fingerprint binding a checkpoint directory to one
+    exact search. Engine is part of the signature: resume re-runs the tail
+    on the same engine the head ran on (degradation within a run is fine —
+    engines are byte-identical — but resuming under a different engine=
+    is a different campaign)."""
+    return _fingerprint(tag=tag, wl=wl.name, gemms=wl.gemm_array,
+                        act=int(wl.max_act_bytes), cons=repr(constraints),
+                        engine=engine, c=repr(c), interpret=bool(interpret),
+                        shard=shard, chunk=chunk_size, **extra)
+
+
+def _edp_chunk_thunks(chunk, wl, constraints, c, hierarchical, interpret,
+                      shard, best):
+    """Byte-identical per-engine evaluations of one streamed EDP chunk for
+    the resilient runtime's retry / fallback / quarantine guard."""
+    def pallas():
+        carry = best[1] if best[0] is not None else None
+        return _edp_chunk_pallas(chunk, wl, constraints, c, hierarchical,
+                                 interpret, shard, carry)
+
+    thunks = {"pallas": pallas}
+    for eng, fn in EDP_CHUNK_ENGINES.items():
+        thunks[eng] = functools.partial(fn, chunk, wl, constraints, c,
+                                        hierarchical, interpret, shard)
+    return thunks
+
+
 def _search_streamed(grid, wl, constraints, engine, hierarchical, c,
-                     interpret, shard, chunk_size) -> SearchResult:
+                     interpret, shard, chunk_size, rt=None) -> SearchResult:
     """Chunked (and optionally sharded) min-EDP driver, any engine."""
     t0 = time.perf_counter()
     n = len(grid)
     cs = int(chunk_size) if chunk_size else max(n, 1)
     best = (None, float("inf"))
     nf = n_wl = 0
-    for chunk in _iter_chunks(grid, cs):
-        if engine == "pallas":
+    start = 0
+    fp = None
+    if rt is not None:
+        fp = _rt_fp("edp_stream", wl, constraints, engine, c, interpret,
+                    shard, chunk_size, grid=np.ascontiguousarray(grid),
+                    hier=bool(hierarchical))
+        rec = rt.resume(fp)
+        if rec is not None:
+            start, st, extra = rec
+            best = decode_best_row(st)
+            nf, n_wl = int(extra["nf"]), int(extra["n_wl"])
+    for u, chunk in enumerate(_iter_chunks(grid, cs)):
+        if u < start:
+            continue
+        if rt is not None:
+            row, e, cf, cw = rt.eval_unit(
+                engine, _edp_chunk_thunks(chunk, wl, constraints, c,
+                                          hierarchical, interpret, shard,
+                                          best))
+        elif engine == "pallas":
             # The kernel folds the carried best into its own reduction
             # (carry wins ties), so per-chunk launches compose on-device.
             carry = best[1] if best[0] is not None else None
@@ -1040,8 +1114,12 @@ def _search_streamed(grid, wl, constraints, engine, hierarchical, c,
         nf += cf
         n_wl += cw
         best = merge_running_best(best, (row, e))
-    return _make_result(best[0], nf, wl, c, n, n_wl,
-                        time.perf_counter() - t0)
+        if rt is not None:
+            rt.unit_done(fp, u, encode_best_row(best),
+                         {"nf": nf, "n_wl": n_wl})
+    res = _make_result(best[0], nf, wl, c, n, n_wl,
+                       time.perf_counter() - t0)
+    return rt.annotate(res) if rt is not None else res
 
 
 def _pareto_chunk_python(chunk, wl, constraints, c, hierarchical, interpret,
@@ -1124,20 +1202,41 @@ def _pareto_chunk_pallas(chunk, wl, constraints, c, hierarchical, interpret,
     from repro.kernels.ops import dse_pareto_multi
     sub, n_wl = _prefiltered(chunk, wl, constraints, c, hierarchical)
     if len(sub) == 0:
-        return np.zeros((0, 5), np.int64), 0, n_wl
+        return np.zeros((0, 5), np.int64), 0, n_wl, 0
     carry_points = None
     if carry_rows is not None and len(carry_rows):
         carry_points = [_pallas_front_points(carry_rows, wl, c, interpret,
                                              objectives)]
-    (idx, nf), = dse_pareto_multi(sub, [wl], [constraints], c, interpret,
-                                  objectives=objectives, shard=shard,
-                                  carry_points=carry_points)
-    return sub[idx], nf, n_wl
+    (idx, nf, n_over), = dse_pareto_multi(sub, [wl], [constraints], c,
+                                          interpret, objectives=objectives,
+                                          shard=shard,
+                                          carry_points=carry_points)
+    return sub[idx], nf, n_wl, n_over
 
 
 PARETO_CHUNK_ENGINES = {"python": _pareto_chunk_python,
                         "numpy": _pareto_chunk_numpy,
                         "jax": _pareto_chunk_jax}
+
+
+def _pareto_chunk_thunks(chunk, wl, constraints, c, hierarchical, interpret,
+                         shard, objectives, run_rows):
+    """Per-engine streamed-frontier chunk evaluations, normalized to
+    (cand_rows, n_feasible, n_wl, n_overflow) for the runtime guard."""
+    def pallas():
+        return _pareto_chunk_pallas(chunk, wl, constraints, c, hierarchical,
+                                    interpret, shard, objectives, run_rows)
+
+    def host(eng):
+        cand, cf, cw = PARETO_CHUNK_ENGINES[eng](
+            chunk, wl, constraints, c, hierarchical, interpret, shard,
+            objectives)
+        return cand, cf, cw, 0
+
+    thunks = {"pallas": pallas}
+    for eng in PARETO_CHUNK_ENGINES:
+        thunks[eng] = functools.partial(host, eng)
+    return thunks
 
 
 def _empty_run_state():
@@ -1170,33 +1269,60 @@ def _merge_running_front(run_rows, run_met, cand_rows, wl, constraints, c,
 
 
 def _pareto_streamed(grid, wl, constraints, engine, hierarchical, c,
-                     interpret, objectives, shard, chunk_size
+                     interpret, objectives, shard, chunk_size, rt=None
                      ) -> ParetoResult:
     """Chunked (and optionally sharded) frontier driver, any engine."""
     t0 = time.perf_counter()
     n = len(grid)
     cs = int(chunk_size) if chunk_size else max(n, 1)
     run_rows, run_met = _empty_run_state()
-    nf = n_wl = 0
-    for chunk in _iter_chunks(grid, cs):
-        if engine == "pallas":
-            cand, cf, cw = _pareto_chunk_pallas(
+    nf = n_wl = n_over = 0
+    start = 0
+    fp = None
+    if rt is not None:
+        fp = _rt_fp("pareto_stream", wl, constraints, engine, c, interpret,
+                    shard, chunk_size, grid=np.ascontiguousarray(grid),
+                    hier=bool(hierarchical), objectives=tuple(objectives))
+        rec = rt.resume(fp)
+        if rec is not None:
+            start, st, extra = rec
+            run_rows, run_met = decode_front(st, REPORT_METRICS)
+            nf, n_wl = int(extra["nf"]), int(extra["n_wl"])
+            n_over = int(extra["n_over"])
+    for u, chunk in enumerate(_iter_chunks(grid, cs)):
+        if u < start:
+            continue
+        if rt is not None:
+            cand, cf, cw, co = rt.eval_unit(
+                engine, _pareto_chunk_thunks(chunk, wl, constraints, c,
+                                             hierarchical, interpret, shard,
+                                             objectives, run_rows))
+        elif engine == "pallas":
+            cand, cf, cw, co = _pareto_chunk_pallas(
                 chunk, wl, constraints, c, hierarchical, interpret, shard,
                 objectives, run_rows)
         else:
             cand, cf, cw = PARETO_CHUNK_ENGINES[engine](
                 chunk, wl, constraints, c, hierarchical, interpret, shard,
                 objectives)
+            co = 0
         nf += cf
         n_wl += cw
+        n_over += co
         if len(cand):
             run_rows, run_met = _merge_running_front(
                 run_rows, run_met, cand, wl, constraints, c, objectives)
+        if rt is not None:
+            rt.unit_done(fp, u, encode_front(run_rows, run_met,
+                                             REPORT_METRICS),
+                         {"nf": nf, "n_wl": n_wl, "n_over": n_over})
     front, met, _ = _pareto_from_rows(run_rows, wl, constraints, c,
                                       objectives, m=run_met)
-    return ParetoResult(front=front, metrics=met, objectives=objectives,
-                        n_evaluated=n, n_feasible=nf, n_workload_evals=n_wl,
-                        wall_time_s=time.perf_counter() - t0)
+    res = ParetoResult(front=front, metrics=met, objectives=objectives,
+                       n_evaluated=n, n_feasible=nf, n_workload_evals=n_wl,
+                       wall_time_s=time.perf_counter() - t0,
+                       n_overflow=n_over)
+    return rt.annotate(res) if rt is not None else res
 
 
 # ---------------------------------------------------------------------------
@@ -1579,70 +1705,143 @@ def _iter_spans(size: int, chunk_size):
         yield s, min(cs, size - s)
 
 
+def _edp_span_thunks(fspace, wl, constraints, c, interpret, shard, s, n,
+                     best):
+    """Per-engine factorized EDP span evaluations, normalized to
+    (gidx or -1/CARRY_IDX, edp, n_feasible) for the runtime guard."""
+    def pallas():
+        from repro.kernels.ops import dse_search_multi_factorized
+        carry = best[1] if best[0] >= 0 else None
+        bi, be, bn = dse_search_multi_factorized(
+            fspace, s, n, [wl], [constraints], c, interpret, shard=shard,
+            carry_edp=None if carry is None else [carry])
+        return bi[0], be[0], bn[0]
+
+    def jax_():
+        gi, e, cf, _ = _edp_span_jax_factorized(fspace, wl, constraints, c,
+                                                s, n, shard)
+        return gi, e, cf
+
+    def numpy_():
+        gi, e, cf, _ = _edp_span_numpy_factorized(fspace, wl, constraints,
+                                                  c, s, n, shard)
+        return gi, e, cf
+
+    return {"pallas": pallas, "jax": jax_, "numpy": numpy_}
+
+
+def _pareto_span_thunks(fspace, wl, constraints, c, interpret, objectives,
+                        shard, s, n, run_rows):
+    """Per-engine factorized frontier span evaluations, normalized to
+    (cand gidx array, n_feasible, n_overflow)."""
+    def pallas():
+        from repro.kernels.ops import dse_pareto_multi_factorized
+        carry_points = None
+        if len(run_rows):
+            carry_points = [_pallas_front_points(run_rows, wl, c, interpret,
+                                                 objectives)]
+        (idx, cf, n_over), = dse_pareto_multi_factorized(
+            fspace, s, n, [wl], [constraints], c, interpret,
+            objectives=objectives, shard=shard, carry_points=carry_points)
+        return idx, cf, n_over
+
+    def jax_():
+        idx, cf, _ = _pareto_span_jax_factorized(fspace, wl, constraints, c,
+                                                 s, n, shard, objectives)
+        return idx, cf, 0
+
+    def numpy_():
+        idx, cf, _ = _pareto_span_numpy_factorized(
+            fspace, wl, constraints, c, s, n, shard, objectives)
+        return idx, cf, 0
+
+    return {"pallas": pallas, "jax": jax_, "numpy": numpy_}
+
+
 def _search_factorized(fspace, wl, constraints, engine, c, interpret,
-                       shard, chunk_size) -> SearchResult:
+                       shard, chunk_size, rt=None) -> SearchResult:
     """Factorized min-EDP driver (one-shot is the single-span case)."""
-    from repro.kernels.ops import dse_search_multi_factorized
     t0 = time.perf_counter()
     best = (-1, float("inf"))
     nf = n_wl = 0
-    for s, n in _iter_spans(fspace.size, chunk_size):
-        if engine == "pallas":
-            carry = best[1] if best[0] >= 0 else None
-            bi, be, bn = dse_search_multi_factorized(
-                fspace, s, n, [wl], [constraints], c, interpret,
-                shard=shard,
-                carry_edp=None if carry is None else [carry])
-            gi, e, cf = bi[0], be[0], bn[0]
-        elif engine == "jax":
-            gi, e, cf, _ = _edp_span_jax_factorized(
-                fspace, wl, constraints, c, s, n, shard)
+    start = 0
+    fp = None
+    if rt is not None:
+        fp = _rt_fp("edp_fact", wl, constraints, engine, c, interpret,
+                    shard, chunk_size, axes=fspace.axes)
+        rec = rt.resume(fp)
+        if rec is not None:
+            start, st, extra = rec
+            best = decode_best_indexed(st)
+            nf, n_wl = int(extra["nf"]), int(extra["n_wl"])
+    for u, (s, n) in enumerate(_iter_spans(fspace.size, chunk_size)):
+        if u < start:
+            continue
+        thunks = _edp_span_thunks(fspace, wl, constraints, c, interpret,
+                                  shard, s, n, best)
+        if rt is not None:
+            gi, e, cf = rt.eval_unit(engine, thunks)
         else:
-            gi, e, cf, _ = _edp_span_numpy_factorized(
-                fspace, wl, constraints, c, s, n, shard)
+            gi, e, cf = thunks[engine]()
         nf += cf
         n_wl += n
         best = _merge_best_indexed(best, (gi, e))
+        if rt is not None:
+            rt.unit_done(fp, u, encode_best_indexed(best),
+                         {"nf": nf, "n_wl": n_wl})
     row = fspace.decode([best[0]])[0] if best[0] >= 0 else None
-    return _make_result(row, nf, wl, c, fspace.size, n_wl,
-                        time.perf_counter() - t0)
+    res = _make_result(row, nf, wl, c, fspace.size, n_wl,
+                       time.perf_counter() - t0)
+    return rt.annotate(res) if rt is not None else res
 
 
 def _pareto_factorized(fspace, wl, constraints, engine, c, interpret,
-                       objectives, shard, chunk_size) -> ParetoResult:
+                       objectives, shard, chunk_size, rt=None
+                       ) -> ParetoResult:
     """Factorized frontier driver (one-shot is the single-span case)."""
-    from repro.kernels.ops import dse_pareto_multi_factorized
     t0 = time.perf_counter()
     run_rows, run_met = _empty_run_state()
-    nf = n_wl = 0
-    for s, n in _iter_spans(fspace.size, chunk_size):
-        if engine == "pallas":
-            carry_points = None
-            if len(run_rows):
-                carry_points = [_pallas_front_points(
-                    run_rows, wl, c, interpret, objectives)]
-            (idx, cf), = dse_pareto_multi_factorized(
-                fspace, s, n, [wl], [constraints], c, interpret,
-                objectives=objectives, shard=shard,
-                carry_points=carry_points)
-        elif engine == "jax":
-            idx, cf, _ = _pareto_span_jax_factorized(
-                fspace, wl, constraints, c, s, n, shard, objectives)
+    nf = n_wl = n_over = 0
+    start = 0
+    fp = None
+    if rt is not None:
+        fp = _rt_fp("pareto_fact", wl, constraints, engine, c, interpret,
+                    shard, chunk_size, axes=fspace.axes,
+                    objectives=tuple(objectives))
+        rec = rt.resume(fp)
+        if rec is not None:
+            start, st, extra = rec
+            run_rows, run_met = decode_front(st, REPORT_METRICS)
+            nf, n_wl = int(extra["nf"]), int(extra["n_wl"])
+            n_over = int(extra["n_over"])
+    for u, (s, n) in enumerate(_iter_spans(fspace.size, chunk_size)):
+        if u < start:
+            continue
+        thunks = _pareto_span_thunks(fspace, wl, constraints, c, interpret,
+                                     objectives, shard, s, n, run_rows)
+        if rt is not None:
+            idx, cf, co = rt.eval_unit(engine, thunks)
         else:
-            idx, cf, _ = _pareto_span_numpy_factorized(
-                fspace, wl, constraints, c, s, n, shard, objectives)
+            idx, cf, co = thunks[engine]()
         nf += cf
         n_wl += n
+        n_over += co
         if len(idx):
             run_rows, run_met = _merge_running_front(
                 run_rows, run_met, fspace.decode(idx), wl, constraints, c,
                 objectives)
+        if rt is not None:
+            rt.unit_done(fp, u, encode_front(run_rows, run_met,
+                                             REPORT_METRICS),
+                         {"nf": nf, "n_wl": n_wl, "n_over": n_over})
     front, met, _ = _pareto_from_rows(run_rows, wl, constraints, c,
                                       objectives, m=run_met)
-    return ParetoResult(front=front, metrics=met, objectives=objectives,
-                        n_evaluated=fspace.size, n_feasible=nf,
-                        n_workload_evals=n_wl,
-                        wall_time_s=time.perf_counter() - t0)
+    res = ParetoResult(front=front, metrics=met, objectives=objectives,
+                       n_evaluated=fspace.size, n_feasible=nf,
+                       n_workload_evals=n_wl,
+                       wall_time_s=time.perf_counter() - t0,
+                       n_overflow=n_over)
+    return rt.annotate(res) if rt is not None else res
 
 
 # ---------------------------------------------------------------------------
@@ -1915,11 +2114,11 @@ def _bnb_eval_edp(engine, fspace, wl, constraints, c, interpret,
 
 def _bnb_eval_pareto(engine, fspace, wl, constraints, c, interpret,
                      ranges_list, shard, chunk_size, objectives, run_rows):
-    """(cand gidx array, n_feasible) over one batch of leaf slabs; launch
-    forms as in `_bnb_eval_edp`."""
+    """(cand gidx array, n_feasible, n_overflow) over one batch of leaf
+    slabs; launch forms as in `_bnb_eval_edp`."""
     from .factorized import slab_indices_batch, slab_size
     cands = []
-    nf = 0
+    nf = n_over = 0
     carry_points = None
     if engine == "pallas" and len(run_rows):
         carry_points = [_pallas_front_points(run_rows, wl, c, interpret,
@@ -1929,15 +2128,16 @@ def _bnb_eval_pareto(engine, fspace, wl, constraints, c, interpret,
         from repro.kernels.ops import dse_pareto_spans_factorized
         for ranges in ranges_list:
             items = _bnb_leaf_items(fspace, ranges, chunk_size)
-            (idx, f), = dse_pareto_spans_factorized(
+            (idx, f, o), = dse_pareto_spans_factorized(
                 fspace, items, [wl], [constraints], c, interpret,
                 objectives=objectives, shard=shard,
                 carry_points=carry_points)
             nf += f
+            n_over += o
             if len(idx):
                 cands.append(idx)
         return (np.concatenate(cands) if cands
-                else np.zeros(0, np.int64)), nf
+                else np.zeros(0, np.int64)), nf, n_over
     idx = slab_indices_batch(fspace.radices, ranges_list)
     cs = int(chunk_size) if chunk_size else len(idx)
     for s in range(0, len(idx), cs):
@@ -1945,11 +2145,12 @@ def _bnb_eval_pareto(engine, fspace, wl, constraints, c, interpret,
         if engine == "pallas":
             from repro.kernels.ops import dse_pareto_multi
             rows = fspace.decode(part)
-            (local, f), = dse_pareto_multi(
+            (local, f, o), = dse_pareto_multi(
                 rows, [wl], [constraints], c, interpret,
                 objectives=objectives, shard=shard,
                 carry_points=carry_points)
             cand = part[local]
+            n_over += o
         elif engine == "jax":
             cand, f = _jax_factorized_idx_mask(fspace, wl, constraints, c,
                                                part, shard, objectives)
@@ -1959,11 +2160,12 @@ def _bnb_eval_pareto(engine, fspace, wl, constraints, c, interpret,
         nf += f
         if len(cand):
             cands.append(cand)
-    return (np.concatenate(cands) if cands else np.zeros(0, np.int64)), nf
+    return (np.concatenate(cands) if cands
+            else np.zeros(0, np.int64)), nf, n_over
 
 
 def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
-                           shard, chunk_size) -> SearchResult:
+                           shard, chunk_size, rt=None) -> SearchResult:
     """Bound-guided min-EDP driver.
 
     Phase 1 (`_bnb_frontier`): constraint-prune the slab tree down to
@@ -1977,18 +2179,58 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
     smallest remaining bound clears the incumbent. The evaluated volume
     stops growing with the space once the incumbent region is covered,
     which is what makes the win over streamed sweeps super-linear.
+
+    With a runtime attached the evaluation *unit* is one probe/sweep
+    batch. The checkpoint carries the incumbent, the running (gidx, edp)
+    argmin, the counters and the phase cursor; the slab frontier and the
+    refinement are recomputed on resume (pure deterministic functions of
+    the space + the checkpointed incumbent — cheaper to replay than to
+    persist, and their bound/prune work is already inside the restored
+    counters, so a throwaway stats dict keeps the totals exact).
     """
     from .factorized import SlabBoundEvaluator
     t0 = time.perf_counter()
     ev = SlabBoundEvaluator.from_workload(fspace, wl, c)
     stats = {"n_pruned": 0, "n_bounds": 0}
-    leaves, lbs = _bnb_frontier(fspace, ev, constraints, c, stats)
     state = {"inc": float("inf"), "best": (-1, float("inf")),
              "nf": 0, "n_eval": 0}
+    fp = None
+    rec = None
+    if rt is not None:
+        fp = _rt_fp("edp_bnb", wl, constraints, engine, c, interpret,
+                    shard, chunk_size, axes=fspace.axes, leaf=BNB_LEAF,
+                    batch=BNB_BATCH, fine=BNB_FINE)
+        rec = rt.resume(fp)
+    unit = 0
+    phase, probe_end = "probe", 0
+    inc_refine = float("inf")
+    if rec is not None:
+        unit, st, extra = rec
+        leaves, lbs = _bnb_frontier(fspace, ev, constraints, c,
+                                    {"n_pruned": 0, "n_bounds": 0})
+        state["best"] = decode_best_indexed(st)
+        state["inc"] = float(st["inc"][0])
+        inc_refine = float(st["inc_refine"][0])
+        state["nf"] = int(extra["nf"])
+        state["n_eval"] = int(extra["n_eval"])
+        stats["n_pruned"] = int(extra["n_pruned"])
+        stats["n_bounds"] = int(extra["n_bounds"])
+        phase, probe_end = extra["phase"], int(extra["probe_end"])
+    else:
+        leaves, lbs = _bnb_frontier(fspace, ev, constraints, c, stats)
+    resumed_sweep = phase == "sweep"
 
     def evaluate(ranges_list, n_points):
-        gi, e, f = _bnb_eval_edp(engine, fspace, wl, constraints, c,
-                                 interpret, ranges_list, shard, chunk_size)
+        if rt is None:
+            gi, e, f = _bnb_eval_edp(engine, fspace, wl, constraints, c,
+                                     interpret, ranges_list, shard,
+                                     chunk_size)
+        else:
+            gi, e, f = rt.eval_unit(engine, {
+                eng: functools.partial(_bnb_eval_edp, eng, fspace, wl,
+                                       constraints, c, interpret,
+                                       ranges_list, shard, chunk_size)
+                for eng in ("numpy", "jax", "pallas")})
         state["nf"] += f
         state["n_eval"] += n_points
         merged = _merge_best_indexed(state["best"], (gi, e))
@@ -2001,6 +2243,15 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
             _, _, energy, latency = eval_full(cfg, wl, c)[:4]
             state["inc"] = calc_edp(energy, latency)
 
+    def snapshot():
+        st = encode_best_indexed(state["best"])
+        st["inc"] = np.asarray([state["inc"]], np.float64)
+        st["inc_refine"] = np.asarray([inc_refine], np.float64)
+        rt.unit_done(fp, unit, st, {
+            "nf": state["nf"], "n_eval": state["n_eval"],
+            "n_pruned": stats["n_pruned"], "n_bounds": stats["n_bounds"],
+            "phase": phase, "probe_end": probe_end})
+
     # Probe: evaluate best-first batches until an incumbent exists (one
     # batch, unless the most promising leaves turn out infeasible).
     order = _bnb_order(fspace, leaves, lbs)
@@ -2008,27 +2259,45 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
     lbs = {k: v[order] for k, v in lbs.items()}
     sizes = _slab_sizes(leaves)
     slices = _bnb_batch_slices(sizes)
-    bi = 0
-    while bi < len(slices) and state["inc"] == float("inf"):
+    bi = probe_end
+    while (not resumed_sweep and bi < len(slices)
+           and state["inc"] == float("inf")):
         s, e = slices[bi]
         evaluate(leaves[s:e], int(sizes[s:e].sum()))
         bi += 1
+        if rt is not None:
+            probe_end = bi
+            snapshot()
+            unit += 1
     rs = slices[bi][0] if bi < len(slices) else len(leaves)
 
     # Refine the remainder against the incumbent, then evaluate whatever
     # survives, best-first — the sorted early-exit stops the sweep the
-    # moment the smallest remaining bound clears the incumbent.
+    # moment the smallest remaining bound clears the incumbent. The
+    # incumbent frozen at refine start is what the prune compares against
+    # (evaluation never runs during the descent, so the live incumbent
+    # equals the frozen one — persisting it makes the resumed replay
+    # exact even though the live incumbent keeps moving in the sweep).
+    if not resumed_sweep:
+        inc_refine = state["inc"]
+        refine_stats = stats
+    else:
+        refine_stats = {"n_pruned": 0, "n_bounds": 0}
     ready, rlbs = _bnb_descend(
         fspace, ev,
         lambda b: (_bnb_infeasible_mask(b, constraints)
-                   | (np.asarray(b["edp"]) > state["inc"])),
-        leaves[rs:], {k: v[rs:] for k, v in lbs.items()}, BNB_FINE, stats,
-        c)
+                   | (np.asarray(b["edp"]) > inc_refine)),
+        leaves[rs:], {k: v[rs:] for k, v in lbs.items()}, BNB_FINE,
+        refine_stats, c)
+    phase, probe_end = "sweep", bi
     order = _bnb_order(fspace, ready, rlbs)
     ready = ready[order]
     edp_lo = rlbs["edp"][order] if len(ready) else np.zeros(0)
     sizes = _slab_sizes(ready)
-    for s, e in _bnb_batch_slices(sizes):
+    sweep_done = unit - bi
+    for j, (s, e) in enumerate(_bnb_batch_slices(sizes)):
+        if j < sweep_done:
+            continue
         if edp_lo[s] > state["inc"]:
             # Sorted leaves: once the smallest remaining bound exceeds
             # the incumbent, everything left is prunable.
@@ -2037,34 +2306,69 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
         live = edp_lo[s:e] <= state["inc"]
         stats["n_pruned"] += int(sizes[s:e][~live].sum())
         evaluate(ready[s:e][live], int(sizes[s:e][live].sum()))
+        if rt is not None:
+            snapshot()
+            unit += 1
     best = state["best"]
     row = fspace.decode([best[0]])[0] if best[0] >= 0 else None
     r = _make_result(row, state["nf"], wl, c, fspace.size, state["n_eval"],
                      time.perf_counter() - t0)
     r.n_pruned = stats["n_pruned"]
     r.n_bounds = stats["n_bounds"]
-    return r
+    return rt.annotate(r) if rt is not None else r
 
 
 def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
-                           objectives, shard, chunk_size) -> ParetoResult:
+                           objectives, shard, chunk_size, rt=None
+                           ) -> ParetoResult:
     """Bound-guided frontier driver: probe the objective-sorted leaves to
     seed the running (float64-refined) frontier, refine the remainder
     against it, then evaluate the survivors in batches. A slab is pruned
     when its objective lower-bound corner is strictly dominated by a
     running-frontier point — every point of such a slab is strictly
     dominated too, transitively safe even if that frontier point is
-    later evicted (its evictor dominates the slab as well)."""
+    later evicted (its evictor dominates the slab as well). Runtime
+    checkpointing follows `_search_factorized_bnb`, with the frozen
+    refinement frontier persisted alongside the live one."""
     from .factorized import SlabBoundEvaluator
     t0 = time.perf_counter()
+    d = len(objectives)
     ev = SlabBoundEvaluator.from_workload(fspace, wl, c)
     stats = {"n_pruned": 0, "n_bounds": 0}
-    leaves, lbs = _bnb_frontier(fspace, ev, constraints, c, stats)
     state = {"rows": _empty_run_state()[0], "met": _empty_run_state()[1],
-             "pts": np.zeros((0, len(objectives))), "nf": 0, "n_eval": 0}
+             "pts": np.zeros((0, d)), "nf": 0, "n_eval": 0, "n_over": 0}
+    fp = None
+    rec = None
+    if rt is not None:
+        fp = _rt_fp("pareto_bnb", wl, constraints, engine, c, interpret,
+                    shard, chunk_size, axes=fspace.axes,
+                    objectives=tuple(objectives), leaf=BNB_LEAF,
+                    batch=BNB_BATCH, fine=BNB_FINE)
+        rec = rt.resume(fp)
+    unit = 0
+    phase, probe_end = "probe", 0
+    pts_refine = np.zeros((0, d))
+    if rec is not None:
+        unit, st, extra = rec
+        leaves, lbs = _bnb_frontier(fspace, ev, constraints, c,
+                                    {"n_pruned": 0, "n_bounds": 0})
+        state["rows"], state["met"] = decode_front(st, REPORT_METRICS)
+        state["pts"] = (np.stack([state["met"][k] for k in objectives],
+                                 axis=1) if len(state["rows"])
+                        else np.zeros((0, d)))
+        pts_refine = np.asarray(st["pts_refine"],
+                                np.float64).reshape(-1, d)
+        state["nf"] = int(extra["nf"])
+        state["n_eval"] = int(extra["n_eval"])
+        state["n_over"] = int(extra["n_over"])
+        stats["n_pruned"] = int(extra["n_pruned"])
+        stats["n_bounds"] = int(extra["n_bounds"])
+        phase, probe_end = extra["phase"], int(extra["probe_end"])
+    else:
+        leaves, lbs = _bnb_frontier(fspace, ev, constraints, c, stats)
+    resumed_sweep = phase == "sweep"
 
-    def dominated_mask(lbs_arrays):
-        pts = state["pts"]
+    def dominated_vs(pts, lbs_arrays):
         corners = np.stack([np.asarray(lbs_arrays[k], np.float64)
                             for k in objectives], axis=1)
         if not len(pts):
@@ -2074,53 +2378,96 @@ def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
         return np.any(le & lt, axis=1)
 
     def evaluate(ranges_list, n_points):
-        idx, f = _bnb_eval_pareto(engine, fspace, wl, constraints, c,
-                                  interpret, ranges_list, shard,
-                                  chunk_size, objectives, state["rows"])
+        if rt is None:
+            idx, f, o = _bnb_eval_pareto(engine, fspace, wl, constraints,
+                                         c, interpret, ranges_list, shard,
+                                         chunk_size, objectives,
+                                         state["rows"])
+        else:
+            idx, f, o = rt.eval_unit(engine, {
+                eng: functools.partial(_bnb_eval_pareto, eng, fspace, wl,
+                                       constraints, c, interpret,
+                                       ranges_list, shard, chunk_size,
+                                       objectives, state["rows"])
+                for eng in ("numpy", "jax", "pallas")})
         state["nf"] += f
         state["n_eval"] += n_points
+        state["n_over"] += o
         if len(idx):
             state["rows"], state["met"] = _merge_running_front(
                 state["rows"], state["met"], fspace.decode(idx), wl,
                 constraints, c, objectives)
             state["pts"] = (np.stack([state["met"][k] for k in objectives],
                                      axis=1) if len(state["rows"])
-                            else np.zeros((0, len(objectives))))
+                            else np.zeros((0, d)))
+
+    def snapshot():
+        st = encode_front(state["rows"], state["met"], REPORT_METRICS)
+        st["pts_refine"] = np.asarray(pts_refine,
+                                      np.float64).reshape(-1, d)
+        rt.unit_done(fp, unit, st, {
+            "nf": state["nf"], "n_eval": state["n_eval"],
+            "n_over": state["n_over"], "n_pruned": stats["n_pruned"],
+            "n_bounds": stats["n_bounds"], "phase": phase,
+            "probe_end": probe_end})
 
     order = _bnb_order(fspace, leaves, lbs, objectives)
     leaves = leaves[order]
     lbs = {k: v[order] for k, v in lbs.items()}
     sizes = _slab_sizes(leaves)
     slices = _bnb_batch_slices(sizes)
-    bi = 0
-    while bi < len(slices) and not len(state["pts"]):
+    bi = probe_end
+    while not resumed_sweep and bi < len(slices) and not len(state["pts"]):
         s, e = slices[bi]
         evaluate(leaves[s:e], int(sizes[s:e].sum()))
         bi += 1
+        if rt is not None:
+            probe_end = bi
+            snapshot()
+            unit += 1
     rs = slices[bi][0] if bi < len(slices) else len(leaves)
+    # The frontier frozen at refine start drives the refinement prune
+    # (the descent never evaluates, so freezing it is exact — and
+    # persisting it makes the resumed replay identical even after the
+    # live frontier moves during the sweep).
+    if not resumed_sweep:
+        pts_refine = state["pts"]
+        refine_stats = stats
+    else:
+        refine_stats = {"n_pruned": 0, "n_bounds": 0}
     ready, rlbs = _bnb_descend(
         fspace, ev,
         lambda b: (_bnb_infeasible_mask(b, constraints)
-                   | dominated_mask(b)),
-        leaves[rs:], {k: v[rs:] for k, v in lbs.items()}, BNB_FINE, stats,
-        c)
+                   | dominated_vs(pts_refine, b)),
+        leaves[rs:], {k: v[rs:] for k, v in lbs.items()}, BNB_FINE,
+        refine_stats, c)
+    phase, probe_end = "sweep", bi
     order = _bnb_order(fspace, ready, rlbs, objectives)
     ready = ready[order]
     rlbs = {k: v[order] for k, v in rlbs.items()}
     sizes = _slab_sizes(ready)
-    for s, e in _bnb_batch_slices(sizes):
-        die = dominated_mask({k: v[s:e] for k, v in rlbs.items()})
+    sweep_done = unit - bi
+    for j, (s, e) in enumerate(_bnb_batch_slices(sizes)):
+        if j < sweep_done:
+            continue
+        die = dominated_vs(state["pts"], {k: v[s:e]
+                                          for k, v in rlbs.items()})
         stats["n_pruned"] += int(sizes[s:e][die].sum())
         if not die.all():
             evaluate(ready[s:e][~die], int(sizes[s:e][~die].sum()))
+        if rt is not None:
+            snapshot()
+            unit += 1
     front, met, _ = _pareto_from_rows(state["rows"], wl, constraints, c,
                                       objectives, m=state["met"])
-    return ParetoResult(front=front, metrics=met, objectives=objectives,
-                        n_evaluated=fspace.size, n_feasible=state["nf"],
-                        n_workload_evals=state["n_eval"],
-                        wall_time_s=time.perf_counter() - t0,
-                        n_pruned=stats["n_pruned"],
-                        n_bounds=stats["n_bounds"])
+    res = ParetoResult(front=front, metrics=met, objectives=objectives,
+                       n_evaluated=fspace.size, n_feasible=state["nf"],
+                       n_workload_evals=state["n_eval"],
+                       wall_time_s=time.perf_counter() - t0,
+                       n_pruned=stats["n_pruned"],
+                       n_bounds=stats["n_bounds"],
+                       n_overflow=state["n_over"])
+    return rt.annotate(res) if rt is not None else res
 
 
 def _workloads_pallas_factorized(wls, names, cons_for, fspace, c, interpret,
@@ -2154,6 +2501,7 @@ def _workloads_pallas_factorized(wls, names, cons_for, fspace, c, interpret,
 
     run = {nm: _empty_run_state() for nm in names}
     nf = {nm: 0 for nm in names}
+    n_over = {nm: 0 for nm in names}
     for s, n in _iter_spans(fspace.size, chunk_size):
         n_wl += n
         carry_points = [
@@ -2163,8 +2511,9 @@ def _workloads_pallas_factorized(wls, names, cons_for, fspace, c, interpret,
         per_wl = dse_pareto_multi_factorized(
             fspace, s, n, wl_list, cons_list, c, interpret,
             objectives=metrics, shard=shard, carry_points=carry_points)
-        for nm, (idx, f) in zip(names, per_wl):
+        for nm, (idx, f, o) in zip(names, per_wl):
             nf[nm] += f
+            n_over[nm] += o
             if len(idx):
                 run[nm] = _merge_running_front(
                     run[nm][0], run[nm][1], fspace.decode(idx), wls[nm],
@@ -2176,7 +2525,8 @@ def _workloads_pallas_factorized(wls, names, cons_for, fspace, c, interpret,
                                           c, metrics, m=run[nm][1])
         out[nm] = ParetoResult(front=front, metrics=met, objectives=metrics,
                                n_evaluated=fspace.size, n_feasible=nf[nm],
-                               n_workload_evals=n_wl, wall_time_s=wall)
+                               n_workload_evals=n_wl, wall_time_s=wall,
+                               n_overflow=n_over[nm])
     return out
 
 
@@ -2212,6 +2562,28 @@ def _check_prune_arg(prune, factorized):
                          "factorized=True (numpy/jax/pallas engines)")
 
 
+def _check_grid(grid) -> np.ndarray:
+    """Reject malformed candidate grids up front: a wrong-shaped or
+    non-positive grid would surface as a silent zero-feasible result (or a
+    model-layer division blowup), indistinguishable from a genuinely
+    infeasible search."""
+    g = np.asarray(grid)
+    if g.ndim != 2 or (len(g) and g.shape[1] != 5):
+        raise ValueError(f"grid must be a (G, 5) array of config rows "
+                         f"(n_t, n_c, n_h, n_v, n_lambda); got shape "
+                         f"{g.shape}")
+    if len(g) == 0:
+        raise ValueError("grid is empty: no candidate configs to search")
+    if g.dtype.kind not in "iuf":
+        raise ValueError(f"grid must be numeric, got dtype {g.dtype}")
+    if g.dtype.kind == "f" and not np.isfinite(g).all():
+        raise ValueError("grid contains non-finite (NaN/Inf) entries")
+    if (g < 1).any():
+        raise ValueError("grid entries are parallelism degrees and must "
+                         "all be >= 1")
+    return g
+
+
 def search(wl: Workload, constraints: Constraints = Constraints(), *,
            engine: str = "numpy", grid: Optional[np.ndarray] = None,
            n_z: int = 12, hierarchical: bool = False,
@@ -2220,7 +2592,7 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
            pareto_metrics: tuple = DEFAULT_OBJECTIVES,
            shard: Optional[int] = None, chunk_size: Optional[int] = None,
            factorized: bool = False, space=None,
-           prune: Optional[str] = None
+           prune: Optional[str] = None, runtime=None
            ) -> Union[SearchResult, ParetoResult]:
     """Unified search over a config grid.
 
@@ -2280,21 +2652,45 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
         Composes with `shard=` / `chunk_size=` without changing the slab
         tree, so counters match across every setting. Requires
         factorized=True.
+      runtime: a `core.runtime.RuntimePolicy` (or `SearchRuntime`)
+        attaching the resilient control plane: checkpoint/resume through
+        the step-atomic snapshot layer, bounded-backoff launch retries
+        with pallas -> jax -> numpy degradation, a per-launch watchdog,
+        and NaN quarantine with host float64 re-evaluation. Results are
+        byte-identical with or without a runtime; the campaign's
+        retry/fallback/quarantine/checkpoint counters come back on the
+        result. See README "Long searches".
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; pick from "
                          f"{sorted(ENGINES)}")
     _check_stream_args(shard, chunk_size)
     _check_prune_arg(prune, factorized)
+    rt = SearchRuntime.of(runtime) if runtime is not None else None
+    if rt is None:
+        return _search_impl(wl, constraints, engine, grid, n_z,
+                            hierarchical, c, interpret, objective,
+                            pareto_metrics, shard, chunk_size, factorized,
+                            space, prune, None)
+    with _activate_rt(rt):
+        return _search_impl(wl, constraints, engine, grid, n_z,
+                            hierarchical, c, interpret, objective,
+                            pareto_metrics, shard, chunk_size, factorized,
+                            space, prune, rt)
+
+
+def _search_impl(wl, constraints, engine, grid, n_z, hierarchical, c,
+                 interpret, objective, pareto_metrics, shard, chunk_size,
+                 factorized, space, prune, rt):
     if factorized:
         fspace = _factorized_space(space, grid, n_z, engine, hierarchical)
         if objective == "edp":
             if prune == "bound":
                 return _search_factorized_bnb(fspace, wl, constraints,
                                               engine, c, interpret, shard,
-                                              chunk_size)
+                                              chunk_size, rt)
             return _search_factorized(fspace, wl, constraints, engine, c,
-                                      interpret, shard, chunk_size)
+                                      interpret, shard, chunk_size, rt)
         if objective != "pareto":
             raise ValueError(f"unknown objective {objective!r}; "
                              f"pick 'edp' or 'pareto'")
@@ -2302,21 +2698,24 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
         if prune == "bound":
             return _pareto_factorized_bnb(fspace, wl, constraints, engine,
                                           c, interpret, metrics, shard,
-                                          chunk_size)
+                                          chunk_size, rt)
         return _pareto_factorized(fspace, wl, constraints, engine, c,
-                                  interpret, metrics, shard, chunk_size)
+                                  interpret, metrics, shard, chunk_size, rt)
     if space is not None:
         raise ValueError("space= requires factorized=True (pass grid= for "
                          "materialized candidate sets)")
-    if grid is None:
-        grid = _full_grid(n_z)
-    grid = np.asarray(grid)
-    streamed = shard is not None or chunk_size is not None
+    grid = _full_grid(n_z) if grid is None else _check_grid(grid)
+    # A runtime routes through the streamed drivers even one-shot: the
+    # single-chunk streamed sweep is byte-identical to the one-shot path
+    # (tests/test_sharded_search.py), and it is where the unit guard and
+    # the checkpoint cursor live.
+    streamed = (shard is not None or chunk_size is not None
+                or rt is not None)
     if objective == "edp":
         if streamed:
             return _search_streamed(grid, wl, constraints, engine,
                                     hierarchical, c, interpret, shard,
-                                    chunk_size)
+                                    chunk_size, rt)
         return ENGINES[engine](grid, wl, constraints, c, hierarchical,
                                interpret)
     if objective != "pareto":
@@ -2325,7 +2724,8 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
     metrics = _check_pareto_metrics(engine, pareto_metrics)
     if streamed:
         return _pareto_streamed(grid, wl, constraints, engine, hierarchical,
-                                c, interpret, metrics, shard, chunk_size)
+                                c, interpret, metrics, shard, chunk_size,
+                                rt)
     return PARETO_ENGINES[engine](grid, wl, constraints, c, hierarchical,
                                   interpret, metrics)
 
@@ -2383,6 +2783,7 @@ def _workloads_pallas_streamed(wls, names, cons_for, grid, hierarchical, c,
 
     run = {nm: _empty_run_state() for nm in names}
     nf = {nm: 0 for nm in names}
+    n_over = {nm: 0 for nm in names}
     for chunk in _iter_chunks(grid, cs):
         sub = _union_prefiltered(chunk, wls, names, cons_for, c,
                                  hierarchical)
@@ -2396,8 +2797,9 @@ def _workloads_pallas_streamed(wls, names, cons_for, grid, hierarchical, c,
         per_wl = dse_pareto_multi(sub, wl_list, cons_list, c, interpret,
                                   objectives=metrics, shard=shard,
                                   carry_points=carry_points)
-        for nm, (cand_idx, f) in zip(names, per_wl):
+        for nm, (cand_idx, f, o) in zip(names, per_wl):
             nf[nm] += f
+            n_over[nm] += o
             if len(cand_idx):
                 run[nm] = _merge_running_front(
                     run[nm][0], run[nm][1], sub[cand_idx], wls[nm],
@@ -2409,7 +2811,8 @@ def _workloads_pallas_streamed(wls, names, cons_for, grid, hierarchical, c,
                                           c, metrics, m=run[nm][1])
         out[nm] = ParetoResult(front=front, metrics=met, objectives=metrics,
                                n_evaluated=n, n_feasible=nf[nm],
-                               n_workload_evals=n_wl, wall_time_s=wall)
+                               n_workload_evals=n_wl, wall_time_s=wall,
+                               n_overflow=n_over[nm])
     return out
 
 
@@ -2426,7 +2829,7 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                      shard: Optional[int] = None,
                      chunk_size: Optional[int] = None,
                      factorized: bool = False, space=None,
-                     prune: Optional[str] = None
+                     prune: Optional[str] = None, runtime=None
                      ) -> Dict[str, Union[SearchResult, ParetoResult]]:
     """Batched search: many workloads against one grid.
 
@@ -2449,6 +2852,11 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
     branch-and-bound driver per workload (the slab tree is specialized by
     each workload's bounds and incumbent, so there is no shared batched
     launch to fuse — wall time reports the whole batch as usual).
+    `runtime=` attaches the resilient control plane as in `search`; the
+    batch runs as a per-workload loop (full checkpoint/resume per
+    workload, each under `<checkpoint_dir>/<workload name>`); every
+    sub-search shares the batch campaign's fault injector, and each
+    result carries its own workload's counters.
     """
     if not isinstance(wls, Mapping):
         wls = {wl.name: wl for wl in wls}
@@ -2457,10 +2865,26 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                          f"pick 'edp' or 'pareto'")
     _check_stream_args(shard, chunk_size)
     _check_prune_arg(prune, factorized)
+    rt0 = SearchRuntime.of(runtime) if runtime is not None else None
+    if grid is not None:
+        grid = _check_grid(grid)
 
     def cons_for(name):
         return constraints[name] if isinstance(constraints, Mapping) \
             else constraints
+
+    def rt_for(name):
+        """Per-workload campaign (own counters + checkpoint subdirectory)
+        sharing the batch runtime's fault injector."""
+        if rt0 is None:
+            return None
+        pol = rt0.policy
+        if pol.checkpoint_dir:
+            pol = dataclasses.replace(
+                pol, checkpoint_dir=os.path.join(pol.checkpoint_dir, name))
+        sub = SearchRuntime(pol)
+        sub.fault_injector = rt0.fault_injector
+        return sub
 
     if prune == "bound":
         # Same argument contract as search(): a materialized grid or the
@@ -2472,14 +2896,15 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                             c=c, interpret=interpret, objective=objective,
                             pareto_metrics=pareto_metrics, shard=shard,
                             chunk_size=chunk_size, factorized=True,
-                            space=space, prune="bound")
+                            space=space, prune="bound",
+                            runtime=rt_for(name))
                for name, wl in wls.items()}
         total = sum(r.wall_time_s for r in out.values())
         for r in out.values():
             r.wall_time_s = total
         return out
 
-    if factorized and engine == "pallas":
+    if factorized and engine == "pallas" and rt0 is None:
         fspace = _factorized_space(space, grid, n_z, engine, hierarchical)
         names = list(wls)
         metrics = (_check_pareto_metrics(engine, pareto_metrics)
@@ -2487,7 +2912,11 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
         return _workloads_pallas_factorized(wls, names, cons_for, fspace,
                                             c, interpret, objective,
                                             metrics, shard, chunk_size)
-    if engine != "pallas":
+    if engine != "pallas" or rt0 is not None:
+        # The resilient runtime always takes the per-workload loop: the
+        # fused batched launches return byte-identical results, so the
+        # only cost is launch count — and per-workload campaigns are what
+        # make the checkpoint cursors and counters well-defined.
         if grid is None and not factorized:
             grid = _full_grid(n_z)  # materialize once, share across workloads
         out = {name: search(wl, cons_for(name), engine=engine, grid=grid,
@@ -2495,7 +2924,7 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                             interpret=interpret, objective=objective,
                             pareto_metrics=pareto_metrics, shard=shard,
                             chunk_size=chunk_size, factorized=factorized,
-                            space=space)
+                            space=space, runtime=rt_for(name))
                for name, wl in wls.items()}
         total = sum(r.wall_time_s for r in out.values())
         for r in out.values():
@@ -2534,10 +2963,11 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                                   objectives=metrics)
         wall = time.perf_counter() - t0
         out = {}
-        for name, (cand_idx, nf) in zip(names, per_wl):
+        for name, (cand_idx, nf, n_over) in zip(names, per_wl):
             r = _pareto_result(sub[cand_idx], nf, wls[name], cons_for(name),
                                c, metrics, len(grid), n_wl, t0)
             r.wall_time_s = wall
+            r.n_overflow = n_over
             out[name] = r
         return out
 

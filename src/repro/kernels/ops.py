@@ -15,6 +15,7 @@ see aligned, pre-quantized operands only.
 from __future__ import annotations
 
 import functools
+import logging
 from typing import Optional
 
 import jax
@@ -29,6 +30,23 @@ from repro.core.workload import Workload
 from . import ddot_gemm as _ddot
 from . import dse_eval as _dse
 from .ref import quantize4
+
+log = logging.getLogger("repro.kernels")
+
+
+def _integrity_check(out, what: str):
+    """NaN guard on a kernel's reduction output, active only under a
+    resilient search runtime (core.runtime) — zero work otherwise. The
+    engines' metric pipelines never emit NaN (infeasible lanes reduce to
+    +inf), so NaN here means a poisoned launch (bad memory, an injected
+    fault); raising NanDetected routes the unit into the runtime's
+    quarantine-then-host-float64 re-evaluation."""
+    from repro.core import runtime as _runtime
+    if _runtime.current() is None:
+        return
+    a = np.asarray(out)
+    if a.dtype.kind == "f" and np.isnan(a).any():
+        raise _runtime.NanDetected(f"NaN in {what} kernel output block")
 
 
 def _pad_to(x, m0, m1):
@@ -289,6 +307,7 @@ def dse_search_multi(grid: np.ndarray, wls, constraints_seq,
             cols, mask, cons, carry, workloads=workloads, constants=c,
             interpret=interpret))
         col_base = np.zeros(out.shape[1], np.int64)
+    _integrity_check(out, "dse_search")
     best_idx, best_edp, n_feasible = [], [], []
     for w in range(len(workloads)):
         edp_b, idx_b, nf_b = out[_dse.SEARCH_ROWS * w:
@@ -330,11 +349,14 @@ def dse_pareto_multi(grid: np.ndarray, wls, constraints_seq,
     chunks of a streamed sweep) prunes candidates a carried point strictly
     dominates, keeping per-chunk emissions frontier-sized.
 
-    Returns a list of (candidate_indices, n_feasible) per workload;
-    `candidate_indices` is a sorted int64 array of grid rows covering the
-    workload's feasible frontier as measured by the kernel's float32
-    metrics. As with the EDP engines (see core.search.search), a config
-    whose metric sits within one float32 ulp of a dominator's can classify
+    Returns a list of (candidate_indices, n_feasible, n_overflow) per
+    workload; `candidate_indices` is a sorted int64 array of grid rows
+    covering the workload's feasible frontier as measured by the kernel's
+    float32 metrics, and `n_overflow` counts the blocks whose local front
+    overflowed MAX_FRONT and fell back to whole-block candidates (exact
+    but wider — surfaced so callers can report the host-refine pressure).
+    As with the EDP engines (see core.search.search), a config whose
+    metric sits within one float32 ulp of a dominator's can classify
     differently than under float64 — real design points never ride that
     edge.
     """
@@ -363,6 +385,7 @@ def dse_pareto_multi(grid: np.ndarray, wls, constraints_seq,
         n_cols = out.shape[1]
         col_base = np.zeros(n_cols, np.int64)
         blk_lo = np.arange(n_cols, dtype=np.int64) * _dse.BLOCK
+    _integrity_check(out, "dse_pareto")
     results = []
     for w in range(len(workloads)):
         rows = out[_dse.PARETO_ROWS * w:_dse.PARETO_ROWS * (w + 1)]
@@ -371,12 +394,18 @@ def dse_pareto_multi(grid: np.ndarray, wls, constraints_seq,
         idx = rows[_dse.PARETO_HEADER:] + col_base[None, :]
         cand = idx[rows[_dse.PARETO_HEADER:] >= 0].astype(np.int64)
         overflowed = np.nonzero(counts > _dse.MAX_FRONT)[0]
+        if len(overflowed):
+            log.warning("pareto kernel: %d block(s) overflowed MAX_FRONT"
+                        "=%d; falling back to whole-block candidates "
+                        "(exact, host-refined)", len(overflowed),
+                        _dse.MAX_FRONT)
         for b in overflowed:
             lo = int(blk_lo[b])
             cand = np.concatenate(
                 [cand, np.arange(lo, min(lo + _dse.BLOCK, len(grid)))])
         results.append((np.unique(cand),
-                        int(round(float(nfeas_b.sum())))))
+                        int(round(float(nfeas_b.sum()))),
+                        int(len(overflowed))))
     return results
 
 
@@ -555,6 +584,7 @@ def dse_search_multi_factorized(space, start: int, count: int, wls,
     out, _ = _decoded_launch(space, start, count, "search",
                              (workloads, c, interpret), cons, carry, shard,
                              slab)
+    _integrity_check(out, "dse_search_decoded")
     best_idx, best_edp, n_feasible = [], [], []
     for w in range(len(workloads)):
         edp_b, idx_b, nf_b = out[_dse.SEARCH_ROWS * w:
@@ -580,9 +610,10 @@ def dse_pareto_multi_factorized(space, start: int, count: int, wls,
                                 objectives: tuple = ("area", "power", "edp"),
                                 *, shard=None, carry_points=None, slab=None):
     """Batched frontier-candidate search over an index span of a product
-    space; same contract as `dse_pareto_multi` with global flat-space
-    candidate indices. `slab` masks the span to a slab's members exactly as
-    in `dse_search_multi_factorized` (an overflowing block's whole-block
+    space; same contract as `dse_pareto_multi` — (candidate_indices,
+    n_feasible, n_overflow) triples — with global flat-space candidate
+    indices. `slab` masks the span to a slab's members exactly as in
+    `dse_search_multi_factorized` (an overflowing block's whole-block
     fallback is clipped back to slab members, so candidate lists never leak
     lanes the launch was asked to mask)."""
     workloads = tuple(workload_statics(wl, c) for wl in wls)
@@ -596,13 +627,20 @@ def dse_pareto_multi_factorized(space, start: int, count: int, wls,
         (workloads, objectives, has_carry, c, interpret), cons, carry,
         shard, slab)
     limit = min(start + count, space.size)
+    _integrity_check(out, "dse_pareto_decoded")
     results = []
     for w in range(len(workloads)):
         rows = out[_dse.PARETO_ROWS * w:_dse.PARETO_ROWS * (w + 1)]
         counts, nfeas_b = rows[0], rows[1]
         idx = rows[_dse.PARETO_HEADER:]
         cand = idx[idx >= 0].astype(np.int64)
-        for b in np.nonzero(counts > _dse.MAX_FRONT)[0]:
+        overflowed = np.nonzero(counts > _dse.MAX_FRONT)[0]
+        if len(overflowed):
+            log.warning("pareto decode kernel: %d block(s) overflowed "
+                        "MAX_FRONT=%d; falling back to whole-block "
+                        "candidates (exact, host-refined)",
+                        len(overflowed), _dse.MAX_FRONT)
+        for b in overflowed:
             lo = int(blk_lo[b])
             fallback = np.arange(lo, min(lo + _dse.BLOCK, limit))
             if slab is not None:
@@ -610,7 +648,8 @@ def dse_pareto_multi_factorized(space, start: int, count: int, wls,
                     _slab_member_mask(space.radices, slab, fallback)]
             cand = np.concatenate([cand, fallback])
         results.append((np.unique(cand),
-                        int(round(float(nfeas_b.sum())))))
+                        int(round(float(nfeas_b.sum()))),
+                        int(len(overflowed))))
     return results
 
 
@@ -658,8 +697,9 @@ def dse_pareto_spans_factorized(space, items, wls, constraints_seq,
                                 objectives: tuple = ("area", "power", "edp"),
                                 *, shard=None, carry_points=None):
     """Compose `dse_pareto_multi_factorized` launches over a work list of
-    (start, count, slab) triples: per-workload candidate-index unions and
-    summed feasible counts. `carry_points` (the running front at entry)
+    (start, count, slab) triples: per-workload (candidate-index union,
+    summed feasible count, summed overflow count) triples. `carry_points`
+    (the running front at entry)
     prunes every launch's emissions; candidates proposed by earlier items
     of the same list are *not* folded into the carry — the union is a
     candidate superset either way and the caller's float64 refinement
@@ -667,18 +707,20 @@ def dse_pareto_spans_factorized(space, items, wls, constraints_seq,
     w = len(wls)
     cands = [[] for _ in range(w)]
     n_feasible = [0] * w
+    n_overflow = [0] * w
     for start, count, slab in items:
         per_wl = dse_pareto_multi_factorized(
             space, start, count, wls, constraints_seq, c, interpret,
             objectives=objectives, shard=shard, carry_points=carry_points,
             slab=slab)
-        for wi, (idx, f) in enumerate(per_wl):
+        for wi, (idx, f, n_over) in enumerate(per_wl):
             n_feasible[wi] += f
+            n_overflow[wi] += n_over
             if len(idx):
                 cands[wi].append(idx)
     return [(np.unique(np.concatenate(cc)) if cc
-             else np.zeros(0, np.int64), f)
-            for cc, f in zip(cands, n_feasible)]
+             else np.zeros(0, np.int64), f, o)
+            for cc, f, o in zip(cands, n_feasible, n_overflow)]
 
 
 def decode_rows_device(space, start: int, count: int,

@@ -1,0 +1,6 @@
+"""Deterministic test instrumentation (fault injection for the resilient
+search runtime). Kept out of repro.core so production imports never pay
+for it."""
+from .faults import FaultInjector, FaultSpec, inject, kill_schedule
+
+__all__ = ["FaultInjector", "FaultSpec", "inject", "kill_schedule"]

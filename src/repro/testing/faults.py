@@ -1,0 +1,123 @@
+"""Deterministic fault injection for the resilient search runtime.
+
+The runtime (core.runtime.SearchRuntime) consults its injector at named
+sites:
+
+  * ``"launch"``     — before every unit-evaluation *attempt* (so a retry
+                       consults again and a one-shot fault is naturally
+                       absorbed by the retry loop);
+  * ``"checkpoint"`` — immediately after every COMMITTED snapshot (the
+                       kill-at-every-boundary tests hook here).
+
+A `FaultSpec` names a site, a fault kind and the 0-based invocation index
+at which it fires (``at=-1`` fires on *every* invocation — persistent
+failure, used to force engine fallback). Kinds:
+
+  * ``"raise"``   — raises LaunchError (transient launch failure);
+  * ``"timeout"`` — raises LaunchTimeout (watchdog expiry, without the
+                    wall-clock wait);
+  * ``"nan"``     — poisons the attempt's result with NaN (the runtime
+                    quarantines and re-evaluates on the host);
+  * ``"kill"``    — raises KillSearch (BaseException: simulated process
+                    death; propagates through every guard).
+
+Everything is a pure function of the spec list — no RNG at fire time — so
+a schedule replays identically across runs, which is what lets the
+kill/resume tests assert byte-identity. `kill_schedule(seed, ...)` derives
+a seeded random schedule for the hypothesis-style matrix tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.runtime import KillSearch, LaunchError, LaunchTimeout
+
+SITES = ("launch", "checkpoint")
+KINDS = ("raise", "timeout", "nan", "kill")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault: fire `kind` at invocation `at` of `site`
+    (0-based; -1 = every invocation)."""
+    site: str
+    kind: str
+    at: int = 0
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown site {self.site!r}; one of {SITES}")
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown kind {self.kind!r}; one of {KINDS}")
+
+
+class FaultInjector:
+    """Replays a FaultSpec schedule against per-site invocation counters.
+
+    `fire(site)` is called by the runtime; it returns True when the
+    current invocation is scheduled to produce a NaN-poisoned result, and
+    raises for the failure kinds. `hits` records every fault actually
+    fired (site, kind, invocation) for assertions.
+    """
+
+    def __init__(self, specs: Iterable[FaultSpec] = ()):
+        self.specs: Tuple[FaultSpec, ...] = tuple(specs)
+        self.calls: Dict[str, int] = {s: 0 for s in SITES}
+        self.hits: List[Tuple[str, str, int]] = []
+
+    def fire(self, site: str) -> bool:
+        idx = self.calls[site]
+        self.calls[site] = idx + 1
+        poison = False
+        for spec in self.specs:
+            if spec.site != site or (spec.at != -1 and spec.at != idx):
+                continue
+            self.hits.append((site, spec.kind, idx))
+            if spec.kind == "raise":
+                raise LaunchError(f"injected launch failure "
+                                  f"({site}#{idx})")
+            if spec.kind == "timeout":
+                raise LaunchTimeout(f"injected watchdog expiry "
+                                    f"({site}#{idx})")
+            if spec.kind == "kill":
+                raise KillSearch(f"injected process death ({site}#{idx})")
+            poison = True  # "nan"
+        return poison
+
+
+def kill_schedule(seed: int, n_boundaries: int, n_launches: int,
+                  max_faults: int = 3) -> List[FaultSpec]:
+    """Seeded schedule for the fault matrix: a few transient faults at
+    random launch attempts, ending in a kill at a random site/index.
+    Deterministic in `seed` — the same seed always produces the same
+    schedule (the byte-identity tests rely on replaying it)."""
+    rng = np.random.default_rng(seed)
+    specs: List[FaultSpec] = []
+    for _ in range(int(rng.integers(0, max_faults))):
+        kind = ("raise", "timeout", "nan")[int(rng.integers(0, 3))]
+        specs.append(FaultSpec("launch", kind,
+                               int(rng.integers(0, max(1, n_launches)))))
+    if rng.integers(0, 2) and n_boundaries > 0:
+        specs.append(FaultSpec("checkpoint", "kill",
+                               int(rng.integers(0, n_boundaries))))
+    else:
+        specs.append(FaultSpec("launch", "kill",
+                               int(rng.integers(0, max(1, n_launches)))))
+    return specs
+
+
+@contextlib.contextmanager
+def inject(runtime, specs: Sequence[FaultSpec]):
+    """Install a fresh FaultInjector on `runtime` for the duration of the
+    block; yields the injector (inspect `.hits` afterwards)."""
+    inj = FaultInjector(specs)
+    prev = runtime.fault_injector
+    runtime.fault_injector = inj
+    try:
+        yield inj
+    finally:
+        runtime.fault_injector = prev

@@ -205,7 +205,7 @@ def test_dse_pareto_kernel_candidates_cover_frontier(gsize):
     wl = load("deit-t")
     cons = Constraints()
     grid = np.random.default_rng(gsize).integers(1, 13, size=(gsize, 5))
-    (cand, nf), = dse_pareto_multi(grid, [wl], [cons])
+    (cand, nf, _), = dse_pareto_multi(grid, [wl], [cons])
     front_ref, nf_ref = dse_pareto_ref(grid, wl, cons)
     assert nf == nf_ref
     rows = np.asarray(grid)[cand]

@@ -175,9 +175,11 @@ def test_pallas_block_overflow_at_real_bound_host_refine_taken():
     # The fallback is observably taken: every row of the overflowing block
     # joins the candidate list, which the <=MAX_FRONT emission path alone
     # could never produce — and nothing past len(grid) leaks in.
-    (cand, nf), = dse_pareto_multi(grid, [wl], [cons])
+    (cand, nf, n_over), = dse_pareto_multi(grid, [wl], [cons])
     assert set(range(dse_eval.BLOCK)) <= set(cand.tolist())
     assert cand.max() < len(grid)
+    # Both duplicate runs overflowed their blocks, and the kernel says so.
+    assert n_over >= 2
 
     # End-to-end exactness: every duplicate is an exact tie, so all
     # BLOCK + MAX_FRONT + 33 copies are on the frontier, byte-identically

@@ -1,0 +1,503 @@
+"""Resilient-runtime tests: checkpoint/resume byte-identity, retry with
+graceful degradation, numerical-integrity quarantine, and input validation.
+
+The contract under test (core.runtime + the search drivers):
+
+  * a search killed at ANY checkpoint boundary or mid-unit and then
+    resumed from the same directory produces byte-identical winners,
+    frontiers, and counters to an uninterrupted run — per engine,
+    objective, and (shard, chunk) layout;
+  * transient launch failures are retried with bounded exponential
+    backoff; persistent failures degrade pallas -> jax -> numpy, and only
+    an all-engines failure raises LaunchExhausted;
+  * NaN-poisoned metric blocks are quarantined and re-evaluated on the
+    host in float64, preserving byte-identity;
+  * malformed inputs (NaN/zero/negative constraint bounds, bad grids,
+    sub-unit factorized axes) fail fast with ValueError.
+
+Faults come from the deterministic injector in repro.testing.faults — no
+RNG at fire time, so every schedule replays identically.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover — CI images without hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (Constraints, FactorizedSpace, KillSearch,
+                        LaunchExhausted, REPORT_METRICS, RuntimePolicy,
+                        SearchRuntime, search, search_workloads)
+from repro.core.paper_workloads import load
+from repro.core.runtime import COUNTER_KEYS, CheckpointMismatch
+from repro.testing import FaultInjector, FaultSpec, inject, kill_schedule
+
+WL = load("deit-t")
+CONS = Constraints()
+
+
+def _grid(seed, size=700):
+    rng = np.random.default_rng(seed)
+    return np.unique(rng.integers(1, 13, size=(size, 5)), axis=0)
+
+
+def _policy(tmpdir=None, **kw):
+    # Recorded no-op sleep: backoff stays deterministic and instant.
+    kw.setdefault("sleep", lambda s: None)
+    return RuntimePolicy(checkpoint_dir=str(tmpdir) if tmpdir else None, **kw)
+
+
+def _assert_same(objective, ref, got, label):
+    if objective == "edp":
+        assert got.best_cfg == ref.best_cfg, label
+        a, b = ref.edp, got.edp
+        assert (a == b) or (np.isnan(a) and np.isnan(b)), label
+    else:
+        assert np.array_equal(got.front, ref.front), label
+        for k in REPORT_METRICS:
+            assert np.array_equal(got.metrics[k], ref.metrics[k]), (label, k)
+    assert got.n_feasible == ref.n_feasible, label
+    assert got.n_evaluated == ref.n_evaluated, label
+    assert got.n_workload_evals == ref.n_workload_evals, label
+
+
+def _assert_same_counters(ref, got, label):
+    for k in COUNTER_KEYS:
+        assert getattr(got, k) == getattr(ref, k), (label, k)
+
+
+# ---------------------------------------------------------------------------
+# Input validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("field", ["area_mm2", "power_w", "energy_mj",
+                                   "latency_ms"])
+@pytest.mark.parametrize("bad", [float("nan"), 0.0, -1.0, -float("inf"),
+                                 "5", None, True])
+def test_constraints_reject_degenerate_bounds(field, bad):
+    with pytest.raises(ValueError, match="positive"):
+        Constraints(**{field: bad})
+
+
+def test_constraints_accept_inf_and_numpy_scalars():
+    Constraints(area_mm2=float("inf"))  # +inf = unconstrained
+    Constraints(power_w=np.float32(3.0), area_mm2=np.int64(40))
+
+
+@pytest.mark.parametrize("bad", [
+    np.zeros((0, 5)),                       # empty
+    np.ones((4, 4)),                        # wrong column count
+    np.ones(5),                             # not 2-D
+    np.array([[1, 2, 3, 4, np.nan]]),       # non-finite
+    np.array([[1, 2, 3, 4, 0]]),            # zero parallelism degree
+    np.array([[1, 2, 3, 4, -2]]),           # negative
+    np.array([["a"] * 5]),                  # non-numeric dtype
+])
+def test_search_rejects_malformed_grids(bad):
+    with pytest.raises(ValueError):
+        search(WL, CONS, engine="numpy", grid=bad)
+
+
+def test_factorized_space_rejects_sub_unit_values():
+    with pytest.raises(ValueError, match=">= 1"):
+        FactorizedSpace(((1, 2), (2, 4), (0, 8), (1, 2), (1, 2)))
+
+
+# ---------------------------------------------------------------------------
+# Retry, backoff, fallback, timeout, quarantine
+# ---------------------------------------------------------------------------
+
+def test_transient_fault_retried_backoff_is_exponential():
+    sleeps = []
+    rt = SearchRuntime(_policy(sleep=sleeps.append))
+    grid = _grid(0)
+    ref = search(WL, CONS, engine="numpy", grid=grid)
+    with inject(rt, [FaultSpec("launch", "raise", at=0),
+                     FaultSpec("launch", "timeout", at=1)]):
+        got = search(WL, CONS, engine="numpy", grid=grid, chunk_size=200,
+                     runtime=rt)
+    _assert_same("edp", ref, got, "retry")
+    assert got.n_retries == 2 and got.n_fallbacks == 0
+    assert sleeps == [0.05, 0.1]  # base * 2**attempt
+
+
+def test_backoff_is_capped():
+    sleeps = []
+    rt = SearchRuntime(_policy(sleep=sleeps.append, max_retries=5,
+                               backoff_cap_s=0.08))
+    with inject(rt, [FaultSpec("launch", "raise", at=i) for i in range(5)]):
+        search(WL, CONS, engine="numpy", grid=_grid(0), chunk_size=400,
+               runtime=rt)
+    assert sleeps == [0.05, 0.08, 0.08, 0.08, 0.08]
+
+
+def test_numpy_engine_has_no_fallback_and_exhausts():
+    rt = SearchRuntime(_policy())
+    with inject(rt, [FaultSpec("launch", "raise", at=-1)]):
+        with pytest.raises(LaunchExhausted):
+            search(WL, CONS, engine="numpy", grid=_grid(0), chunk_size=400,
+                   runtime=rt)
+
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+def test_pallas_degrades_to_jax_then_numpy(objective):
+    grid = _grid(1)
+    ref = search(WL, CONS, engine="numpy", grid=grid, objective=objective)
+
+    # 3 failed attempts exhaust pallas (max_retries=2); jax then succeeds.
+    rt = SearchRuntime(_policy())
+    with inject(rt, [FaultSpec("launch", "raise", at=i) for i in range(3)]):
+        got = search(WL, CONS, engine="pallas", grid=grid,
+                     objective=objective, chunk_size=len(grid), runtime=rt)
+    _assert_same(objective, ref, got, "pallas->jax")
+    assert got.n_fallbacks == 1 and got.n_retries == 3
+
+    # 6 failed attempts exhaust pallas AND jax; numpy closes the chain.
+    rt = SearchRuntime(_policy())
+    with inject(rt, [FaultSpec("launch", "raise", at=i) for i in range(6)]):
+        got = search(WL, CONS, engine="pallas", grid=grid,
+                     objective=objective, chunk_size=len(grid), runtime=rt)
+    _assert_same(objective, ref, got, "pallas->numpy")
+    assert got.n_fallbacks == 2 and got.n_retries == 6
+
+    # 9 failures: the whole chain is exhausted and the fault surfaces.
+    rt = SearchRuntime(_policy())
+    with inject(rt, [FaultSpec("launch", "raise", at=-1)]):
+        with pytest.raises(LaunchExhausted):
+            search(WL, CONS, engine="pallas", grid=grid,
+                   objective=objective, chunk_size=len(grid), runtime=rt)
+
+
+def test_real_wallclock_timeout_watchdog():
+    # Not injected: a genuinely hung launch is cut off by the watchdog
+    # thread and retried like any transient failure.
+    import time as _time
+    rt = SearchRuntime(_policy(timeout_s=0.2))
+    grid = _grid(2)
+    calls = {"n": 0}
+    real = rt._call
+
+    def hang_once(fn, *a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            return real(lambda: _time.sleep(30))
+        return real(fn, *a, **kw)
+
+    rt._call = hang_once
+    ref = search(WL, CONS, engine="numpy", grid=grid)
+    got = search(WL, CONS, engine="numpy", grid=grid, chunk_size=len(grid),
+                 runtime=rt)
+    _assert_same("edp", ref, got, "watchdog")
+    assert got.n_retries == 1
+
+
+@pytest.mark.parametrize("engine", ["numpy", "jax", "pallas"])
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+def test_nan_quarantine_rehosts_byte_identically(engine, objective):
+    grid = _grid(3)
+    ref = search(WL, CONS, engine="numpy", grid=grid, objective=objective)
+    rt = SearchRuntime(_policy())
+    with inject(rt, [FaultSpec("launch", "nan", at=1)]) as inj:
+        got = search(WL, CONS, engine=engine, grid=grid, objective=objective,
+                     chunk_size=200, runtime=rt)
+    _assert_same(objective, ref, got, f"quarantine/{engine}")
+    assert got.n_quarantined == 1 and got.n_retries == 0
+    assert ("launch", "nan", 1) in inj.hits
+
+
+# ---------------------------------------------------------------------------
+# Kill/resume byte-identity matrix
+# ---------------------------------------------------------------------------
+
+def _run_killed_then_resumed(pol, kill_spec, **search_kw):
+    """One simulated crash: run until `kill_spec` fires, then restart with
+    a clean injector from the same checkpoint directory."""
+    rt = SearchRuntime(pol)
+    with inject(rt, [kill_spec]) as inj:
+        try:
+            res = search(WL, CONS, runtime=rt, **search_kw)
+            return res, inj, False  # schedule never fired: ran to the end
+        except KillSearch:
+            pass
+    rt2 = SearchRuntime(pol)
+    return search(WL, CONS, runtime=rt2, **search_kw), inj, True
+
+
+MATRIX = [
+    # engine, objective, shard, chunk
+    ("numpy", "edp", None, 200),
+    ("numpy", "pareto", None, 200),
+    ("jax", "edp", 2, 150),
+    ("jax", "pareto", 2, 150),
+    ("pallas", "edp", None, 256),
+    ("pallas", "pareto", None, 256),
+]
+
+
+@pytest.mark.parametrize("engine,objective,shard,chunk", MATRIX)
+def test_kill_at_every_boundary_resumes_byte_identically(
+        engine, objective, shard, chunk, tmp_path):
+    grid = _grid(4, size=700 if engine != "pallas" else 560)
+    ref = search(WL, CONS, engine=engine, grid=grid, objective=objective,
+                 shard=shard, chunk_size=chunk)
+    kw = dict(engine=engine, grid=grid, objective=objective, shard=shard,
+              chunk_size=chunk)
+
+    # The uninterrupted runtime run pins the expected counter values.
+    clean_dir = tmp_path / "clean"
+    clean = search(WL, CONS, runtime=SearchRuntime(_policy(clean_dir)), **kw)
+    _assert_same(objective, ref, clean, "clean-runtime")
+    n_units = clean.n_checkpoints
+    assert n_units == -(-len(grid) // chunk)
+
+    for b in range(n_units):
+        pol = _policy(tmp_path / f"b{b}")
+        got, inj, killed = _run_killed_then_resumed(
+            pol, FaultSpec("checkpoint", "kill", at=b), **kw)
+        label = f"{engine}/{objective}/shard={shard}/kill@ckpt{b}"
+        assert killed, label
+        _assert_same(objective, ref, got, label)
+        _assert_same_counters(clean, got, label)
+        assert got.resumed_step == b + 1, label
+
+
+@pytest.mark.parametrize("engine,objective,shard,chunk", MATRIX[::3])
+def test_kill_mid_unit_resumes_byte_identically(engine, objective, shard,
+                                                chunk, tmp_path):
+    # A launch-site kill dies *inside* a unit, before its snapshot: the
+    # resumed run must re-execute that unit exactly once.
+    grid = _grid(5, size=700 if engine != "pallas" else 560)
+    ref = search(WL, CONS, engine=engine, grid=grid, objective=objective,
+                 shard=shard, chunk_size=chunk)
+    kw = dict(engine=engine, grid=grid, objective=objective, shard=shard,
+              chunk_size=chunk)
+    clean = search(WL, CONS, runtime=SearchRuntime(_policy(tmp_path / "c")),
+                   **kw)
+    for at in (1, 2):
+        pol = _policy(tmp_path / f"l{at}")
+        got, _, killed = _run_killed_then_resumed(
+            pol, FaultSpec("launch", "kill", at=at), **kw)
+        label = f"{engine}/{objective}/kill@launch{at}"
+        assert killed, label
+        _assert_same(objective, ref, got, label)
+        _assert_same_counters(clean, got, label)
+        assert got.resumed_step == at
+
+
+def test_checkpoint_every_n_bounds_replay(tmp_path):
+    # checkpoint_every=2 halves the snapshots; a kill mid-stream still
+    # resumes byte-identically, re-executing at most 2 units.
+    grid = _grid(6)
+    ref = search(WL, CONS, engine="numpy", grid=grid)
+    pol = _policy(tmp_path, checkpoint_every=2)
+    got, _, killed = _run_killed_then_resumed(
+        pol, FaultSpec("checkpoint", "kill", at=0), engine="numpy",
+        grid=grid, chunk_size=100)
+    assert killed
+    _assert_same("edp", ref, got, "every=2")
+    assert got.resumed_step == 2
+    assert got.n_checkpoints == -(-len(grid) // 100) // 2
+
+
+# ---------------------------------------------------------------------------
+# Kill/resume on the factorized + branch-and-bound drivers
+# ---------------------------------------------------------------------------
+
+AXES12 = tuple(tuple(range(1, 13)) for _ in range(5))
+
+
+@pytest.mark.parametrize("engine", ["numpy", "pallas"])
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+def test_factorized_stream_kill_resume(engine, objective, tmp_path):
+    axes = tuple(tuple(range(1, 7)) for _ in range(5))
+    space = FactorizedSpace(axes)
+    ref = search(WL, CONS, engine=engine, space=space, factorized=True,
+                 objective=objective)
+    kw = dict(engine=engine, space=space, factorized=True,
+              objective=objective, chunk_size=2000)
+    clean = search(WL, CONS, runtime=SearchRuntime(_policy(tmp_path / "c")),
+                   **kw)
+    _assert_same(objective, ref, clean, "fact-clean")
+    for b in range(clean.n_checkpoints):
+        pol = _policy(tmp_path / f"b{b}")
+        got, _, killed = _run_killed_then_resumed(
+            pol, FaultSpec("checkpoint", "kill", at=b), **kw)
+        assert killed, b
+        label = f"fact/{engine}/{objective}/kill@{b}"
+        _assert_same(objective, ref, got, label)
+        _assert_same_counters(clean, got, label)
+
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+def test_bnb_kill_resume_every_boundary(objective, tmp_path):
+    # The hard case: the BnB drivers checkpoint a slab-queue cursor, the
+    # frozen refine incumbent/frontier, and the prune counters. Killing at
+    # every snapshot — probe phase and sweep phase both — must reproduce
+    # the winner AND the n_pruned/n_bounds accounting byte-identically.
+    space = FactorizedSpace(AXES12)
+    ref = search(WL, CONS, engine="numpy", space=space, factorized=True,
+                 prune="bound", objective=objective)
+    kw = dict(engine="numpy", space=space, factorized=True, prune="bound",
+              objective=objective)
+    clean = search(WL, CONS, runtime=SearchRuntime(_policy(tmp_path / "c")),
+                   **kw)
+    _assert_same(objective, ref, clean, "bnb-clean")
+    assert (clean.n_pruned, clean.n_bounds) == (ref.n_pruned, ref.n_bounds)
+    for b in range(clean.n_checkpoints):
+        pol = _policy(tmp_path / f"b{b}")
+        got, _, killed = _run_killed_then_resumed(
+            pol, FaultSpec("checkpoint", "kill", at=b), **kw)
+        assert killed, b
+        label = f"bnb/{objective}/kill@{b}"
+        _assert_same(objective, ref, got, label)
+        assert (got.n_pruned, got.n_bounds) == (ref.n_pruned, ref.n_bounds), \
+            label
+        _assert_same_counters(clean, got, label)
+
+
+def test_bnb_kill_mid_unit_resumes(tmp_path):
+    space = FactorizedSpace(AXES12)
+    ref = search(WL, CONS, engine="numpy", space=space, factorized=True,
+                 prune="bound")
+    got, _, killed = _run_killed_then_resumed(
+        _policy(tmp_path), FaultSpec("launch", "kill", at=1),
+        engine="numpy", space=space, factorized=True, prune="bound")
+    assert killed
+    _assert_same("edp", ref, got, "bnb-midunit")
+    assert (got.n_pruned, got.n_bounds) == (ref.n_pruned, ref.n_bounds)
+
+
+# ---------------------------------------------------------------------------
+# Seeded fault-schedule matrix (transient faults + one kill, then resume)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=12, deadline=None)
+def test_seeded_schedule_resumes_to_reference(seed):
+    import tempfile
+    grid = _grid(7, size=500)
+    ref = search(WL, CONS, engine="numpy", grid=grid)
+    specs = kill_schedule(seed, n_boundaries=3, n_launches=4)
+    assert specs == kill_schedule(seed, n_boundaries=3, n_launches=4)
+    with tempfile.TemporaryDirectory() as td:
+        pol = _policy(td)
+        rt = SearchRuntime(pol)
+        try:
+            with inject(rt, specs):
+                got = search(WL, CONS, engine="numpy", grid=grid,
+                             chunk_size=170, runtime=rt)
+        except KillSearch:
+            got = search(WL, CONS, engine="numpy", grid=grid,
+                         chunk_size=170, runtime=SearchRuntime(pol))
+        except LaunchExhausted:
+            return  # numpy has no fallback; a persistent schedule may land here
+        _assert_same("edp", ref, got, f"seed={seed}")
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint safety and bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_mismatch_refuses_foreign_checkpoints(tmp_path):
+    pol = _policy(tmp_path)
+    grid_a, grid_b = _grid(8), _grid(9)
+    got, _, killed = _run_killed_then_resumed(
+        pol, FaultSpec("checkpoint", "kill", at=0), engine="numpy",
+        grid=grid_a, chunk_size=200)
+    assert killed  # directory now holds grid_a's snapshots
+    with pytest.raises(CheckpointMismatch):
+        search(WL, CONS, engine="numpy", grid=grid_b, chunk_size=200,
+               runtime=SearchRuntime(pol))
+    # Same signature still resumes/reruns cleanly.
+    search(WL, CONS, engine="numpy", grid=grid_a, chunk_size=200,
+           runtime=SearchRuntime(pol))
+
+
+def test_counters_surface_without_checkpointing():
+    # A runtime with no checkpoint_dir still retries/degrades; it just
+    # cannot resume. n_checkpoints stays 0.
+    rt = SearchRuntime(_policy())
+    with inject(rt, [FaultSpec("launch", "raise", at=0)]):
+        got = search(WL, CONS, engine="numpy", grid=_grid(10),
+                     chunk_size=300, runtime=rt)
+    assert got.n_retries == 1
+    assert got.n_checkpoints == 0 and got.resumed_step == 0
+
+
+def test_fault_injector_counts_sites_independently():
+    inj = FaultInjector([FaultSpec("launch", "nan", at=1)])
+    assert inj.fire("launch") is False
+    assert inj.fire("checkpoint") is False  # does not advance "launch"
+    assert inj.fire("launch") is True
+    assert inj.calls == {"launch": 2, "checkpoint": 1}
+    assert inj.hits == [("launch", "nan", 1)]
+
+
+# ---------------------------------------------------------------------------
+# Pareto MAX_FRONT overflow counter
+# ---------------------------------------------------------------------------
+
+def test_pareto_overflow_counter_surfaces_on_result():
+    # A full block of exact duplicates overflows the kernel's MAX_FRONT
+    # emission bound; the host refine keeps the frontier exact and the
+    # result reports how many blocks overflowed.
+    from repro.kernels import dse_eval
+    best = search(WL, CONS, engine="numpy", grid=_grid(11)).best_cfg
+    dup = np.tile(best.as_array(), (dse_eval.BLOCK, 1))
+    grid = np.concatenate([dup, _grid(12, size=600)], axis=0)
+    ref = search(WL, CONS, engine="numpy", grid=grid, objective="pareto")
+    got = search(WL, CONS, engine="pallas", grid=grid, objective="pareto")
+    assert np.array_equal(got.front, ref.front)
+    assert got.n_overflow >= 1
+    assert ref.n_overflow == 0  # host engines compute exact fronts
+
+    # The counter aggregates across streamed chunks too.
+    chunked = search(WL, CONS, engine="pallas", grid=grid,
+                     objective="pareto", chunk_size=1024)
+    assert np.array_equal(chunked.front, ref.front)
+    assert chunked.n_overflow >= 1
+
+
+# ---------------------------------------------------------------------------
+# search_workloads: per-workload runtimes
+# ---------------------------------------------------------------------------
+
+def test_search_workloads_runtime_kill_resume(tmp_path):
+    wls = [load(n) for n in ("deit-t", "deit-s")]
+    names = [w.name for w in wls]
+    grid = _grid(13, size=500)
+    ref = search_workloads(wls, CONS, engine="numpy", grid=grid)
+    pol = _policy(tmp_path)
+    rt = SearchRuntime(pol)
+    # Kill inside the second workload's stream: the first workload's
+    # checkpoints live in their own subdirectory and are untouched.
+    n_units = -(-len(grid) // 170)
+    with inject(rt, [FaultSpec("checkpoint", "kill", at=n_units + 1)]):
+        with pytest.raises(KillSearch):
+            search_workloads(wls, CONS, engine="numpy", grid=grid,
+                             chunk_size=170, runtime=rt)
+    assert sorted(os.listdir(tmp_path)) == sorted(names)
+    got = search_workloads(wls, CONS, engine="numpy", grid=grid,
+                           chunk_size=170, runtime=SearchRuntime(pol))
+    for n in names:
+        _assert_same("edp", ref[n], got[n], n)
+    assert got[names[0]].resumed_step == n_units   # fully replayed from disk
+    assert got[names[1]].resumed_step == 2
+
+
+def test_search_workloads_runtime_counters_are_per_workload():
+    wls = [load(n) for n in ("deit-t", "deit-s")]
+    grid = _grid(14, size=400)
+    rt = SearchRuntime(_policy())
+    with inject(rt, [FaultSpec("launch", "raise", at=0)]):
+        got = search_workloads(wls, CONS, engine="numpy", grid=grid,
+                               chunk_size=200, runtime=rt)
+    # The single transient fault hit the first workload's first launch
+    # only; the second workload's counters are clean.
+    assert got[wls[0].name].n_retries == 1
+    assert got[wls[1].name].n_retries == 0

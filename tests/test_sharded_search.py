@@ -314,14 +314,14 @@ def test_dse_pareto_carry_prunes_dominated_candidates():
     cons = Constraints()
     grid = _sample_grid(41, size=1600)
     objectives = ("area", "power", "edp")
-    (cand0, nf0), = dse_pareto_multi(grid, [wl], [cons],
-                                     objectives=objectives)
+    (cand0, nf0, _), = dse_pareto_multi(grid, [wl], [cons],
+                                        objectives=objectives)
     front = search(wl, cons, engine="pallas", grid=grid, objective="pareto",
                    pareto_metrics=objectives).front
     carry = [_pallas_front_points(front, wl, CONSTANTS, True, objectives)]
-    (cand1, nf1), = dse_pareto_multi(grid, [wl], [cons],
-                                     objectives=objectives,
-                                     carry_points=carry)
+    (cand1, nf1, _), = dse_pareto_multi(grid, [wl], [cons],
+                                        objectives=objectives,
+                                        carry_points=carry)
     assert nf1 == nf0
     # Carrying the full frontier prunes every candidate it strictly
     # dominates; what survives must still cover the frontier itself (exact
