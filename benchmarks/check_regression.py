@@ -20,11 +20,20 @@ compared — smoke runs legitimately skip the multi-minute sequential sweeps.
 *both* files — so a benchmark rename can't silently drop a row from the
 gate's coverage (the factorized engine rows are pinned this way in CI).
 
+`--speedup slow:fast:factor` (repeatable) gates a *relative* claim rather
+than a timing: engines_us[slow] / engines_us[fast] must stay >= factor in
+BOTH the baseline and the fresh run. Being a within-file ratio it needs no
+machine-speed normalization — this is how the serve benchmark pins the
+warm constraint-delta path at >=5x over cold search.
+
 Exit status: 0 ok, 1 regression, 2 nothing comparable (misconfigured gate).
 
     python benchmarks/check_regression.py \
         --baseline BENCH_dse.json --fresh BENCH_dse.smoke.json --factor 2.0 \
         --require fused_jax_factorized,fused_pallas_factorized
+    python benchmarks/check_regression.py \
+        --baseline BENCH_serve.json --fresh BENCH_serve.smoke.json \
+        --factor 2.0 --speedup serve_cold_20:serve_warm_20:5
 """
 from __future__ import annotations
 
@@ -33,14 +42,37 @@ import json
 import sys
 
 # Timings worth gating: the device-resident engine paths whose perf the
-# repo's PRs are accountable for.
-GATED_PREFIXES = ("fused_", "pareto_jax", "pareto_pallas", "pareto_batch")
+# repo's PRs are accountable for. serve_memo is deliberately absent — a
+# dict hit is pure host noise.
+GATED_PREFIXES = ("fused_", "pareto_jax", "pareto_pallas", "pareto_batch",
+                  "serve_cold", "serve_warm")
 # Machine-speed normalizers (first one present in both files wins).
 REFERENCE_KEYS = ("fused_numpy", "pareto_numpy")
 
 
+def _check_speedups(baseline_us: dict, fresh_us: dict,
+                    speedups: tuple) -> list:
+    """Violations of `slow:fast:factor` within-file ratio requirements."""
+    failures = []
+    for spec in speedups:
+        slow, fast, factor = spec
+        for label, us in (("baseline", baseline_us), ("fresh", fresh_us)):
+            if slow not in us or fast not in us:
+                failures.append(f"{label}: {slow} or {fast} missing")
+                continue
+            ratio = float(us[slow]) / float(us[fast])
+            ok = ratio >= factor
+            print(f"speedup {slow}/{fast} [{label}]: {ratio:.2f}x "
+                  f"(required >= {factor:g}x)"
+                  f"{'' if ok else '  <-- REGRESSION'}")
+            if not ok:
+                failures.append(f"{label}: {slow}/{fast} = {ratio:.2f}x "
+                                f"< {factor:g}x")
+    return failures
+
+
 def gate(baseline: dict, fresh: dict, factor: float,
-         require: tuple = ()) -> int:
+         require: tuple = (), speedups: tuple = ()) -> int:
     base_us = baseline.get("engines_us", {})
     fresh_us = fresh.get("engines_us", {})
     missing = [k for k in require if k not in base_us or k not in fresh_us]
@@ -72,13 +104,20 @@ def gate(baseline: dict, fresh: dict, factor: float,
               f"{float(fresh_us[k]):14.1f} {ratio:7.2f}{flag}")
         if ratio > bound:
             failures.append(k)
+    speedup_failures = _check_speedups(base_us, fresh_us, speedups)
     if failures:
         print(f"\n{len(failures)} gated timing(s) regressed more than "
               f"{factor}x (speed-normalized) vs the committed baseline: "
               f"{', '.join(failures)}", file=sys.stderr)
         return 1
+    if speedup_failures:
+        print(f"\n{len(speedup_failures)} speedup requirement(s) violated: "
+              f"{'; '.join(speedup_failures)}", file=sys.stderr)
+        return 1
     print(f"\nbenchmark gate OK: all {len(shared)} gated ratios <= "
-          f"{bound:.2f}x")
+          f"{bound:.2f}x" +
+          (f", {len(speedups)} speedup requirement(s) held" if speedups
+           else ""))
     return 0
 
 
@@ -93,13 +132,24 @@ def main() -> int:
     ap.add_argument("--require", default="",
                     help="comma-separated gated keys that must be present "
                          "in both records")
+    ap.add_argument("--speedup", action="append", default=[],
+                    metavar="SLOW:FAST:FACTOR",
+                    help="require engines_us[SLOW]/engines_us[FAST] >= "
+                         "FACTOR in both records (repeatable)")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
     require = tuple(k for k in args.require.split(",") if k)
-    return gate(baseline, fresh, args.factor, require)
+    speedups = []
+    for spec in args.speedup:
+        try:
+            slow, fast, fac = spec.split(":")
+            speedups.append((slow, fast, float(fac)))
+        except ValueError:
+            ap.error(f"bad --speedup spec {spec!r}; expected SLOW:FAST:FACTOR")
+    return gate(baseline, fresh, args.factor, require, tuple(speedups))
 
 
 if __name__ == "__main__":

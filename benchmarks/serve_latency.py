@@ -1,0 +1,119 @@
+"""Service benchmark: warm constraint-delta queries vs cold co-search.
+
+Times the three ways `repro.serve.SearchService` answers a query on the
+deit-b workload over growing product spaces (12^5, 20^5, jax engine):
+
+  * ``serve_cold_N`` — a fresh service answering its first box: full
+    bound-guided branch-and-bound plus the slab-ledger capture and the
+    evaluated-point store that later deltas re-price against.
+  * ``serve_warm_N`` — the resident service answering a *tightened* box
+    by re-pricing the cold run's pruned-slab bounds and warm-starting
+    branch-and-bound from the surviving slabs (byte-identical to a cold
+    search of the same box; asserted here).
+  * ``serve_memo_N`` — a repeated box served from the canonical-key memo
+    (never gated: it is a dict hit, pure host noise).
+
+Every timed warm call uses a distinct (epsilon-shifted) box so the memo
+cannot short-circuit the path under test. Results land in
+BENCH_serve.json at the repo root; set SERVE_SMOKE=1 (or pass --smoke)
+to write BENCH_serve.smoke.json instead — the CI gate diffs the two
+normalized by the `fused_numpy` reference row and additionally requires
+the warm path to stay >=5x faster than cold at 20^5
+(``check_regression.py --speedup serve_cold_20:serve_warm_20:5``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+from repro.core import Constraints, FactorizedSpace, search
+from repro.core.paper_workloads import load
+from repro.serve import SearchService
+
+from .common import row, timed
+
+_BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+
+
+def run():
+    smoke = bool(int(os.environ.get("SERVE_SMOKE", "0")))
+    wl = load("deit-b")
+    cons = Constraints()
+    repeats = 3
+    rows = []
+    bench = {"workload": "deit-b", "smoke": smoke, "spaces": {},
+             "engines_us": {}, "speedups": {}, "agreement": {}}
+
+    # Machine-speed reference for the CI gate (never gated itself): the
+    # host float64 factorized sweep of the 12^5 space.
+    ref_space = FactorizedSpace.full(12)
+    _, us_ref = timed(lambda: search(wl, cons, engine="numpy",
+                                     factorized=True, space=ref_space),
+                      repeats=repeats)
+    bench["engines_us"]["fused_numpy"] = us_ref
+    rows.append(row("serve/fused_numpy_reference", us_ref,
+                    f"one-shot float64 factorized sweep of "
+                    f"{ref_space.size} cfgs"))
+
+    # The bound-guided paths saturate with the space, so even the full
+    # 20^5 run is CI-cheap — smoke and full sweep the same sizes.
+    for n in (12, 20):
+        bench["spaces"][str(n)] = FactorizedSpace.full(n).size
+
+        # Cold: a fresh service per call, so neither the memo nor the
+        # ledger store can help. Includes the base-entry capture cost.
+        def cold():
+            return SearchService(n_z=n, engine="jax").query(wl, cons)
+        r_cold, us_cold = timed(cold, repeats=repeats)
+        bench["engines_us"][f"serve_cold_{n}"] = us_cold
+        rows.append(row(f"serve/serve_cold_{n}", us_cold,
+                        f"cold bnb + ledger capture, "
+                        f"{r_cold.n_workload_evals} evals"))
+
+        # Warm: one resident service; every timed call is a *distinct*
+        # tightened box (epsilon-shifted power cap), so each one takes
+        # the constraint-delta path, never the memo.
+        svc = SearchService(n_z=n, engine="jax")
+        svc.query(wl, cons)  # the base entry the deltas re-price
+        boxes = [Constraints(power_w=4.5 - 0.01 * i)
+                 for i in range(repeats + 1)]
+        it = iter(boxes)
+
+        def warm():
+            return svc.query(wl, next(it))
+        r_warm, us_warm = timed(warm, repeats=repeats)
+        bench["engines_us"][f"serve_warm_{n}"] = us_warm
+        speedup = us_cold / us_warm
+        bench["speedups"][f"serve_warm_{n}_vs_cold"] = speedup
+
+        # Byte-identity of the warm answer vs a cold twin of the same box.
+        twin = search(wl, boxes[-1], engine="jax", factorized=True,
+                      space=FactorizedSpace.full(n), prune="bound")
+        agree = (r_warm.best_cfg == twin.best_cfg and r_warm.edp == twin.edp)
+        bench["agreement"][f"serve_warm_{n}"] = agree
+        rows.append(row(f"serve/serve_warm_{n}", us_warm,
+                        f"constraint-delta re-price, {speedup:.2f}x vs "
+                        f"cold; same best as cold twin: {agree}"))
+
+        # Memo: the same box again is a canonical-key dict hit.
+        _, us_memo = timed(lambda: svc.query(wl, boxes[0]), repeats=repeats)
+        bench["engines_us"][f"serve_memo_{n}"] = us_memo
+        rows.append(row(f"serve/serve_memo_{n}", us_memo,
+                        f"canonical-key memo hit, "
+                        f"{us_cold / us_memo:.0f}x vs cold"))
+
+    bench["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    out_path = _BENCH_JSON.with_suffix(".smoke.json") if smoke \
+        else _BENCH_JSON  # never clobber the committed full-run record
+    out_path.write_text(json.dumps(bench, indent=2, default=str) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    if "--smoke" in sys.argv:
+        os.environ["SERVE_SMOKE"] = "1"
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -46,6 +46,7 @@ Both evaluation forms are exposed:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, Mapping, Sequence, Tuple
 
@@ -90,15 +91,18 @@ class FactorizedSpace:
 
     @staticmethod
     def full(n_z: int) -> "FactorizedSpace":
+        """The paper's full 1..n_z product space (n_z^5 configurations)."""
         inc = tuple(range(1, int(n_z) + 1))
         return FactorizedSpace((inc,) * 5)
 
     @property
     def radices(self) -> Tuple[int, ...]:
+        """Per-axis candidate counts, in (n_t, n_c, n_h, n_v, n_l) order."""
         return tuple(len(a) for a in self.axes)
 
     @property
     def size(self) -> int:
+        """Total number of grid points (product of the radices)."""
         return math.prod(self.radices)
 
     def to_grid(self) -> np.ndarray:
@@ -115,6 +119,7 @@ class FactorizedSpace:
                          a[4][d[4]]], axis=1)
 
     def rows(self, start: int, stop: int) -> np.ndarray:
+        """The contiguous slice to_grid()[start:stop] without the grid."""
         return self.decode(np.arange(start, stop, dtype=np.int64))
 
 
@@ -280,6 +285,7 @@ def full_ranges(radices) -> Tuple[Tuple[int, int], ...]:
 
 
 def slab_size(ranges) -> int:
+    """Number of grid points inside one slab (product of range widths)."""
     return math.prod(hi - lo for lo, hi in ranges)
 
 
@@ -492,6 +498,12 @@ class SlabBoundEvaluator:
     def from_workload(fspace: FactorizedSpace, wl,
                       c: DeviceConstants = CONSTANTS,
                       dtype=np.float64) -> "SlabBoundEvaluator":
+        """Build the evaluator for one workload's GEMM list over `fspace`.
+
+        Prefer `cached_bound_evaluator` in long-lived processes — the
+        construction precomputes the per-axis interval tables, which is
+        worth keeping resident across queries.
+        """
         from .photonic_model import sram_mb_for_workload
         sram_mb = sram_mb_for_workload(wl.max_act_bytes, c)
         return SlabBoundEvaluator(fspace.axes, wl.gemm_array, wl.elec_ops,
@@ -607,3 +619,165 @@ class SlabBoundEvaluator:
         and the property-tested scalar oracle cannot diverge)."""
         out = self.lower_bounds_batch([tuple(tuple(r) for r in ranges)])
         return {k: float(v[0]) for k, v in out.items()}
+
+
+@functools.lru_cache(maxsize=32)
+def cached_bound_evaluator(fspace: FactorizedSpace, wl, c) -> \
+        "SlabBoundEvaluator":
+    """Process-resident `SlabBoundEvaluator.from_workload` (float64 form).
+
+    Every argument is a frozen (hashable) dataclass, so repeat queries
+    against the same (space, workload, constants) — a standing
+    `repro.serve.SearchService`, or any constraint-scenario sweep in one
+    process — reuse the eager dyadic-interval tables instead of rebuilding
+    them per call. Bounded LRU keeps a service that rotates through many
+    workloads from accumulating tables without limit."""
+    return SlabBoundEvaluator.from_workload(fspace, wl, c)
+
+
+# ---------------------------------------------------------------------------
+# Slab ledger: the branch-and-bound run's pruning decisions, kept around
+# ---------------------------------------------------------------------------
+#
+# A bound-guided search partitions the product space into slabs it *pruned*
+# (their interval lower bounds proved no winner / frontier member can live
+# there) and slabs it *evaluated*. The drivers normally discard that
+# partition once the counters are summed; retaining it — together with the
+# pruned slabs' stored lower bounds — is what makes a later
+# *constraint-delta* query incremental: a new constraint box re-prices the
+# pruned slabs against their stored bounds (one vectorized compare) and only
+# the slabs whose bounds straddle the new box are ever descended again
+# (repro.serve.SearchService is the consumer).
+
+@dataclasses.dataclass
+class SlabLedger:
+    """Serializable record of one bound-guided search's slab partition.
+
+    `pruned` holds the (P, 5, 2) digit ranges of every slab discarded by a
+    bound (constraint, incumbent-EDP or frontier-dominance), with the
+    admissible float64 lower bounds it was priced at in `bounds`
+    ({metric: (P,)}, every `core.search.REPORT_METRICS` key). `evaluated`
+    holds the (E, 5, 2) ranges of every leaf slab whose points reached an
+    engine. Together they tile the space exactly: `accounted() ==
+    prod(radices)` (asserted at capture time).
+
+    Soundness for re-pricing: the stored bounds are lower bounds for every
+    point of the slab, so a slab with ``bounds[m] >= new_limit`` stays dead
+    under any constraint box whose `m`-limit is at or below `new_limit`,
+    and a slab with ``bounds["edp"] > inc`` cannot beat a known-feasible
+    incumbent EDP `inc` — the exact arguments the live search makes,
+    replayed against persisted prices.
+    """
+
+    axes: Tuple[Tuple[int, ...], ...]      # identity of the priced space
+    pruned: np.ndarray                     # (P, 5, 2) int64 digit ranges
+    bounds: Dict[str, np.ndarray]          # {metric: (P,) float64}
+    evaluated: np.ndarray                  # (E, 5, 2) int64 digit ranges
+
+    def accounted(self) -> int:
+        """Total points covered by the pruned + evaluated slabs."""
+        total = 0
+        for arr in (self.pruned, self.evaluated):
+            if len(arr):
+                total += int(np.prod(arr[:, :, 1] - arr[:, :, 0],
+                                     axis=1).sum())
+        return total
+
+    def pruned_sizes(self) -> np.ndarray:
+        """(P,) point counts of the pruned slabs (re-pricing bookkeeping)."""
+        if not len(self.pruned):
+            return np.zeros(0, np.int64)
+        return np.prod(self.pruned[:, :, 1] - self.pruned[:, :, 0], axis=1)
+
+    def evaluated_indices(self) -> np.ndarray:
+        """Sorted flat indices of every point the search evaluated."""
+        radices = tuple(len(a) for a in self.axes)
+        return slab_indices_batch(radices, list(self.evaluated))
+
+    def to_arrays(self) -> Dict[str, np.ndarray]:
+        """Flat {name: ndarray} tree (np.savez / checkpoint-layer ready)."""
+        out = {"axes": np.asarray(
+                   [list(a) + [0] * (max(map(len, self.axes)) - len(a))
+                    for a in self.axes], np.int64),
+               "axis_lens": np.asarray([len(a) for a in self.axes],
+                                       np.int64),
+               "pruned": np.asarray(self.pruned, np.int64).reshape(-1, 5, 2),
+               "evaluated": np.asarray(self.evaluated,
+                                       np.int64).reshape(-1, 5, 2)}
+        for k, v in self.bounds.items():
+            out[f"lb_{k}"] = np.asarray(v, np.float64)
+        return out
+
+    @staticmethod
+    def from_arrays(tree: Mapping) -> "SlabLedger":
+        """Inverse of `to_arrays` (exact round-trip)."""
+        lens = np.asarray(tree["axis_lens"], np.int64)
+        axes = tuple(tuple(int(v) for v in row[:n])
+                     for row, n in zip(np.asarray(tree["axes"]), lens))
+        bounds = {k[3:]: np.asarray(v, np.float64)
+                  for k, v in tree.items() if k.startswith("lb_")}
+        return SlabLedger(
+            axes=axes,
+            pruned=np.asarray(tree["pruned"], np.int64).reshape(-1, 5, 2),
+            bounds=bounds,
+            evaluated=np.asarray(tree["evaluated"],
+                                 np.int64).reshape(-1, 5, 2))
+
+    def save(self, path: str) -> None:
+        """Persist as a compressed .npz archive."""
+        np.savez_compressed(path, **self.to_arrays())
+
+    @staticmethod
+    def load(path: str) -> "SlabLedger":
+        """Load a ledger persisted by `save`."""
+        with np.load(path) as z:
+            return SlabLedger.from_arrays({k: z[k] for k in z.files})
+
+
+class LedgerRecorder:
+    """Collects a bound-guided run's pruning decisions into a `SlabLedger`.
+
+    The BnB drivers call `prune(ranges, lbs)` for every batch of slabs a
+    bound discards and `evaluate(ranges)` for every batch an engine
+    evaluates; `build()` concatenates the batches and checks that the two
+    sets tile the space exactly (a driver bug that dropped or
+    double-counted a slab would make every later delta query silently
+    wrong, so the invariant is enforced, not assumed).
+    """
+
+    METRIC_KEYS = ("area", "power", "energy", "latency", "util", "edp")
+
+    def __init__(self):
+        self._pruned: list = []
+        self._lbs: list = []
+        self._eval: list = []
+
+    def prune(self, ranges: np.ndarray, lbs: Mapping) -> None:
+        """Record pruned slabs ((B, 5, 2) ranges + their bound arrays)."""
+        if len(ranges):
+            self._pruned.append(np.asarray(ranges, np.int64))
+            self._lbs.append({k: np.asarray(lbs[k], np.float64)
+                              for k in self.METRIC_KEYS})
+
+    def evaluate(self, ranges: np.ndarray) -> None:
+        """Record evaluated leaf slabs ((B, 5, 2) ranges)."""
+        if len(ranges):
+            self._eval.append(np.asarray(ranges, np.int64))
+
+    def build(self, fspace: FactorizedSpace) -> SlabLedger:
+        """Assemble the ledger and verify it tiles `fspace` exactly."""
+        pruned = (np.concatenate(self._pruned) if self._pruned
+                  else np.zeros((0, 5, 2), np.int64))
+        bounds = {k: (np.concatenate([d[k] for d in self._lbs])
+                      if self._lbs else np.zeros(0))
+                  for k in self.METRIC_KEYS}
+        evaluated = (np.concatenate(self._eval) if self._eval
+                     else np.zeros((0, 5, 2), np.int64))
+        ledger = SlabLedger(axes=fspace.axes, pruned=pruned, bounds=bounds,
+                            evaluated=evaluated)
+        if ledger.accounted() != fspace.size:
+            raise AssertionError(
+                f"slab ledger accounts for {ledger.accounted()} of "
+                f"{fspace.size} points — a driver dropped or double-"
+                f"counted a slab")
+        return ledger

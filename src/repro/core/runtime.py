@@ -215,6 +215,31 @@ def fingerprint(**fields) -> str:
     return h.hexdigest()
 
 
+def query_checkpoint_dir(root: str, query_fp: str, create: bool = True
+                         ) -> str:
+    """Service-owned checkpoint directory for one query fingerprint.
+
+    A standing `repro.serve.SearchService` runs many long searches under
+    one `checkpoint_root`; each query gets its own subdirectory named by
+    (a prefix of) its canonical fingerprint, so a restarted service
+    resumes exactly the queries that were in flight — the checkpoint
+    layer's manifest binding then re-verifies the full fingerprint, so a
+    prefix collision degrades to `CheckpointMismatch`, never to silently
+    merged state."""
+    path = os.path.join(root, query_fp[:24])
+    if create:
+        os.makedirs(path, exist_ok=True)
+    return path
+
+
+def query_policy(root: str, query_fp: str, **overrides) -> RuntimePolicy:
+    """A `RuntimePolicy` whose checkpoints live in the service-owned
+    per-query directory (`query_checkpoint_dir`); `overrides` pass through
+    to the policy (retries, watchdog, fallback chain, ...)."""
+    return RuntimePolicy(
+        checkpoint_dir=query_checkpoint_dir(root, query_fp), **overrides)
+
+
 class SearchRuntime:
     """One resilient search campaign: counters, guard, checkpoint cursor.
 
@@ -456,6 +481,7 @@ class activate:
 
 
 def current() -> Optional[SearchRuntime]:
+    """The innermost active `SearchRuntime`, or None outside a run."""
     return _ACTIVE[-1] if _ACTIVE else None
 
 
@@ -475,6 +501,7 @@ def encode_best_row(best) -> Dict[str, np.ndarray]:
 
 
 def decode_best_row(state) -> tuple:
+    """Inverse of `encode_best_row`."""
     row = state["best_row"]
     return (None if row.size == 0 else row.astype(np.int64),
             float(state["best_edp"][0]))
@@ -488,6 +515,7 @@ def encode_best_indexed(best) -> Dict[str, np.ndarray]:
 
 
 def decode_best_indexed(state) -> tuple:
+    """Inverse of `encode_best_indexed`."""
     return int(state["best_gi"][0]), float(state["best_edp"][0])
 
 
@@ -501,6 +529,7 @@ def encode_front(rows: np.ndarray, met: Mapping[str, np.ndarray],
 
 
 def decode_front(state, metric_keys: Sequence[str]) -> tuple:
+    """Inverse of `encode_front`."""
     rows = np.asarray(state["front_rows"], np.int64).reshape(-1, 5)
     met = {k: np.asarray(state[f"met_{k}"], np.float64)
            for k in metric_keys}

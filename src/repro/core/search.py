@@ -103,6 +103,17 @@ REPORT_METRICS = ("area", "power", "energy", "latency", "util", "edp")
 
 @dataclasses.dataclass
 class SearchResult:
+    """Feasible min-EDP selection (objective="edp" search mode).
+
+    `best_cfg` is the winning config (None when nothing satisfied the
+    constraints) and the metric fields its float64 reference-model
+    evaluation — whichever engine proposed the winner, the reported
+    numbers come from `eval_full`, so results are bit-identical across
+    engines whenever they agree on `best_cfg`. The counter fields record
+    how much work the search did (and, under `prune="bound"` / `runtime=`,
+    how much it skipped or survived).
+    """
+
     best_cfg: Optional[PTAConfig]
     area_mm2: float = float("nan")
     power_w: float = float("nan")
@@ -130,8 +141,17 @@ class SearchResult:
     # Optional (collect=True): per-candidate metric arrays for Fig. 9 scatter.
     history: Optional[Dict[str, np.ndarray]] = None
 
+    # Slab ledger (search(..., prune="bound", keep_ledger=True)): the run's
+    # pruned/evaluated slab partition with stored bounds, the warm-start
+    # substrate of repro.serve. None unless requested. Excluded from
+    # equality: two searches that agree on everything above are the same
+    # result whether or not one kept its ledger.
+    ledger: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                 compare=False)
+
     @property
     def feasible(self) -> bool:
+        """True when the search found any constraint-satisfying config."""
         return self.best_cfg is not None
 
     @property
@@ -171,9 +191,13 @@ class ParetoResult:
     # and were host-refined from the whole block (exact, just slower).
     # Always 0 on the host/jax engines.
     n_overflow: int = 0
+    # Slab ledger, as on SearchResult (keep_ledger=True only).
+    ledger: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                 compare=False)
 
     @property
     def size(self) -> int:
+        """Number of points on the frontier."""
         return len(self.front)
 
     @property
@@ -183,10 +207,12 @@ class ParetoResult:
 
     @property
     def feasible(self) -> bool:
+        """True when any constraint-satisfying config exists."""
         return self.size > 0
 
     @property
     def configs(self):
+        """The frontier rows as `PTAConfig` objects."""
         return [PTAConfig.from_array(row) for row in self.front]
 
 
@@ -1960,13 +1986,15 @@ def _slab_first_indices(radices, ranges_list) -> np.ndarray:
 
 
 def _bnb_descend(fspace, ev, prune_mask_fn, start, start_lbs, leaf_size,
-                 stats, c):
+                 stats, c, led=None):
     """Shared slab-tree descent: process the active set — a (B, 5, 2)
     digit-range array — level by level. Each level is one *vectorized*
     `lower_bounds_batch` call plus one vectorized halving of the
     survivors along the significance order; nothing in the loop is
     per-slab python. Returns the surviving
-    ((L, 5, 2) leaf array, {metric: (L,) bound arrays})."""
+    ((L, 5, 2) leaf array, {metric: (L,) bound arrays}). With a
+    `LedgerRecorder` attached every pruned slab is recorded with the
+    bounds it was priced at."""
     order = np.asarray(_bnb_axis_order(c))
     active, lbs = np.asarray(start, np.int64).reshape(-1, 5, 2), start_lbs
     leaf_parts = []
@@ -1976,6 +2004,8 @@ def _bnb_descend(fspace, ev, prune_mask_fn, start, start_lbs, leaf_size,
         widths = active[:, :, 1] - active[:, :, 0]
         sizes = np.prod(widths, axis=1)
         stats["n_pruned"] += int(sizes[die].sum())
+        if led is not None:
+            led.prune(active[die], {k: v[die] for k, v in lbs.items()})
         keep = ~die
         is_leaf = keep & (sizes <= leaf_size)
         leaf_parts.append(active[is_leaf])
@@ -2007,7 +2037,7 @@ def _bnb_descend(fspace, ev, prune_mask_fn, start, start_lbs, leaf_size,
     return leaves, out_lbs
 
 
-def _bnb_frontier(fspace, ev, constraints, c, stats):
+def _bnb_frontier(fspace, ev, constraints, c, stats, led=None):
     """Constraint-driven descent from the whole space to BNB_LEAF leaves.
 
     Objective pruning (incumbent EDP / frontier dominance) happens later,
@@ -2021,7 +2051,47 @@ def _bnb_frontier(fspace, ev, constraints, c, stats):
     stats["n_bounds"] += 1
     return _bnb_descend(fspace, ev,
                         lambda b: _bnb_infeasible_mask(b, constraints),
-                        root, lbs, BNB_LEAF, stats, c)
+                        root, lbs, BNB_LEAF, stats, c, led)
+
+
+def _bnb_dominated_vs(pts: np.ndarray, lbs_arrays, objectives) -> np.ndarray:
+    """(B,) mask of slabs whose objective lower-bound corner is strictly
+    dominated by some point of `pts` ((F, d) float64 objective rows). Every
+    point of such a slab is at or above the corner in every objective, so
+    it is strictly dominated too — transitively safe even if the
+    dominating point is later evicted from a running frontier (its evictor
+    dominates the slab as well)."""
+    corners = np.stack([np.asarray(lbs_arrays[k], np.float64)
+                        for k in objectives], axis=1)
+    if not len(pts):
+        return np.zeros(len(corners), bool)
+    le = np.all(pts[None, :, :] <= corners[:, None, :], axis=-1)
+    lt = np.any(pts[None, :, :] < corners[:, None, :], axis=-1)
+    return np.any(le & lt, axis=1)
+
+
+@dataclasses.dataclass
+class WarmStart:
+    """Seed state for a warm-started bound-guided driver.
+
+    The constraint-delta path of `repro.serve.SearchService` re-prices a
+    prior search's `SlabLedger` against a new constraint box and hands the
+    slabs it could not kill to the BnB drivers through this object instead
+    of the root descent: `start` (with its stored `lbs`) replaces the
+    `_bnb_frontier` leaf set, `best` / `nf` seed the EDP driver's running
+    argmin and incumbent with the best already-known feasible point, and
+    `rows` / `met` seed the pareto driver's running (float64-refined)
+    frontier. Because the seeds are true achievable values and the stored
+    bounds are admissible, the warm drivers return the same winners and
+    frontiers as a cold search of the whole space under the new box.
+    """
+
+    start: np.ndarray                      # (B, 5, 2) slabs still to search
+    lbs: Optional[Dict[str, np.ndarray]] = None  # their stored lower bounds
+    best: tuple = (-1, float("inf"))       # EDP mode: (gidx, float64 edp)
+    nf: int = 0                            # feasible count already known
+    rows: Optional[np.ndarray] = None      # pareto mode: (F, 5) seed rows
+    met: Optional[Dict[str, np.ndarray]] = None  # their metric columns
 
 
 def _bnb_order(fspace, ranges_list, lbs, objectives=None) -> np.ndarray:
@@ -2165,7 +2235,8 @@ def _bnb_eval_pareto(engine, fspace, wl, constraints, c, interpret,
 
 
 def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
-                           shard, chunk_size, rt=None) -> SearchResult:
+                           shard, chunk_size, rt=None, led=None,
+                           warm=None) -> SearchResult:
     """Bound-guided min-EDP driver.
 
     Phase 1 (`_bnb_frontier`): constraint-prune the slab tree down to
@@ -2187,10 +2258,27 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
     the space + the checkpointed incumbent — cheaper to replay than to
     persist, and their bound/prune work is already inside the restored
     counters, so a throwaway stats dict keeps the totals exact).
+
+    A `WarmStart` (`warm=`) replaces the root slab frontier with a prior
+    run's re-priced surviving slabs and seeds the running argmin /
+    incumbent from its point store — the `repro.serve` constraint-delta
+    path. A `LedgerRecorder` (`led=`) captures the pruned/evaluated slab
+    partition onto ``result.ledger``. Warm starts exclude both the
+    runtime (a delta query is a sub-second re-price; checkpoint the cold
+    search instead) and the ledger (warm slabs no longer tile the space,
+    so there is no complete partition to capture — chained deltas
+    re-price against the original cold ledger, which stays valid for any
+    box inside the original one).
     """
-    from .factorized import SlabBoundEvaluator
+    from .factorized import cached_bound_evaluator
+    if warm is not None and rt is not None:
+        raise ValueError("warm= cannot combine with a runtime: checkpoint "
+                         "the cold search, re-price deltas warm")
+    if warm is not None and led is not None:
+        raise ValueError("warm= cannot capture a ledger: warm slabs do not "
+                         "tile the space (delta against the cold ledger)")
     t0 = time.perf_counter()
-    ev = SlabBoundEvaluator.from_workload(fspace, wl, c)
+    ev = cached_bound_evaluator(fspace, wl, c)
     stats = {"n_pruned": 0, "n_bounds": 0}
     state = {"inc": float("inf"), "best": (-1, float("inf")),
              "nf": 0, "n_eval": 0}
@@ -2205,6 +2293,10 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
     phase, probe_end = "probe", 0
     inc_refine = float("inf")
     if rec is not None:
+        # A resumed run replays only the tail of the schedule — the head's
+        # evaluated leaves never pass through this process, so no complete
+        # partition can be captured.
+        led = None
         unit, st, extra = rec
         leaves, lbs = _bnb_frontier(fspace, ev, constraints, c,
                                     {"n_pruned": 0, "n_bounds": 0})
@@ -2216,11 +2308,28 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
         stats["n_pruned"] = int(extra["n_pruned"])
         stats["n_bounds"] = int(extra["n_bounds"])
         phase, probe_end = extra["phase"], int(extra["probe_end"])
+    elif warm is not None:
+        leaves = np.asarray(warm.start, np.int64).reshape(-1, 5, 2)
+        if warm.lbs is not None and len(leaves):
+            lbs = {k: np.asarray(warm.lbs[k], np.float64)
+                   for k in REPORT_METRICS}
+        elif len(leaves):
+            lbs = ev.lower_bounds_batch([tuple(tuple(r) for r in rng)
+                                         for rng in leaves])
+            stats["n_bounds"] += len(leaves)
+        else:
+            lbs = {k: np.zeros(0) for k in REPORT_METRICS}
+        state["best"] = (int(warm.best[0]), float(warm.best[1]))
+        if state["best"][0] >= 0:
+            state["inc"] = state["best"][1]
+        state["nf"] = int(warm.nf)
     else:
-        leaves, lbs = _bnb_frontier(fspace, ev, constraints, c, stats)
+        leaves, lbs = _bnb_frontier(fspace, ev, constraints, c, stats, led)
     resumed_sweep = phase == "sweep"
 
     def evaluate(ranges_list, n_points):
+        if led is not None:
+            led.evaluate(np.asarray(ranges_list, np.int64).reshape(-1, 5, 2))
         if rt is None:
             gi, e, f = _bnb_eval_edp(engine, fspace, wl, constraints, c,
                                      interpret, ranges_list, shard,
@@ -2288,11 +2397,12 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
         lambda b: (_bnb_infeasible_mask(b, constraints)
                    | (np.asarray(b["edp"]) > inc_refine)),
         leaves[rs:], {k: v[rs:] for k, v in lbs.items()}, BNB_FINE,
-        refine_stats, c)
+        refine_stats, c, led)
     phase, probe_end = "sweep", bi
     order = _bnb_order(fspace, ready, rlbs)
     ready = ready[order]
-    edp_lo = rlbs["edp"][order] if len(ready) else np.zeros(0)
+    rlbs = {k: v[order] for k, v in rlbs.items()}
+    edp_lo = rlbs["edp"] if len(ready) else np.zeros(0)
     sizes = _slab_sizes(ready)
     sweep_done = unit - bi
     for j, (s, e) in enumerate(_bnb_batch_slices(sizes)):
@@ -2302,9 +2412,14 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
             # Sorted leaves: once the smallest remaining bound exceeds
             # the incumbent, everything left is prunable.
             stats["n_pruned"] += int(sizes[s:].sum())
+            if led is not None:
+                led.prune(ready[s:], {k: v[s:] for k, v in rlbs.items()})
             break
         live = edp_lo[s:e] <= state["inc"]
         stats["n_pruned"] += int(sizes[s:e][~live].sum())
+        if led is not None:
+            led.prune(ready[s:e][~live],
+                      {k: v[s:e][~live] for k, v in rlbs.items()})
         evaluate(ready[s:e][live], int(sizes[s:e][live].sum()))
         if rt is not None:
             snapshot()
@@ -2315,12 +2430,14 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
                      time.perf_counter() - t0)
     r.n_pruned = stats["n_pruned"]
     r.n_bounds = stats["n_bounds"]
+    if led is not None:
+        r.ledger = led.build(fspace)
     return rt.annotate(r) if rt is not None else r
 
 
 def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
-                           objectives, shard, chunk_size, rt=None
-                           ) -> ParetoResult:
+                           objectives, shard, chunk_size, rt=None, led=None,
+                           warm=None) -> ParetoResult:
     """Bound-guided frontier driver: probe the objective-sorted leaves to
     seed the running (float64-refined) frontier, refine the remainder
     against it, then evaluate the survivors in batches. A slab is pruned
@@ -2329,11 +2446,19 @@ def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
     dominated too, transitively safe even if that frontier point is
     later evicted (its evictor dominates the slab as well). Runtime
     checkpointing follows `_search_factorized_bnb`, with the frozen
-    refinement frontier persisted alongside the live one."""
-    from .factorized import SlabBoundEvaluator
+    refinement frontier persisted alongside the live one. `warm=` /
+    `led=` follow `_search_factorized_bnb` too (warm seeds the running
+    frontier from `WarmStart.rows`/`met` instead of an argmin)."""
+    from .factorized import cached_bound_evaluator
+    if warm is not None and rt is not None:
+        raise ValueError("warm= cannot combine with a runtime: checkpoint "
+                         "the cold search, re-price deltas warm")
+    if warm is not None and led is not None:
+        raise ValueError("warm= cannot capture a ledger: warm slabs do not "
+                         "tile the space (delta against the cold ledger)")
     t0 = time.perf_counter()
     d = len(objectives)
-    ev = SlabBoundEvaluator.from_workload(fspace, wl, c)
+    ev = cached_bound_evaluator(fspace, wl, c)
     stats = {"n_pruned": 0, "n_bounds": 0}
     state = {"rows": _empty_run_state()[0], "met": _empty_run_state()[1],
              "pts": np.zeros((0, d)), "nf": 0, "n_eval": 0, "n_over": 0}
@@ -2349,6 +2474,9 @@ def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
     phase, probe_end = "probe", 0
     pts_refine = np.zeros((0, d))
     if rec is not None:
+        # Resumed runs replay only the schedule's tail — no complete slab
+        # partition passes through this process, so no ledger.
+        led = None
         unit, st, extra = rec
         leaves, lbs = _bnb_frontier(fspace, ev, constraints, c,
                                     {"n_pruned": 0, "n_bounds": 0})
@@ -2364,20 +2492,34 @@ def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
         stats["n_pruned"] = int(extra["n_pruned"])
         stats["n_bounds"] = int(extra["n_bounds"])
         phase, probe_end = extra["phase"], int(extra["probe_end"])
+    elif warm is not None:
+        leaves = np.asarray(warm.start, np.int64).reshape(-1, 5, 2)
+        if warm.lbs is not None and len(leaves):
+            lbs = {k: np.asarray(warm.lbs[k], np.float64)
+                   for k in REPORT_METRICS}
+        elif len(leaves):
+            lbs = ev.lower_bounds_batch([tuple(tuple(r) for r in rng)
+                                         for rng in leaves])
+            stats["n_bounds"] += len(leaves)
+        else:
+            lbs = {k: np.zeros(0) for k in REPORT_METRICS}
+        if warm.rows is not None and len(warm.rows):
+            state["rows"] = np.asarray(warm.rows, np.int64).reshape(-1, 5)
+            state["met"] = {k: np.asarray(warm.met[k], np.float64)
+                            for k in REPORT_METRICS}
+            state["pts"] = np.stack([state["met"][k] for k in objectives],
+                                    axis=1)
+        state["nf"] = int(warm.nf)
     else:
-        leaves, lbs = _bnb_frontier(fspace, ev, constraints, c, stats)
+        leaves, lbs = _bnb_frontier(fspace, ev, constraints, c, stats, led)
     resumed_sweep = phase == "sweep"
 
     def dominated_vs(pts, lbs_arrays):
-        corners = np.stack([np.asarray(lbs_arrays[k], np.float64)
-                            for k in objectives], axis=1)
-        if not len(pts):
-            return np.zeros(len(corners), bool)
-        le = np.all(pts[None, :, :] <= corners[:, None, :], axis=-1)
-        lt = np.any(pts[None, :, :] < corners[:, None, :], axis=-1)
-        return np.any(le & lt, axis=1)
+        return _bnb_dominated_vs(pts, lbs_arrays, objectives)
 
     def evaluate(ranges_list, n_points):
+        if led is not None:
+            led.evaluate(np.asarray(ranges_list, np.int64).reshape(-1, 5, 2))
         if rt is None:
             idx, f, o = _bnb_eval_pareto(engine, fspace, wl, constraints,
                                          c, interpret, ranges_list, shard,
@@ -2440,7 +2582,7 @@ def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
         lambda b: (_bnb_infeasible_mask(b, constraints)
                    | dominated_vs(pts_refine, b)),
         leaves[rs:], {k: v[rs:] for k, v in lbs.items()}, BNB_FINE,
-        refine_stats, c)
+        refine_stats, c, led)
     phase, probe_end = "sweep", bi
     order = _bnb_order(fspace, ready, rlbs, objectives)
     ready = ready[order]
@@ -2453,6 +2595,9 @@ def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
         die = dominated_vs(state["pts"], {k: v[s:e]
                                           for k, v in rlbs.items()})
         stats["n_pruned"] += int(sizes[s:e][die].sum())
+        if led is not None:
+            led.prune(ready[s:e][die],
+                      {k: v[s:e][die] for k, v in rlbs.items()})
         if not die.all():
             evaluate(ready[s:e][~die], int(sizes[s:e][~die].sum()))
         if rt is not None:
@@ -2467,6 +2612,8 @@ def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
                        n_pruned=stats["n_pruned"],
                        n_bounds=stats["n_bounds"],
                        n_overflow=state["n_over"])
+    if led is not None:
+        res.ledger = led.build(fspace)
     return rt.annotate(res) if rt is not None else res
 
 
@@ -2592,7 +2739,8 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
            pareto_metrics: tuple = DEFAULT_OBJECTIVES,
            shard: Optional[int] = None, chunk_size: Optional[int] = None,
            factorized: bool = False, space=None,
-           prune: Optional[str] = None, runtime=None
+           prune: Optional[str] = None, runtime=None,
+           keep_ledger: bool = False
            ) -> Union[SearchResult, ParetoResult]:
     """Unified search over a config grid.
 
@@ -2660,35 +2808,50 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
         byte-identical with or without a runtime; the campaign's
         retry/fallback/quarantine/checkpoint counters come back on the
         result. See README "Long searches".
+      keep_ledger: retain the bound-guided run's slab partition — every
+        pruned slab with the admissible lower bounds it was priced at,
+        plus every evaluated leaf — as a `core.factorized.SlabLedger` on
+        ``result.ledger``. Requires `prune="bound"`. This is what makes a
+        later *tightened-box* query incremental: re-price the stored
+        bounds instead of re-descending the space
+        (`repro.serve.SearchService` is the consumer). A checkpointed run
+        that actually *resumed* returns ``ledger=None`` — the resumed
+        process replays only the schedule's tail, so no complete
+        partition passes through it.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; pick from "
                          f"{sorted(ENGINES)}")
     _check_stream_args(shard, chunk_size)
     _check_prune_arg(prune, factorized)
+    if keep_ledger and prune != "bound":
+        raise ValueError("keep_ledger=True records the bound-guided slab "
+                         "partition; it requires prune='bound'")
     rt = SearchRuntime.of(runtime) if runtime is not None else None
     if rt is None:
         return _search_impl(wl, constraints, engine, grid, n_z,
                             hierarchical, c, interpret, objective,
                             pareto_metrics, shard, chunk_size, factorized,
-                            space, prune, None)
+                            space, prune, None, keep_ledger)
     with _activate_rt(rt):
         return _search_impl(wl, constraints, engine, grid, n_z,
                             hierarchical, c, interpret, objective,
                             pareto_metrics, shard, chunk_size, factorized,
-                            space, prune, rt)
+                            space, prune, rt, keep_ledger)
 
 
 def _search_impl(wl, constraints, engine, grid, n_z, hierarchical, c,
                  interpret, objective, pareto_metrics, shard, chunk_size,
-                 factorized, space, prune, rt):
+                 factorized, space, prune, rt, keep_ledger=False):
     if factorized:
+        from .factorized import LedgerRecorder
         fspace = _factorized_space(space, grid, n_z, engine, hierarchical)
+        led = LedgerRecorder() if keep_ledger else None
         if objective == "edp":
             if prune == "bound":
                 return _search_factorized_bnb(fspace, wl, constraints,
                                               engine, c, interpret, shard,
-                                              chunk_size, rt)
+                                              chunk_size, rt, led)
             return _search_factorized(fspace, wl, constraints, engine, c,
                                       interpret, shard, chunk_size, rt)
         if objective != "pareto":
@@ -2698,7 +2861,7 @@ def _search_impl(wl, constraints, engine, grid, n_z, hierarchical, c,
         if prune == "bound":
             return _pareto_factorized_bnb(fspace, wl, constraints, engine,
                                           c, interpret, metrics, shard,
-                                          chunk_size, rt)
+                                          chunk_size, rt, led)
         return _pareto_factorized(fspace, wl, constraints, engine, c,
                                   interpret, metrics, shard, chunk_size, rt)
     if space is not None:
@@ -2829,7 +2992,8 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                      shard: Optional[int] = None,
                      chunk_size: Optional[int] = None,
                      factorized: bool = False, space=None,
-                     prune: Optional[str] = None, runtime=None
+                     prune: Optional[str] = None, runtime=None,
+                     keep_ledger: bool = False
                      ) -> Dict[str, Union[SearchResult, ParetoResult]]:
     """Batched search: many workloads against one grid.
 
@@ -2856,7 +3020,9 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
     batch runs as a per-workload loop (full checkpoint/resume per
     workload, each under `<checkpoint_dir>/<workload name>`); every
     sub-search shares the batch campaign's fault injector, and each
-    result carries its own workload's counters.
+    result carries its own workload's counters. `keep_ledger=True`
+    retains each workload's slab partition on its result exactly as in
+    `search` (requires `prune="bound"`).
     """
     if not isinstance(wls, Mapping):
         wls = {wl.name: wl for wl in wls}
@@ -2865,6 +3031,9 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                          f"pick 'edp' or 'pareto'")
     _check_stream_args(shard, chunk_size)
     _check_prune_arg(prune, factorized)
+    if keep_ledger and prune != "bound":
+        raise ValueError("keep_ledger=True records the bound-guided slab "
+                         "partition; it requires prune='bound'")
     rt0 = SearchRuntime.of(runtime) if runtime is not None else None
     if grid is not None:
         grid = _check_grid(grid)
@@ -2897,7 +3066,7 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                             pareto_metrics=pareto_metrics, shard=shard,
                             chunk_size=chunk_size, factorized=True,
                             space=space, prune="bound",
-                            runtime=rt_for(name))
+                            runtime=rt_for(name), keep_ledger=keep_ledger)
                for name, wl in wls.items()}
         total = sum(r.wall_time_s for r in out.values())
         for r in out.values():

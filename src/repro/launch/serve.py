@@ -1,29 +1,45 @@
-"""Serving launcher: batched greedy generation + DxPTA co-design report.
+"""Serving launchers: token generation and the resident DSE service.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced
+Two subcommands share this entrypoint:
+
+  * ``tokens`` — batched greedy generation through the photonic-aware
+    model stack, plus the DxPTA co-design report (the original behavior
+    of this module; it remains the default when no subcommand is given)::
+
+        PYTHONPATH=src python -m repro.launch.serve tokens \\
+            --arch qwen2.5-3b --reduced
+
+  * ``dse`` — stand up a `repro.serve.SearchService` and replay a
+    constraint-scenario session against it: one cold bound-guided search
+    per workload, then each ``--scenario`` as a constraint-delta query
+    (tightened boxes are answered warm by re-pricing the slab ledger;
+    repeated boxes hit the memo). Prints per-query latency and how each
+    query was served::
+
+        PYTHONPATH=src python -m repro.launch.serve dse \\
+            --workload deit-t --n-z 12 --engine jax \\
+            --scenario power_w=4.5 --scenario power_w=4.0,area_mm2=45
 """
 from __future__ import annotations
 
 import argparse
-
-import jax
-import numpy as np
-
-import repro.models as M
-from repro.configs import get_config, list_archs, reduced
-from repro.models.layers import set_exec_safe
-from repro.train.serve import Request, Server, photonic_report
+import sys
+import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--max-len", type=int, default=64)
-    args = ap.parse_args()
+def _tokens_main(args) -> None:
+    """Batched greedy generation + co-design report (legacy behavior)."""
+    import jax
+    import numpy as np
 
+    import repro.models as M
+    from repro.configs import get_config, list_archs, reduced
+    from repro.models.layers import set_exec_safe
+    from repro.train.serve import Request, Server, photonic_report
+
+    if args.arch not in list_archs():
+        raise SystemExit(f"unknown arch {args.arch!r}; pick from "
+                         f"{list_archs()}")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -38,6 +54,98 @@ def main():
           f"decode={stats['decode_s_per_tok']*1e3:.2f}ms/tok")
     print(photonic_report(get_config(args.arch), seq_len=args.max_len,
                           batch=args.batch, new_tokens=args.max_new))
+
+
+def _parse_scenario(spec: str) -> dict:
+    """``power_w=4.0,area_mm2=45`` -> {"power_w": 4.0, "area_mm2": 45.0}."""
+    out = {}
+    for part in spec.split(","):
+        if "=" not in part:
+            raise SystemExit(f"bad --scenario entry {part!r}; expected "
+                             f"field=value pairs like power_w=4.0")
+        k, v = part.split("=", 1)
+        out[k.strip()] = float(v)
+    return out
+
+
+def _dse_main(args) -> None:
+    """Resident-service session: cold searches, then scenario deltas."""
+    from repro.core import paper_workloads
+    from repro.core.arch_params import Constraints
+    from repro.serve import SearchService
+
+    names = (list(paper_workloads.PAPER_WORKLOADS) if args.workload == "all"
+             else [args.workload])
+    svc = SearchService(n_z=args.n_z, engine=args.engine,
+                        interpret=not args.tpu, shard=args.shard,
+                        chunk_size=args.chunk_size,
+                        checkpoint_root=args.checkpoint_root)
+    boxes = [("paper defaults", Constraints())]
+    boxes += [(spec, Constraints(**_parse_scenario(spec)))
+              for spec in args.scenario]
+    print(f"service: {args.engine} engine, {args.n_z}^5 space, "
+          f"{len(names)} workload(s), {len(boxes)} box(es)")
+    for nm in names:
+        wl = paper_workloads.load(nm)
+        for label, cons in boxes:
+            before = dict(svc.stats)
+            t0 = time.perf_counter()
+            res = svc.query(wl, cons, objective=args.objective)
+            ms = (time.perf_counter() - t0) * 1e3
+            how = ("memo" if svc.stats["memo_hits"] > before["memo_hits"]
+                   else "warm" if svc.stats["warm"] > before["warm"]
+                   else "cold")
+            if args.objective == "pareto":
+                answer = f"frontier of {res.size}"
+            else:
+                answer = str(res.best_cfg) if res.feasible else "infeasible"
+            print(f"  {nm:10s} {label:40s} {how:4s} {ms:9.2f}ms  {answer}")
+    s = svc.stats
+    print(f"served {s['queries']} queries: {s['cold']} cold, {s['warm']} "
+          f"warm, {s['memo_hits']} memoized "
+          f"({s['slabs_revived']}/{s['slabs_repriced']} re-priced slabs "
+          f"revived)")
+
+
+def main(argv=None) -> None:
+    """Dispatch to a subcommand (``tokens`` when none is given)."""
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] not in ("tokens", "dse"):
+        argv.insert(0, "tokens")  # original flag-only invocation
+
+    ap = argparse.ArgumentParser(prog="repro.launch.serve")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    tk = sub.add_parser("tokens", help="batched greedy generation")
+    tk.add_argument("--arch", required=True)
+    tk.add_argument("--reduced", action="store_true")
+    tk.add_argument("--batch", type=int, default=4)
+    tk.add_argument("--max-new", type=int, default=8)
+    tk.add_argument("--max-len", type=int, default=64)
+
+    ds = sub.add_parser("dse", help="resident DSE co-search service")
+    ds.add_argument("--workload", default="deit-t",
+                    help="paper workload name, or 'all'")
+    ds.add_argument("--n-z", type=int, default=12)
+    ds.add_argument("--engine", default="jax",
+                    choices=("numpy", "jax", "pallas"))
+    ds.add_argument("--objective", default="edp",
+                    choices=("edp", "pareto"))
+    ds.add_argument("--scenario", action="append", default=[],
+                    metavar="FIELD=VAL[,FIELD=VAL...]",
+                    help="constraint box for one delta query (repeatable)")
+    ds.add_argument("--shard", type=int, default=None)
+    ds.add_argument("--chunk-size", type=int, default=None)
+    ds.add_argument("--checkpoint-root", default=None,
+                    help="service-owned checkpoint root (resume per query)")
+    ds.add_argument("--tpu", action="store_true",
+                    help="disable Pallas interpret mode")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "dse":
+        _dse_main(args)
+    else:
+        _tokens_main(args)
 
 
 if __name__ == "__main__":

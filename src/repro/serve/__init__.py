@@ -1,0 +1,22 @@
+"""DSE-as-a-service: a resident co-search server over the engine layer.
+
+One process answers many (workload, constraint-box) questions: the
+`SearchService` keeps jit caches, `core.factorized.FactorizedSpace` factor
+tables and `SlabBoundEvaluator` dyadic-interval tables resident across
+queries, memoizes results on a canonicalized (workload fingerprint,
+constraint box) key, batches concurrent cold queries into the
+multi-workload dynamic-constraint launches, and answers *tightened-box*
+constraint-delta queries incrementally by re-pricing the prior search's
+`SlabLedger` instead of re-searching the space. See
+`docs/ARCHITECTURE.md` for the life of one query.
+"""
+from .batching import QueryBatcher, ServeQuery
+from .cache import (box_contains, box_constraints, canonical_box,
+                    launch_key, query_key, workload_key)
+from .dse_service import SearchService
+
+__all__ = [
+    "QueryBatcher", "SearchService", "ServeQuery", "box_constraints",
+    "box_contains", "canonical_box", "launch_key", "query_key",
+    "workload_key",
+]
