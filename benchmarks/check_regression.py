@@ -42,10 +42,11 @@ import json
 import sys
 
 # Timings worth gating: the device-resident engine paths whose perf the
-# repo's PRs are accountable for. serve_memo is deliberately absent — a
-# dict hit is pure host noise.
+# repo's PRs are accountable for. serve_memo / scenario_memo are
+# deliberately absent — a dict hit is pure host noise.
 GATED_PREFIXES = ("fused_", "pareto_jax", "pareto_pallas", "pareto_batch",
-                  "serve_cold", "serve_warm")
+                  "serve_cold", "serve_warm", "scenario_cold",
+                  "scenario_warm")
 # Machine-speed normalizers (first one present in both files wins).
 REFERENCE_KEYS = ("fused_numpy", "pareto_numpy")
 

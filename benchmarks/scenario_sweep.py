@@ -1,0 +1,117 @@
+"""Scenario-sweep benchmark: the model zoo through the resident service.
+
+Times `repro.scenarios.sweep` driving a 3-model x 4-shape reduced-zoo
+grid (12 extracted workloads) through one `SearchService` on the jax
+engine, over growing product spaces:
+
+  * ``scenario_cold_N`` — the first sweep on a fresh service: extraction
+    for every scenario plus one coalesced cold wave of bound-guided
+    multi-workload searches (and the ledger/point-store capture that
+    later deltas re-price).
+  * ``scenario_warm_N`` — the same grid under a *tightened* per-class
+    box on the resident service: every scenario takes the
+    constraint-delta path (slab re-pricing), none the memo.
+  * ``scenario_memo_N`` — the identical sweep again: pure canonical-key
+    memo hits plus extraction overhead (never gated: host noise).
+
+Results land in BENCH_scenarios.json at the repo root; set
+SCENARIO_SMOKE=1 (or pass --smoke) to write BENCH_scenarios.smoke.json
+instead — the CI gate diffs the two normalized by the ``fused_numpy``
+reference row (`check_regression.py --require scenario_cold_12`).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+from repro.core import Constraints, FactorizedSpace, search
+from repro.scenarios import ScenarioGrid, sweep
+from repro.serve import SearchService
+
+from .common import row, timed
+
+_BENCH_JSON = (pathlib.Path(__file__).resolve().parents[1]
+               / "BENCH_scenarios.json")
+
+_GRID = ScenarioGrid(models=("qwen2.5-3b", "rwkv6-7b", "olmoe-1b-7b"),
+                     kinds=("train", "prefill", "decode"),
+                     seq_lens=(512,), batches=(4,), new_tokens=(16, 64),
+                     reduce=True)
+
+
+def run():
+    smoke = bool(int(os.environ.get("SCENARIO_SMOKE", "0")))
+    repeats = 3
+    rows = []
+    scenarios = _GRID.expand()
+    bench = {"grid": [s.name for s in scenarios], "smoke": smoke,
+             "spaces": {}, "engines_us": {}, "stats": {}}
+
+    # Machine-speed reference for the CI gate (never gated itself): the
+    # host float64 factorized sweep of one extracted workload, 12^5.
+    ref_space = FactorizedSpace.full(12)
+    wl_ref = scenarios[0].workload()
+    _, us_ref = timed(lambda: search(wl_ref, Constraints(), engine="numpy",
+                                     factorized=True, space=ref_space),
+                      repeats=repeats)
+    bench["engines_us"]["fused_numpy"] = us_ref
+    rows.append(row("scenarios/fused_numpy_reference", us_ref,
+                    f"one-shot float64 factorized sweep of "
+                    f"{ref_space.size} cfgs"))
+
+    # The bound-guided paths saturate with the space, so even the full
+    # 20^5 run is CI-cheap — smoke and full sweep the same sizes.
+    for n in (12, 20):
+        bench["spaces"][str(n)] = FactorizedSpace.full(n).size
+
+        # Cold: a fresh service per call — extraction + one batched wave.
+        def cold():
+            return sweep(_GRID, service=SearchService(n_z=n, engine="jax"))
+        r_cold, us_cold = timed(cold, repeats=repeats)
+        bench["engines_us"][f"scenario_cold_{n}"] = us_cold
+        bench["stats"][f"cold_{n}"] = r_cold.stats
+        rows.append(row(f"scenarios/scenario_cold_{n}", us_cold,
+                        f"{len(r_cold.results)} scenarios, "
+                        f"{r_cold.stats['batched_calls']} wave(s)"))
+
+        # Warm: resident service, distinct tightened per-class boxes each
+        # call, so every scenario re-prices its ledger (never the memo).
+        svc = SearchService(n_z=n, engine="jax")
+        sweep(_GRID, service=svc)  # the base entries the deltas re-price
+        boxes = [{"train": Constraints(power_w=4.5 - 0.01 * i),
+                  "prefill": Constraints(power_w=4.5 - 0.01 * i),
+                  "decode": Constraints(power_w=4.5 - 0.01 * i)}
+                 for i in range(repeats + 1)]
+        it = iter(boxes)
+
+        def warm():
+            return sweep(_GRID, next(it), service=svc)
+        r_warm, us_warm = timed(warm, repeats=repeats)
+        bench["engines_us"][f"scenario_warm_{n}"] = us_warm
+        bench["stats"][f"warm_{n}"] = r_warm.stats
+        rows.append(row(f"scenarios/scenario_warm_{n}", us_warm,
+                        f"{r_warm.stats['warm']} constraint-delta answers, "
+                        f"{us_cold / us_warm:.2f}x vs cold"))
+
+        # Memo: the identical sweep again — extraction + dict hits.
+        _, us_memo = timed(lambda: sweep(_GRID, service=svc),
+                           repeats=repeats)
+        bench["engines_us"][f"scenario_memo_{n}"] = us_memo
+        rows.append(row(f"scenarios/scenario_memo_{n}", us_memo,
+                        f"all memoized, {us_cold / us_memo:.0f}x vs cold"))
+
+    bench["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    out_path = _BENCH_JSON.with_suffix(".smoke.json") if smoke \
+        else _BENCH_JSON  # never clobber the committed full-run record
+    out_path.write_text(json.dumps(bench, indent=2, default=str) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    if "--smoke" in sys.argv:
+        os.environ["SCENARIO_SMOKE"] = "1"
+    for r in run():
+        print(",".join(str(x) for x in r))

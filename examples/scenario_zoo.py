@@ -1,0 +1,60 @@
+"""Scenario co-search across the model zoo (repro.scenarios).
+
+Expands a model x shape grid — every architecture family, prefill vs
+decode vs train — lowers each cell through the config->workload
+extractor, and co-searches all of them through one resident
+`SearchService`. The report at the end is the HW/SW co-design payoff:
+per-scenario winning PTA configs plus the cross-class summary showing
+which architecture parameter decode's tiny-M GEMMs re-negotiate against
+prefill's large-M ones (the paper's Alg. 1 significance question,
+answered empirically per scenario class).
+
+    PYTHONPATH=src python examples/scenario_zoo.py            # reduced zoo
+    PYTHONPATH=src python examples/scenario_zoo.py --full     # real configs
+"""
+import argparse
+import time
+
+from repro.configs import list_archs
+from repro.core import Constraints
+from repro.scenarios import ScenarioGrid, sweep
+from repro.serve import SearchService
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="sweep the published configs (slower) instead of "
+                         "the reduced CPU-smoke ones")
+    ap.add_argument("--engine", default="numpy",
+                    choices=("numpy", "jax", "pallas"))
+    ap.add_argument("--n-z", type=int, default=6)
+    args = ap.parse_args()
+
+    grid = ScenarioGrid.zoo(
+        kinds=("train", "prefill", "decode"),
+        seq_lens=(2048,), batches=(8,), new_tokens=(16, 64),
+        reduce=not args.full)
+    print(f"model zoo: {len(list_archs())} archs -> {grid.size} scenarios")
+
+    # Serving classes carry tighter latency budgets than training runs —
+    # the per-class box mapping expresses that directly.
+    boxes = {"train": Constraints(),
+             "prefill": Constraints(latency_ms=8.0),
+             "decode": Constraints(latency_ms=5.0)}
+
+    svc = SearchService(n_z=args.n_z, engine=args.engine)
+    t0 = time.perf_counter()
+    report = sweep(grid, boxes, service=svc)
+    print(f"cold sweep: {(time.perf_counter() - t0) * 1e3:.1f}ms")
+    print(report.format())
+
+    # The same grid again: every scenario is a canonical-key memo hit.
+    t0 = time.perf_counter()
+    again = sweep(grid, boxes, service=svc)
+    print(f"repeat sweep: {(time.perf_counter() - t0) * 1e3:.1f}ms, "
+          f"{again.stats['memo_hits']}/{len(again.results)} memoized")
+
+
+if __name__ == "__main__":
+    main()

@@ -160,6 +160,12 @@ class ShapeConfig:
     seq_len: int
     global_batch: int
     kind: str                    # "train" | "prefill" | "decode"
+    # Decode length: how many tokens each sequence generates against the
+    # seq_len context ("decode" kind only; train/prefill ignore it). The
+    # default matches the value `workload_for` historically hard-coded, so
+    # the assigned shape set extracts identically to before the field
+    # existed.
+    new_tokens: int = 32
 
 
 # The assigned LM shape set (identical across the 10 archs).

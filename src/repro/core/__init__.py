@@ -14,9 +14,10 @@ from .factorized import (FactorizedSpace, SlabBoundEvaluator,
 from .paper_workloads import PAPER_WORKLOADS
 from .pareto import (DEFAULT_OBJECTIVES, dominates, merge_fronts,
                      pareto_front, pareto_mask, pareto_search_refined)
-from .performance_model import (calc_edp, cycle_factor_tables, eval_full,
-                                eval_wload, eval_wload_arrays, fps,
-                                gemm_cycles, workload_statics)
+from .performance_model import (I32_DIM_LIMIT, calc_edp, cycle_factor_tables,
+                                eval_full, eval_wload, eval_wload_arrays,
+                                fps, gemm_cycles, require_i32_dims,
+                                workload_statics)
 from .photonic_model import (CONSTANTS, DEFAULT_SRAM_MB, DeviceConstants,
                              area_breakdown, eval_hw, eval_hw_config,
                              power_breakdown, sram_mb_for_workload)

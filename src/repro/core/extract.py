@@ -111,20 +111,27 @@ def _rwkv_gemms(cfg, bt, layers, gemms: List[Gemm]):
 
 
 def _elec_ops(cfg, n_ctx, bt, batch, layers, decode=False):
-    """Softmax / LN / activations / recurrences on the electronic unit."""
+    """Softmax / LN / activations / recurrences on the electronic unit.
+
+    Every branch scales with the `layers` parameter, never `cfg.n_layers`:
+    the two only coincide when the caller happens to pass the full depth,
+    and an `cfg.n_layers` alias would double-count whenever a family's
+    electronic depth differs from its config depth (enc-dec already does;
+    partial-depth scenario extraction would too).
+    """
     d = cfg.d_model
     q_tokens = bt // batch
     ops = bt * d * 10 * layers                              # norms/residual
     if cfg.family == "rwkv":
         kd = cfg.resolved_head_dim
-        ops += bt * cfg.n_heads * kd * kd * 3 * cfg.n_layers   # WKV update
+        ops += bt * cfg.n_heads * kd * kd * 3 * layers      # WKV update
         ops += bt * cfg.d_ff
     elif cfg.family == "hybrid_ssm":
         s = cfg.ssm
         d_in = s.expand * d
         ops += bt * (d_in // s.head_dim) * s.d_state * s.head_dim // \
-            max(s.chunk, 1) * 3 * cfg.n_layers              # inter-chunk
-        ops += bt * d_in * 2 * cfg.n_layers                 # conv + gates
+            max(s.chunk, 1) * 3 * layers                    # inter-chunk
+        ops += bt * d_in * 2 * layers                       # conv + gates
     else:
         ops += batch * cfg.n_heads * q_tokens * n_ctx * 3 * layers  # softmax
         ops += bt * cfg.d_ff * layers                       # activation
@@ -142,6 +149,15 @@ def _active_weight_bytes(cfg, weight_bits=4):
 def _build(cfg: ModelConfig, name, seq, batch, *, decode=False,
            n_ctx=None, act_bits=4) -> Workload:
     n_ctx = n_ctx or seq
+    if cfg.n_prefix_embeds and cfg.family != "encdec":
+        # VLM/audio prefix embeddings are real sequence positions: in
+        # prefill/train they flow through every layer alongside the text
+        # tokens; in decode they sit in the attended context.
+        if decode:
+            n_ctx += cfg.n_prefix_embeds
+        else:
+            seq = seq + cfg.n_prefix_embeds
+            n_ctx += cfg.n_prefix_embeds
     bt = batch * seq
     gemms: List[Gemm] = []
     fam = cfg.family
@@ -228,9 +244,15 @@ def serving_workload(cfg: ModelConfig, seq_len: int, batch: int,
                      new_tokens: int) -> Workload:
     """Decode of `new_tokens` tokens against a seq_len context: M = batch
     per GEMM per step, context-length score GEMMs, re-streamed (active)
-    weights every step."""
-    one = _build(cfg, f"{cfg.name}-decode{seq_len}b{batch}", 1, batch,
-                 decode=True, n_ctx=seq_len)
+    weights every step.
+
+    The decode length is part of the workload *name* — two decode
+    workloads of the same (seq, batch) but different `new_tokens` are
+    different questions, and the serve layer's memo keys include the name,
+    so the names must not collide.
+    """
+    one = _build(cfg, f"{cfg.name}-decode{seq_len}b{batch}n{new_tokens}",
+                 1, batch, decode=True, n_ctx=seq_len)
     gemms = tuple(Gemm(g.m, g.k, g.n, g.count * new_tokens)
                   for g in one.gemms)
     return Workload(name=one.name, gemms=gemms,
@@ -241,9 +263,20 @@ def serving_workload(cfg: ModelConfig, seq_len: int, batch: int,
 
 
 def workload_for(cfg: ModelConfig, shape: ShapeConfig) -> Workload:
+    """Lower a (model config, input shape) pair to a DxPTA `Workload`.
+
+    `shape.kind` picks the extraction path; `shape.new_tokens` is the
+    decode length ("decode" kind only). Historically the decode length was
+    hard-coded to 32 here, which silently gave every decode shape —
+    `decode_32k` and `long_500k` alike — the same generation length; now
+    it threads through from the shape.
+    """
     if shape.kind == "train":
         return training_workload(cfg, shape.seq_len, shape.global_batch)
     if shape.kind == "prefill":
         return prefill_workload(cfg, shape.seq_len, shape.global_batch)
+    if shape.kind != "decode":
+        raise ValueError(f"unknown shape kind {shape.kind!r}; pick "
+                         f"'train', 'prefill' or 'decode'")
     return serving_workload(cfg, shape.seq_len, shape.global_batch,
-                            new_tokens=32)
+                            new_tokens=shape.new_tokens)

@@ -31,23 +31,57 @@ def _ceil_div(a, b, xp):
     return (a + b - 1) // b
 
 
+#: Largest GEMM dimension the int32 device formulation handles exactly:
+#: the kernels' `a + b - 1` needs headroom for the divisor product b
+#: (config-parameter products are <= 4096 in practice).
+I32_DIM_LIMIT = 2**31 - 4096
+
+
+def require_i32_dims(gemm_array, where: str = "device engine") -> None:
+    """Reject GEMM dims the structurally-int32 device paths would wrap.
+
+    The jax/pallas kernels run the ceil-divisions in int32 (jax disables
+    x64 by default; the Pallas kernels index in int32 by construction), so
+    a dim at or above `I32_DIM_LIMIT` — e.g. M = batch * seq at serving
+    scale — would silently wrap negative and produce garbage cycles.
+    The host (numpy) paths compute in int64 and have no such ceiling.
+    """
+    g = np.asarray(gemm_array)
+    dims = g[:, :3] if g.ndim == 2 else g
+    if dims.size and int(dims.max()) > I32_DIM_LIMIT:
+        w, ax = np.unravel_index(int(dims.argmax()), dims.shape)
+        raise ValueError(
+            f"GEMM dim {'MKN'[ax]}={int(dims[w, ax])} (gemm row {w}) "
+            f"exceeds the int32 cycle-count limit {I32_DIM_LIMIT} of the "
+            f"{where}; use the numpy engine (int64 host path) or split "
+            f"the workload (e.g. smaller batch x seq product)")
+
+
+def _int_dtype(xp):
+    """int64 on the host paths; int32 where it is structural (the jax
+    engines trace with x64 disabled, mirroring the Pallas kernels —
+    `workload_statics` rejects dims those paths would wrap)."""
+    return np.int64 if xp is np else getattr(xp, "int32")
+
+
 def gemm_cycles(m, k, n, n_t, n_c, n_h, n_v, n_l, xp=np):
     """Photonic cycles for one GEMM on one config (broadcastable).
 
-    The three ceil-divisions run in int32 (mirroring the formulation in
-    kernels/dse_eval.py), so the division itself is exact for dims up to
-    2**31 - 4096 — float ceil math would drift past the 24-bit float32
-    mantissa. The cast cannot repair inputs that already lost the integer:
-    pass dims as integer (or float64) arrays; float32 inputs are only exact
-    below 2**24 (config parameters always are; GEMM dims may not be, which
-    is why the jax engine ships them as int64). The terms are converted to
-    float only for the cycle product, whose rounding is benign.
+    The three ceil-divisions run in int64 on the host (numpy) path — exact
+    for any serving-scale dim, where int32 silently wraps once
+    M = batch * seq reaches 2**31 — and in int32 on the device (jax) path,
+    mirroring the formulation in kernels/dse_eval.py; device callers bake
+    workloads through `workload_statics`, which rejects dims past
+    `I32_DIM_LIMIT`. Either width is exact over its admitted range — float
+    ceil math would drift past the 24-bit float32 mantissa, so pass dims
+    as integer (or float64) arrays, never float32. The terms are converted
+    to float only for the cycle product, whose rounding is benign.
     """
-    i32 = getattr(xp, "int32")
-    m, k, n = (xp.asarray(v).astype(i32) for v in (m, k, n))
-    d_m = xp.asarray(n_t * n_h).astype(i32)
-    d_n = xp.asarray(n_v).astype(i32)
-    d_k = xp.asarray(n_c * n_l).astype(i32)
+    it = _int_dtype(xp)
+    m, k, n = (xp.asarray(v).astype(it) for v in (m, k, n))
+    d_m = xp.asarray(n_t * n_h).astype(it)
+    d_n = xp.asarray(n_v).astype(it)
+    d_k = xp.asarray(n_c * n_l).astype(it)
     return ((_ceil_div(m, d_m, xp) * 1.0)
             * (_ceil_div(n, d_n, xp) * 1.0)
             * (_ceil_div(k, d_k, xp) * 1.0))
@@ -69,17 +103,18 @@ def cycle_factor_tables(gemm_array, m_divs, n_divs, k_divs, xp=np):
         distinct N_t*N_h product, N_v candidate, and N_c*N_lambda product
         of the search space respectively.
 
-    Returns (f_m, f_n, f_k) int32 tables of shape (W, len(divs)) with
+    Returns (f_m, f_n, f_k) integer tables of shape (W, len(divs)) with
     f_m[w, i] = ceil(M_w / m_divs[i]) etc. — bit-for-bit the factors
-    `gemm_cycles` computes per config (same int32 ceil-division), so
+    `gemm_cycles` computes per config (same integer ceil-division, int64
+    on the host path and int32 on the device path, exactly as there), so
     gathering f_m * f_n * f_k reproduces its product exactly.
     """
-    i32 = getattr(xp, "int32")
+    it = _int_dtype(xp)
     g = xp.asarray(gemm_array)
-    m, k, n = (g[:, i].astype(i32) for i in (0, 1, 2))
+    m, k, n = (g[:, i].astype(it) for i in (0, 1, 2))
 
     def table(dim, divs):
-        d = xp.asarray(divs).astype(i32)
+        d = xp.asarray(divs).astype(it)
         return _ceil_div(dim[:, None], d[None, :], xp)
 
     return table(m, m_divs), table(n, n_divs), table(k, k_divs)
@@ -98,7 +133,7 @@ def eval_wload_arrays(n_t, n_c, n_h, n_v, n_l, gemm_array, elec_ops,
     n_t, n_c, n_h, n_v, n_l = (xp.asarray(a)[..., None] for a in
                                (n_t, n_c, n_h, n_v, n_l))  # (G, 1)
     # Keep dims integer until inside gemm_cycles (its ceil-divisions are
-    # exact in int32); promote to float only for products — MAC counts
+    # exact integer math); promote to float only for products — MAC counts
     # overflow int32 (the jax default int width), and float products carry
     # ~1e-7 relative error at worst.
     g = xp.asarray(gemm_array)
@@ -155,7 +190,13 @@ def workload_statics(wl: Workload, c: DeviceConstants = CONSTANTS):
     (elec_ops, weight_bytes, act_io_bytes, sram_mb). The workload side of a
     DSE evaluation is static per search, so baking it as compile-time
     constants (and keeping constraints dynamic) maximizes jit-cache reuse.
+
+    Every device engine (jax and pallas, plain and factorized) bakes its
+    workload here, so this is the chokepoint that rejects GEMM dims the
+    structurally-int32 kernel arithmetic would wrap (`require_i32_dims`);
+    the int64 host paths never call it and stay exact at any scale.
     """
+    require_i32_dims(wl.gemm_array, where="jax/pallas kernel baking")
     gemms = tuple((float(m), float(k), float(n), float(cnt))
                   for m, k, n, cnt in wl.gemm_array)
     scalars = (float(wl.elec_ops), float(wl.weight_bytes),

@@ -37,6 +37,28 @@ class Workload:
     max_act_bytes: float    # largest single-layer activation (SRAM sizing)
     batch: int = 1          # inferences folded into the figures above
 
+    def __post_init__(self):
+        for g in self.gemms:
+            if g.m < 1 or g.k < 1 or g.n < 1 or g.count < 1:
+                raise ValueError(
+                    f"workload {self.name!r}: GEMM dims/count must be "
+                    f">= 1, got ({g.m}, {g.k}, {g.n}) x {g.count} — "
+                    f"an extraction bug, not a searchable shape")
+            # gemm_array is int64; a dim past 2**63 would wrap silently
+            # there. (The int32 *device* ceiling is checked later, at
+            # kernel baking, because the int64 host engines are exact far
+            # beyond it — see performance_model.require_i32_dims.)
+            if max(g.m, g.k, g.n, g.count) >= 2**63:
+                raise ValueError(
+                    f"workload {self.name!r}: GEMM dim {max(g.m, g.k, g.n)}"
+                    f" exceeds int64 — not representable in gemm_array")
+        for f in ("elec_ops", "weight_bytes", "act_io_bytes",
+                  "max_act_bytes"):
+            v = getattr(self, f)
+            if not (v == v) or v < 0 or v == float("inf"):
+                raise ValueError(f"workload {self.name!r}: {f}={v!r} must "
+                                 f"be finite and >= 0")
+
     @property
     def total_macs(self) -> float:
         return float(sum(g.macs for g in self.gemms))

@@ -19,6 +19,19 @@ Two subcommands share this entrypoint:
         PYTHONPATH=src python -m repro.launch.serve dse \\
             --workload deit-t --n-z 12 --engine jax \\
             --scenario power_w=4.5 --scenario power_w=4.0,area_mm2=45
+
+  * ``scenarios`` — model-zoo scenario sweep: expand a model x
+    shape-kind x batch x seq-len x decode-length grid
+    (`repro.scenarios.ScenarioGrid`), lower every cell through the
+    config->workload extractor, and co-search all of them through one
+    resident `SearchService` (cold queries coalesce into batched
+    multi-workload waves; ``--repeat`` sweeps again to show the repeated
+    scenarios served from the memo). Prints per-scenario winners and the
+    cross-class parameter-shift summary::
+
+        PYTHONPATH=src python -m repro.launch.serve scenarios \\
+            --model qwen2.5-3b --model rwkv6-7b --model olmoe-1b-7b \\
+            --reduced --engine numpy --n-z 6
 """
 from __future__ import annotations
 
@@ -107,10 +120,44 @@ def _dse_main(args) -> None:
           f"revived)")
 
 
+def _scenarios_main(args) -> None:
+    """Model-zoo scenario sweep through one resident service."""
+    from repro.configs import list_archs
+    from repro.core.arch_params import Constraints
+    from repro.scenarios import ScenarioGrid, sweep
+    from repro.serve import SearchService
+
+    models = tuple(args.model) or ("qwen2.5-3b", "rwkv6-7b", "olmoe-1b-7b")
+    unknown = sorted(set(models) - set(list_archs()))
+    if unknown:
+        raise SystemExit(f"unknown arch(es) {unknown}; pick from "
+                         f"{list_archs()}")
+    grid = ScenarioGrid(models=models, kinds=tuple(args.kind),
+                        seq_lens=tuple(args.seq_len),
+                        batches=tuple(args.batch),
+                        new_tokens=tuple(args.new_tokens),
+                        reduce=args.reduced)
+    cons = {spec.split(":", 1)[0]: _parse_scenario(spec.split(":", 1)[1])
+            for spec in args.box} if args.box else {}
+    svc = SearchService(n_z=args.n_z, engine=args.engine,
+                        interpret=not args.tpu, shard=args.shard,
+                        chunk_size=args.chunk_size)
+    print(f"service: {args.engine} engine, {args.n_z}^5 space; grid: "
+          f"{len(models)} model(s) x {len(args.kind)} kind(s) -> "
+          f"{grid.size} scenarios")
+    for i in range(max(1, args.repeat)):
+        t0 = time.perf_counter()
+        rep = sweep(grid, cons if cons else Constraints(), service=svc,
+                    objective=args.objective)
+        ms = (time.perf_counter() - t0) * 1e3
+        print(f"sweep {i + 1} ({ms:.1f}ms):")
+        print(rep.format())
+
+
 def main(argv=None) -> None:
     """Dispatch to a subcommand (``tokens`` when none is given)."""
     argv = list(sys.argv[1:] if argv is None else argv)
-    if not argv or argv[0] not in ("tokens", "dse"):
+    if not argv or argv[0] not in ("tokens", "dse", "scenarios"):
         argv.insert(0, "tokens")  # original flag-only invocation
 
     ap = argparse.ArgumentParser(prog="repro.launch.serve")
@@ -141,8 +188,45 @@ def main(argv=None) -> None:
     ds.add_argument("--tpu", action="store_true",
                     help="disable Pallas interpret mode")
 
+    sc = sub.add_parser("scenarios", help="model-zoo scenario co-search")
+    sc.add_argument("--model", action="append", default=[],
+                    help="arch name (repeatable; default: a 3-model zoo)")
+    sc.add_argument("--kind", action="append", default=None,
+                    choices=("train", "prefill", "decode"),
+                    help="scenario class (repeatable; default: all three)")
+    sc.add_argument("--seq-len", type=int, action="append", default=None,
+                    help="context length axis (repeatable; default 2048)")
+    sc.add_argument("--batch", type=int, action="append", default=None,
+                    help="batch axis (repeatable; default 8)")
+    sc.add_argument("--new-tokens", type=int, action="append", default=None,
+                    help="decode-length axis (repeatable; default 16, 64)")
+    sc.add_argument("--box", action="append", default=[],
+                    metavar="KIND:FIELD=VAL[,FIELD=VAL...]",
+                    help="per-class constraint box, e.g. "
+                         "decode:latency_ms=2 (repeatable)")
+    sc.add_argument("--reduced", action="store_true",
+                    help="sweep the reduced (CPU-smoke) configs")
+    sc.add_argument("--repeat", type=int, default=2,
+                    help="sweep the grid this many times (repeats after "
+                         "the first are served from the memo)")
+    sc.add_argument("--n-z", type=int, default=6)
+    sc.add_argument("--engine", default="numpy",
+                    choices=("numpy", "jax", "pallas"))
+    sc.add_argument("--objective", default="edp",
+                    choices=("edp", "pareto"))
+    sc.add_argument("--shard", type=int, default=None)
+    sc.add_argument("--chunk-size", type=int, default=None)
+    sc.add_argument("--tpu", action="store_true",
+                    help="disable Pallas interpret mode")
+
     args = ap.parse_args(argv)
-    if args.cmd == "dse":
+    if args.cmd == "scenarios":
+        args.kind = args.kind or ["train", "prefill", "decode"]
+        args.seq_len = args.seq_len or [2048]
+        args.batch = args.batch or [8]
+        args.new_tokens = args.new_tokens or [16, 64]
+        _scenarios_main(args)
+    elif args.cmd == "dse":
         _dse_main(args)
     else:
         _tokens_main(args)

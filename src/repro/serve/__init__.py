@@ -7,7 +7,8 @@ queries, memoizes results on a canonicalized (workload fingerprint,
 constraint box) key, batches concurrent cold queries into the
 multi-workload dynamic-constraint launches, and answers *tightened-box*
 constraint-delta queries incrementally by re-pricing the prior search's
-`SlabLedger` instead of re-searching the space. See
+`SlabLedger` instead of re-searching the space. `repro.scenarios` builds
+on this service to sweep whole model-zoo x shape grids. See
 `docs/ARCHITECTURE.md` for the life of one query.
 """
 from .batching import QueryBatcher, ServeQuery

@@ -201,6 +201,12 @@ class SearchService:
                 out[pos] = self._memo[self._keys(q)[1]]
         return [out[i] for i in range(len(queries))]
 
+    def stats_delta(self, before: Mapping[str, int]) -> Dict[str, int]:
+        """Counter increments since a ``dict(service.stats)`` snapshot —
+        how a span of queries (e.g. one `repro.scenarios.sweep`) was
+        served, independent of the service's earlier history."""
+        return {k: v - int(before.get(k, 0)) for k, v in self.stats.items()}
+
     # -- internals ---------------------------------------------------------
 
     def _metrics(self, q: ServeQuery) -> Optional[tuple]:
@@ -255,7 +261,11 @@ class SearchService:
         kw.pop("runtime", None)
         kw["objective"] = objective
         if objective == "pareto":
-            kw["pareto_metrics"] = metrics
+            # The wave signature carries the metrics as *submitted*; a
+            # None (defaulted) tuple still needs the same normalization
+            # `query()` applies, or the batched call would crash where
+            # the one-at-a-time path succeeds.
+            kw["pareto_metrics"] = metrics or self._metrics(wave[0])
         wls = {q.wl.name: q.wl for q in wave}
         cons = {q.wl.name: q.constraints for q in wave}
         results = search_workloads(wls, cons, **kw)

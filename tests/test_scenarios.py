@@ -1,0 +1,269 @@
+"""Scenario-sweep harness: grid expansion/dedup, fingerprints, the
+decode-length and int32-ceiling bugfix regressions, engine byte-identity
+of swept winners, and the memo behavior of repeated sweeps.
+
+The load-bearing pins: (1) every scenario a grid expands is a *distinct*
+extraction question with a distinct name (the serve memo keys include
+the workload name, so a collision would silently cross answers); (2) a
+sweep's winners are byte-identical across numpy/jax/pallas on extracted
+workloads; (3) repeated scenarios are served from the memo, never
+re-searched.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES_BY_NAME, get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.core import (Constraints, FactorizedSpace, I32_DIM_LIMIT,
+                        require_i32_dims)
+from repro.core.extract import workload_for
+from repro.core.performance_model import gemm_cycles, workload_statics
+from repro.core.workload import Gemm, Workload
+from repro.scenarios import (Scenario, ScenarioGrid, dedup_scenarios,
+                             resolve_constraints, scenario_key,
+                             scenario_shape, sweep)
+from repro.serve import SearchService
+
+# Small uneven product space (720 configs): big enough for real pruning,
+# small enough that the engine matrix runs in seconds.
+SPACE = FactorizedSpace(((1, 2, 3, 4, 5), (1, 2, 3, 4), (2, 4, 6),
+                        (1, 3, 5, 7), (4, 8, 12)))
+
+MODELS = ("qwen2.5-3b", "rwkv6-7b", "olmoe-1b-7b")
+
+GRID = ScenarioGrid(models=MODELS, kinds=("train", "prefill", "decode"),
+                    seq_lens=(128,), batches=(2,), new_tokens=(8, 16),
+                    reduce=True)
+
+
+def _same_edp(a, b, label=""):
+    assert a.best_cfg == b.best_cfg, label
+    for f in ("area_mm2", "power_w", "energy_j", "latency_s", "edp"):
+        av, bv = getattr(a, f), getattr(b, f)
+        assert av == bv or (np.isnan(av) and np.isnan(bv)), (label, f)
+
+
+# ---------------------------------------------------------------------------
+# Grid expansion: dedup, collision-free names, canonical shapes.
+# ---------------------------------------------------------------------------
+
+def test_grid_expands_collision_free():
+    scs = GRID.expand()
+    # 3 models x (train + prefill + 2 decode lengths) = 12 distinct cells.
+    assert len(scs) == 12
+    assert len({sc.name for sc in scs}) == 12
+    assert len({sc.key() for sc in scs}) == 12
+    wl_names = [sc.workload().name for sc in scs]
+    assert len(set(wl_names)) == 12  # serve memo keys include the name
+
+
+def test_grid_collapses_new_tokens_for_non_decode():
+    # new_tokens is a decode-only knob: a prefill-only grid must not
+    # multiply by the decode-length axis.
+    g = ScenarioGrid(models=("qwen2.5-3b",), kinds=("prefill",),
+                     seq_lens=(128,), batches=(1,), new_tokens=(8, 16, 32),
+                     reduce=True)
+    assert g.size == 1
+
+
+def test_zoo_covers_every_arch():
+    grid = ScenarioGrid.zoo(kinds=("decode",), seq_lens=(64,),
+                            batches=(1,), reduce=True)
+    scs = grid.expand()
+    assert len(scs) == 10
+    for sc in scs:  # every family extracts a searchable workload
+        wl = sc.workload()
+        assert wl.total_macs > 0 and wl.elec_ops > 0
+
+
+def test_grid_rejects_name_collision():
+    a = reduced(get_config("qwen2.5-3b"))
+    import dataclasses
+    b = dataclasses.replace(a, d_ff=a.d_ff * 2)  # same name, different cfg
+    with pytest.raises(ValueError, match="collision"):
+        ScenarioGrid(models=(a, b), kinds=("prefill",),
+                     seq_lens=(64,), batches=(1,)).expand()
+
+
+def test_scenario_key_is_extraction_content():
+    cfg = reduced(get_config("qwen2.5-3b"))
+    # The shape *name* never feeds extraction: respelled shapes share keys.
+    s1 = ShapeConfig("a", 128, 2, "prefill")
+    s2 = ShapeConfig("b", 128, 2, "prefill", new_tokens=99)  # ignored knob
+    assert scenario_key(cfg, s1) == scenario_key(cfg, s2)
+    # Decode lengths are distinct questions.
+    d1 = scenario_shape("decode", 128, 2, 8)
+    d2 = scenario_shape("decode", 128, 2, 16)
+    assert scenario_key(cfg, d1) != scenario_key(cfg, d2)
+
+
+def test_scenario_shape_validates():
+    with pytest.raises(ValueError, match="kind"):
+        scenario_shape("serve", 128, 1)
+    with pytest.raises(ValueError, match=">= 1"):
+        scenario_shape("decode", 128, 0)
+
+
+def test_dedup_scenarios_preserves_order():
+    cfg = reduced(get_config("rwkv6-7b"))
+    a = Scenario(cfg, scenario_shape("prefill", 64, 1))
+    b = Scenario(cfg, scenario_shape("decode", 64, 1, 8))
+    assert dedup_scenarios([a, b, a]) == [a, b]
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regression: ShapeConfig.new_tokens threads through workload_for.
+# ---------------------------------------------------------------------------
+
+def test_decode_length_threads_through_workload_for():
+    cfg = reduced(get_config("qwen2.5-3b"))
+    # Pre-fix, workload_for hard-coded new_tokens=32, so these two shapes
+    # extracted the *same* workload despite asking for different decode
+    # lengths. Decode MACs/elec scale linearly in new_tokens.
+    wl8 = workload_for(cfg, ShapeConfig("s", 128, 2, "decode", new_tokens=8))
+    wl32 = workload_for(cfg, ShapeConfig("s", 128, 2, "decode",
+                                         new_tokens=32))
+    assert wl8.total_macs * 4 == wl32.total_macs
+    assert wl8.elec_ops * 4 == wl32.elec_ops
+    assert wl8.name != wl32.name  # distinct questions, distinct memo keys
+
+
+def test_assigned_shapes_keep_default_decode_length():
+    # The assigned shape set predates the field; its extraction (and
+    # workload names) must match the historical hard-coded 32.
+    for nm in ("decode_32k", "long_500k"):
+        assert SHAPES_BY_NAME[nm].new_tokens == 32
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regression: int32 wrap past M = batch * seq >= 2**31.
+# ---------------------------------------------------------------------------
+
+def test_host_gemm_cycles_exact_past_int32():
+    m = 2**31 + 1000          # int32 would wrap to a negative dim
+    cyc = float(gemm_cycles(m, 64, 64, 2, 2, 8, 8, 8))
+    assert cyc == math.ceil(m / 16) * math.ceil(64 / 8) * math.ceil(64 / 16)
+    assert cyc > 0  # the wrapped int32 path returned negative cycles here
+
+
+def test_device_baking_rejects_past_int32():
+    wl = Workload(name="huge", gemms=(Gemm(2**31 + 1000, 64, 64, 1),),
+                  elec_ops=1.0, weight_bytes=1.0, act_io_bytes=1.0,
+                  max_act_bytes=1.0)
+    with pytest.raises(ValueError, match="int32 cycle-count limit"):
+        workload_statics(wl)
+    # ... while the boundary itself is admitted.
+    require_i32_dims(np.array([[I32_DIM_LIMIT, 64, 64, 1]]))
+
+
+def test_sweep_rejects_overscale_scenario_early_on_device_engines():
+    cfg = reduced(get_config("qwen2.5-3b"))
+    sc = Scenario(cfg, scenario_shape("prefill", 2**22, 1024))  # M = 2**32
+    svc = SearchService(space=SPACE, engine="jax")
+    with pytest.raises(ValueError, match="prefill4194304b1024"):
+        sweep([sc], service=svc)
+    # The numpy service runs the same scenario on the exact int64 path.
+    rep = sweep([sc], service=SearchService(space=SPACE, engine="numpy"))
+    assert len(rep.results) == 1
+
+
+# ---------------------------------------------------------------------------
+# Sweeps through the service: memo behavior, engine byte-identity.
+# ---------------------------------------------------------------------------
+
+def test_sweep_memoizes_repeated_scenarios():
+    svc = SearchService(space=SPACE, engine="numpy")
+    first = sweep(GRID, service=svc)
+    assert first.stats["cold"] == len(first.results) == 12
+    assert first.stats["batched_calls"] >= 1
+    again = sweep(GRID, service=svc)
+    assert again.stats["memo_hits"] == 12
+    assert again.stats["cold"] == 0
+    for a, b in zip(first.results, again.results):
+        assert a.result is b.result  # the identical memoized object
+
+
+def test_sweep_winners_byte_identical_across_engines():
+    small = ScenarioGrid(models=("qwen2.5-3b",),
+                         kinds=("train", "prefill", "decode"),
+                         seq_lens=(128,), batches=(2,), reduce=True)
+    ref = sweep(small, service=SearchService(space=SPACE, engine="numpy"))
+    for engine in ("jax", "pallas"):
+        got = sweep(small, service=SearchService(space=SPACE, engine=engine))
+        for a, b in zip(ref.results, got.results):
+            assert a.scenario.name == b.scenario.name
+            _same_edp(a.result, b.result, (engine, a.scenario.name))
+
+
+def test_sweep_per_class_constraints():
+    tight = {"decode": Constraints(power_w=0.001)}  # kills decode only
+    rep = sweep(GRID, tight, service=SearchService(space=SPACE,
+                                                   engine="numpy"))
+    for r in rep.results:
+        if r.scenario.kind == "decode":
+            assert r.result.best_cfg is None
+            assert r.constraints.power_w == 0.001
+        else:
+            assert r.result.best_cfg is not None
+
+
+def test_resolve_constraints_spellings():
+    box = Constraints(power_w=4.0)
+    assert resolve_constraints(box, "decode") is box
+    per_kind = {"decode": box}
+    assert resolve_constraints(per_kind, "decode") is box
+    assert resolve_constraints(per_kind, "train") == Constraints()
+    # A plain box mapping applies to every class (field names and kind
+    # names are disjoint vocabularies).
+    assert resolve_constraints({"power_w": 4.0}, "train") == box
+
+
+def test_report_summary_ranks_params():
+    rep = sweep(GRID, service=SearchService(space=SPACE, engine="numpy"))
+    classes = rep.by_class()
+    assert set(classes) == {"train", "prefill", "decode"}
+    means = rep.class_param_means()
+    for kind in classes:
+        assert set(means[kind]) == {"n_t", "n_c", "n_h", "n_v", "n_lambda"}
+    shift = rep.param_shift()
+    assert [p for p, _ in shift] != [] and all(v >= 0 for _, v in shift)
+    assert sorted((v for _, v in shift), reverse=True) == [v for _, v
+                                                          in shift]
+    text = rep.format()
+    assert "cross-class parameter shift" in text
+    assert all(r.scenario.name in text for r in rep.results)
+
+
+def test_sweep_pareto_objective():
+    small = ScenarioGrid(models=("rwkv6-7b",), kinds=("prefill", "decode"),
+                         seq_lens=(64,), batches=(1,), reduce=True)
+    rep = sweep(small, service=SearchService(space=SPACE, engine="numpy"),
+                objective="pareto")
+    for r in rep.results:
+        assert len(r.result.front) >= 1
+    assert rep.param_shift()  # frontier rows feed the class means too
+
+
+def test_stats_delta_is_span_local():
+    svc = SearchService(space=SPACE, engine="numpy")
+    wl = Scenario(reduced(get_config("rwkv6-7b")),
+                  scenario_shape("prefill", 64, 1)).workload()
+    svc.query(wl)  # history before the measured span
+    before = dict(svc.stats)
+    svc.query(wl)
+    delta = svc.stats_delta(before)
+    assert delta["queries"] == 1 and delta["memo_hits"] == 1
+    assert delta["cold"] == 0
+
+
+def test_launch_scenarios_subcommand(capsys):
+    from repro.launch.serve import main
+    main(["scenarios", "--model", "qwen2.5-3b", "--model", "rwkv6-7b",
+          "--model", "olmoe-1b-7b", "--reduced", "--engine", "numpy",
+          "--n-z", "4", "--seq-len", "64", "--batch", "1", "--repeat", "2"])
+    out = capsys.readouterr().out
+    assert "12 scenarios (12 cold" in out        # >=3 models x >=4 shapes
+    assert "12 scenarios (0 cold, 0 warm, 12 memoized" in out
+    assert "cross-class parameter shift" in out
