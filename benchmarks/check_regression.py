@@ -26,6 +26,11 @@ BOTH the baseline and the fresh run. Being a within-file ratio it needs no
 machine-speed normalization — this is how the serve benchmark pins the
 warm constraint-delta path at >=5x over cold search.
 
+`--maxratio slow:fast:factor` (repeatable) is the opposite bound:
+engines_us[slow] / engines_us[fast] must stay <= factor in BOTH files —
+an overhead ceiling rather than a speedup floor. This is how the robust
+benchmark pins the worst-corner search at <=2x its nominal twin.
+
 Exit status: 0 ok, 1 regression, 2 nothing comparable (misconfigured gate).
 
     python benchmarks/check_regression.py \
@@ -72,8 +77,29 @@ def _check_speedups(baseline_us: dict, fresh_us: dict,
     return failures
 
 
+def _check_maxratios(baseline_us: dict, fresh_us: dict,
+                     maxratios: tuple) -> list:
+    """Violations of `slow:fast:factor` within-file ratio *ceilings*."""
+    failures = []
+    for slow, fast, factor in maxratios:
+        for label, us in (("baseline", baseline_us), ("fresh", fresh_us)):
+            if slow not in us or fast not in us:
+                failures.append(f"{label}: {slow} or {fast} missing")
+                continue
+            ratio = float(us[slow]) / float(us[fast])
+            ok = ratio <= factor
+            print(f"maxratio {slow}/{fast} [{label}]: {ratio:.2f}x "
+                  f"(required <= {factor:g}x)"
+                  f"{'' if ok else '  <-- REGRESSION'}")
+            if not ok:
+                failures.append(f"{label}: {slow}/{fast} = {ratio:.2f}x "
+                                f"> {factor:g}x")
+    return failures
+
+
 def gate(baseline: dict, fresh: dict, factor: float,
-         require: tuple = (), speedups: tuple = ()) -> int:
+         require: tuple = (), speedups: tuple = (),
+         maxratios: tuple = ()) -> int:
     base_us = baseline.get("engines_us", {})
     fresh_us = fresh.get("engines_us", {})
     missing = [k for k in require if k not in base_us or k not in fresh_us]
@@ -105,7 +131,8 @@ def gate(baseline: dict, fresh: dict, factor: float,
               f"{float(fresh_us[k]):14.1f} {ratio:7.2f}{flag}")
         if ratio > bound:
             failures.append(k)
-    speedup_failures = _check_speedups(base_us, fresh_us, speedups)
+    speedup_failures = (_check_speedups(base_us, fresh_us, speedups)
+                        + _check_maxratios(base_us, fresh_us, maxratios))
     if failures:
         print(f"\n{len(failures)} gated timing(s) regressed more than "
               f"{factor}x (speed-normalized) vs the committed baseline: "
@@ -118,6 +145,8 @@ def gate(baseline: dict, fresh: dict, factor: float,
     print(f"\nbenchmark gate OK: all {len(shared)} gated ratios <= "
           f"{bound:.2f}x" +
           (f", {len(speedups)} speedup requirement(s) held" if speedups
+           else "") +
+          (f", {len(maxratios)} ratio ceiling(s) held" if maxratios
            else ""))
     return 0
 
@@ -137,20 +166,31 @@ def main() -> int:
                     metavar="SLOW:FAST:FACTOR",
                     help="require engines_us[SLOW]/engines_us[FAST] >= "
                          "FACTOR in both records (repeatable)")
+    ap.add_argument("--maxratio", action="append", default=[],
+                    metavar="SLOW:FAST:FACTOR",
+                    help="require engines_us[SLOW]/engines_us[FAST] <= "
+                         "FACTOR in both records (repeatable overhead "
+                         "ceiling)")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
     require = tuple(k for k in args.require.split(",") if k)
-    speedups = []
-    for spec in args.speedup:
-        try:
-            slow, fast, fac = spec.split(":")
-            speedups.append((slow, fast, float(fac)))
-        except ValueError:
-            ap.error(f"bad --speedup spec {spec!r}; expected SLOW:FAST:FACTOR")
-    return gate(baseline, fresh, args.factor, require, tuple(speedups))
+    def parse_ratio_specs(specs, flag):
+        out = []
+        for spec in specs:
+            try:
+                slow, fast, fac = spec.split(":")
+                out.append((slow, fast, float(fac)))
+            except ValueError:
+                ap.error(f"bad {flag} spec {spec!r}; expected "
+                         f"SLOW:FAST:FACTOR")
+        return tuple(out)
+
+    speedups = parse_ratio_specs(args.speedup, "--speedup")
+    maxratios = parse_ratio_specs(args.maxratio, "--maxratio")
+    return gate(baseline, fresh, args.factor, require, speedups, maxratios)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,120 @@
+"""Robust-search overhead: what does pricing calibration uncertainty cost?
+
+The certified worst-corner reduction (`core/calibration.py`) turns
+`robust="worst_case"` into an ordinary search at
+`calibration.worst_case()` plus one band measurement of the winner — so
+the committed claim is that the robust fused search stays within 2x of
+its nominal twin on the same space (near 1x in practice: same engine,
+same space, different `DeviceConstants`; the band adds a handful of
+host-side single-row evaluations). This module times the nominal vs
+robust fused-jax factorized sweep per space size and records the ratio,
+which CI gates via `check_regression.py --maxratio` (a within-file ratio,
+so it needs no machine-speed normalization).
+
+It also records the witness the robust mode exists for: under the
+`conservative` preset on deit-t, the nominally-cheapest feasible config
+is NOT the robust winner — worst-case feasibility picks a different
+architecture (metadata in the record, pinned as a test in
+tests/test_robust_search.py).
+
+Results land in BENCH_robust.json; ROBUST_SMOKE=1 (or --smoke) sweeps
+only the 12^5 space and writes BENCH_robust.smoke.json for the CI gate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+from repro.core import (Constraints, FactorizedSpace,
+                        load_calibration_preset, search)
+from repro.core.paper_workloads import load
+
+from .common import row, timed
+
+_BENCH_JSON = (pathlib.Path(__file__).resolve().parents[1]
+               / "BENCH_robust.json")
+
+#: The gated ceiling: robust fused search vs its nominal twin.
+OVERHEAD_CEILING = 2.0
+
+
+def run():
+    smoke = bool(int(os.environ.get("ROBUST_SMOKE", "0")))
+    wl = load("deit-t")
+    cons = Constraints()
+    cal = load_calibration_preset("conservative")
+    sizes = (12,) if smoke else (12, 20)
+    rows = []
+    bench = {"workload": "deit-t", "calibration": "conservative",
+             "smoke": smoke, "spaces": {}, "engines_us": {},
+             "robust_over_nominal": {}, "ceiling": OVERHEAD_CEILING,
+             "witness": {}}
+
+    # Machine-speed reference for the CI gate (never gated itself).
+    ref_space = FactorizedSpace.full(12)
+    _, us_ref = timed(lambda: search(wl, cons, engine="numpy",
+                                     factorized=True, space=ref_space),
+                      repeats=3)
+    bench["engines_us"]["fused_numpy"] = us_ref
+    rows.append(row("robust/fused_numpy_reference", us_ref,
+                    f"one-shot float64 factorized sweep of "
+                    f"{ref_space.size} cfgs"))
+
+    for n in sizes:
+        space = FactorizedSpace.full(n)
+        bench["spaces"][str(n)] = space.size
+        repeats = 3 if space.size <= 12 ** 5 else 2
+
+        nom, us_nom = timed(
+            lambda: search(wl, cons, engine="jax", factorized=True,
+                           space=space),
+            repeats=repeats)
+        bench["engines_us"][f"fused_jax_nominal_{n}"] = us_nom
+
+        rob, us_rob = timed(
+            lambda: search(wl, cons, engine="jax", factorized=True,
+                           space=space, calibration=cal,
+                           robust="worst_case"),
+            repeats=repeats)
+        bench["engines_us"][f"fused_jax_robust_{n}"] = us_rob
+
+        ratio = us_rob / us_nom
+        bench["robust_over_nominal"][str(n)] = ratio
+        rows.append(row(f"robust/fused_jax_nominal_{n}", us_nom,
+                        f"nominal sweep of {space.size} cfgs; "
+                        f"winner {nom.best_cfg}"))
+        rows.append(row(f"robust/fused_jax_robust_{n}", us_rob,
+                        f"worst-corner sweep + band; winner {rob.best_cfg}; "
+                        f"{ratio:.2f}x nominal (ceiling "
+                        f"{OVERHEAD_CEILING:.0f}x)"))
+        if str(12) == str(n):
+            # The witness: does the conservative calibration change the
+            # deployable answer on the paper workload?
+            bench["witness"] = {
+                "nominal_winner": repr(nom.best_cfg),
+                "nominal_power_w": nom.power_w,
+                "robust_winner": repr(rob.best_cfg),
+                "robust_worst_power_w": rob.power_w,
+                "robust_band_nominal_power_w": rob.band.nominal["power"],
+                "winners_differ": nom.best_cfg != rob.best_cfg,
+            }
+            rows.append(row("robust/witness", 0.0,
+                            f"nominal winner {nom.best_cfg} vs robust "
+                            f"winner {rob.best_cfg}; differ: "
+                            f"{nom.best_cfg != rob.best_cfg}"))
+
+    bench["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    out_path = _BENCH_JSON.with_suffix(".smoke.json") if smoke \
+        else _BENCH_JSON  # never clobber the committed full-run record
+    out_path.write_text(json.dumps(bench, indent=2, default=str) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    if "--smoke" in sys.argv:
+        os.environ["ROBUST_SMOKE"] = "1"
+    for r in run():
+        print(",".join(str(x) for x in r))

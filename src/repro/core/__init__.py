@@ -8,6 +8,10 @@ paper_workloads, and repro.configs for the assigned architectures).
 """
 from .arch_params import (ALG1_DEFAULTS, LT_BASE, LT_LARGE, PAPER_CONSTRAINTS,
                           Constraints, PTAConfig, config_grid, iter_configs)
+from .calibration import (MONOTONE, CalibratedConstants, RobustBand,
+                          as_calibration, audit_monotonicity,
+                          calibration_presets, field_direction,
+                          load_calibration_preset, metric_direction)
 from .factorized import (FactorizedSpace, SlabBoundEvaluator,
                          factorized_evaluate_grid, slab_bounding_span,
                          slab_indices, slab_size, slab_spans)
@@ -24,11 +28,12 @@ from .photonic_model import (CONSTANTS, DEFAULT_SRAM_MB, DeviceConstants,
 from .runtime import (FALLBACK_CHAIN, CheckpointMismatch, KillSearch,
                       LaunchError, LaunchExhausted, LaunchTimeout,
                       NanDetected, RuntimePolicy, SearchFault, SearchRuntime)
-from .search import (ENGINES, PARETO_ENGINES, REPORT_METRICS, ParetoResult,
-                     SearchResult, build_search_space, dxpta_search,
-                     evaluate_grid, exhaustive_search, grid_search_vectorized,
-                     hw_prefilter, hw_prefilter_masks, merge_running_best,
-                     progressive_candidates, search, search_workloads)
+from .search import (ENGINES, PARETO_ENGINES, REPORT_METRICS, ROBUST_ENGINES,
+                     ParetoResult, SearchResult, build_search_space,
+                     dxpta_search, evaluate_grid, exhaustive_search,
+                     grid_search_vectorized, hw_prefilter, hw_prefilter_masks,
+                     merge_running_best, progressive_candidates, search,
+                     search_workloads)
 from .significance import (SignificanceScore, observe_significance,
                            refinement_sets, significant_params)
 from .workload import Gemm, Workload, merge_workloads, transformer_encoder_workload

@@ -401,6 +401,15 @@ class SlabBoundEvaluator:
     admissible for *every* point of the slab rather than any single corner.
     `util`'s lower bound needs the opposite extrema (it shrinks as cycles
     and peak MACs grow), so the tables carry max forms too.
+
+    The same replay argument extends to robust worst-case search
+    (`core.calibration`): the `DeviceConstants` baked in at construction
+    are ordinary operands of the replayed ops, so an evaluator built at a
+    calibration's certified worst corner lower-bounds each slab's
+    *worst-case* metrics — the worst-corner branch-and-bound is literally
+    standard branch-and-bound under different constants, with its bounds
+    admissible for the worst-case objective by the exact induction above
+    (see docs/ARCHITECTURE.md, "Robust search").
     """
 
     def __init__(self, axes, gemm_array, elec_ops, weight_bytes,

@@ -103,7 +103,8 @@ def pareto_front(grid: np.ndarray, wl: Workload,
                  metrics: Sequence[str] = DEFAULT_OBJECTIVES,
                  constraints: Optional[Constraints] = None, *,
                  engine: str = "numpy", hierarchical: bool = False,
-                 c: DeviceConstants = CONSTANTS, interpret: bool = True):
+                 c: DeviceConstants = CONSTANTS, interpret: bool = True,
+                 calibration=None, robust: Optional[str] = None):
     """(front_rows, front_metrics) of non-dominated feasible configs.
 
     Thin wrapper over `search(..., objective="pareto")`, so the evaluation
@@ -112,6 +113,9 @@ def pareto_front(grid: np.ndarray, wl: Workload,
     `evaluate_grid` (the pre-engine implementation always swept the whole
     grid from scratch). `constraints=None` keeps the historical behaviour:
     the frontier over *all* grid points, feasibility ignored.
+    `calibration=` / `robust="worst_case"` forward to `search` for a
+    variation-aware frontier (dominance on worst-case metrics); the
+    returned metrics are then the worst-case ones.
     """
     from .search import search  # deferred: search imports pareto_mask
 
@@ -123,7 +127,8 @@ def pareto_front(grid: np.ndarray, wl: Workload,
                                   latency_ms=unconstrained)
     r = search(wl, constraints, engine=engine, grid=grid,
                hierarchical=hierarchical, c=c, interpret=interpret,
-               objective="pareto", pareto_metrics=tuple(metrics))
+               objective="pareto", pareto_metrics=tuple(metrics),
+               calibration=calibration, robust=robust)
     return r.front, {k: r.metrics[k] for k in metrics}
 
 
@@ -136,7 +141,9 @@ def pareto_search_refined(wl: Workload,
                           metrics: Sequence[str] = DEFAULT_OBJECTIVES,
                           hierarchical: bool = True,
                           c: DeviceConstants = CONSTANTS,
-                          interpret: bool = True):
+                          interpret: bool = True,
+                          calibration=None,
+                          robust: Optional[str] = None):
     """Two-pass significance-guided frontier search (Alg. 1 -> Alg. 2).
 
     Pass 1 sweeps the coarse significance-reduced grid (the same candidate
@@ -150,12 +157,28 @@ def pareto_search_refined(wl: Workload,
     (configs in both grids — the fine neighborhoods overlap the coarse sets
     — are counted in each pass they appear in, consistently for both
     fields).
+
+    `calibration=` / `robust="worst_case"` run both passes and the final
+    merge at the calibration's certified worst corner (exactly as in
+    `search`), so the refined frontier is variation-aware; the result
+    carries its uncertainty band. Calibrations with uncertified varying
+    fields are rejected here — the two-pass refinement has no vertex-sweep
+    fallback.
     """
-    from .search import (_pareto_from_rows, _space_to_grid, ParetoResult,
-                         build_search_space, search)
+    from .search import (_measure_band, _pareto_from_rows, _resolve_robust,
+                         _space_to_grid, ParetoResult, build_search_space,
+                         search)
     import time
 
     t0 = time.perf_counter()
+    c, cal, fallback = _resolve_robust(calibration, robust, c, engine)
+    if fallback:
+        raise ValueError(
+            "this calibration has uncertified varying fields "
+            f"({cal.unresolved()}): pareto_search_refined supports only "
+            "certified worst-corner robust search — certify the field "
+            "directions (core.calibration.MONOTONE) or use "
+            "search(objective='pareto')")
     significance = significance or observe_significance()
     coarse_grid = _space_to_grid(build_search_space(n_z, step, significance))
     coarse = search(wl, constraints, engine=engine, grid=coarse_grid,
@@ -179,7 +202,10 @@ def pareto_search_refined(wl: Workload,
                        axis=0)
     front, met, _ = _pareto_from_rows(merged, wl, constraints, c,
                                       tuple(metrics))
-    return ParetoResult(front=front, metrics=met, objectives=tuple(metrics),
-                        n_evaluated=n_evaluated, n_feasible=n_feasible,
-                        n_workload_evals=n_wl,
-                        wall_time_s=time.perf_counter() - t0)
+    res = ParetoResult(front=front, metrics=met, objectives=tuple(metrics),
+                       n_evaluated=n_evaluated, n_feasible=n_feasible,
+                       n_workload_evals=n_wl,
+                       wall_time_s=time.perf_counter() - t0)
+    if cal is not None:
+        res.band = _measure_band(res, cal, wl)
+    return res

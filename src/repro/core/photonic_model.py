@@ -90,6 +90,28 @@ class DeviceConstants:
     act_bits: int = 4
     weight_bits: int = 4
 
+    def __post_init__(self):
+        # A nonsense constant (NaN, zero, negative) does not fail loudly —
+        # it silently yields garbage metrics, or worse, a garbage *mask*
+        # (NaN feasibility comparisons are all-False). Mirror the
+        # Constraints validation and refuse at construction.
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, bool) or not isinstance(
+                    v, (int, float, np.integer, np.floating)):
+                raise ValueError(
+                    f"DeviceConstants.{f.name} must be a number, got {v!r}")
+            if v != v or not np.isfinite(v):
+                raise ValueError(
+                    f"DeviceConstants.{f.name} is non-finite ({v!r})")
+            if v <= 0:
+                raise ValueError(
+                    f"DeviceConstants.{f.name} must be > 0, got {v!r}")
+        if self.sram_min_mb > self.sram_max_mb:
+            raise ValueError(
+                f"DeviceConstants.sram_min_mb ({self.sram_min_mb!r}) must "
+                f"not exceed sram_max_mb ({self.sram_max_mb!r})")
+
 
 CONSTANTS = DeviceConstants()
 

@@ -85,6 +85,7 @@ from typing import Dict, Mapping, Optional, Sequence, Union
 import numpy as np
 
 from .arch_params import Constraints, PTAConfig, config_grid
+from .calibration import (CalibratedConstants, RobustBand, as_calibration)
 from .factorized import FactorizedSpace, factorized_evaluate_grid
 from .pareto import DEFAULT_OBJECTIVES, pareto_mask
 from .performance_model import (calc_edp, eval_full, eval_wload_arrays,
@@ -149,6 +150,14 @@ class SearchResult:
     ledger: Optional[object] = dataclasses.field(default=None, repr=False,
                                                  compare=False)
 
+    # Robust search (search(..., calibration=)): the winner's uncertainty
+    # band — float64 reference metrics at the calibration's worst, nominal
+    # and best corners (a core.calibration.RobustBand). None on
+    # uncalibrated searches and infeasible results. Excluded from equality
+    # like the ledger: the band is derived reporting, not the answer.
+    band: Optional[RobustBand] = dataclasses.field(default=None, repr=False,
+                                                   compare=False)
+
     @property
     def feasible(self) -> bool:
         """True when the search found any constraint-satisfying config."""
@@ -194,6 +203,13 @@ class ParetoResult:
     # Slab ledger, as on SearchResult (keep_ledger=True only).
     ledger: Optional[object] = dataclasses.field(default=None, repr=False,
                                                  compare=False)
+
+    # Robust-search uncertainty band, as on SearchResult but with
+    # (F,)-arrays aligned row-for-row with `front` — `band.best` is the
+    # best-case corner retained for reporting the variation band of each
+    # frontier member. None on uncalibrated searches and empty frontiers.
+    band: Optional[RobustBand] = dataclasses.field(default=None, repr=False,
+                                                   compare=False)
 
     @property
     def size(self) -> int:
@@ -316,8 +332,9 @@ def dxpta_search(wl: Workload, constraints: Constraints = Constraints(),
                  align_dims: Optional[Sequence[int]] = None,
                  prune: Union[bool, str] = True, collect: bool = False,
                  c: DeviceConstants = CONSTANTS, engine: str = "python",
-                 interpret: bool = True,
-                 factorized: bool = False) -> SearchResult:
+                 interpret: bool = True, factorized: bool = False,
+                 calibration=None,
+                 robust: Optional[str] = None) -> SearchResult:
     """The paper's constraint-aware search (Alg. 2).
 
     `engine` dispatches the significance-reduced grid to any backend of the
@@ -335,6 +352,11 @@ def dxpta_search(wl: Workload, constraints: Constraints = Constraints(),
     lower bounds already violate the constraints or cannot beat the
     running incumbent — the vectorized realization of the paper's claim
     that constraint-aware significance-guided search beats sweeping.
+    `calibration=` / `robust="worst_case"` carry calibration uncertainty
+    through whichever path dispatches, exactly as in `search` (robust
+    mode needs a vectorized engine; the paper-faithful python loop stays
+    point-calibrated and accepts `calibration=` only without `robust=`,
+    running at its nominal constants).
     """
     if collect and engine != "python":
         raise ValueError("collect=True (per-candidate history) is only "
@@ -342,15 +364,22 @@ def dxpta_search(wl: Workload, constraints: Constraints = Constraints(),
     space = build_search_space(n_z, step, significance, align_dims)
     if prune == "bound":
         return search(wl, constraints, engine=engine, factorized=True,
-                      space=space, c=c, interpret=interpret, prune="bound")
+                      space=space, c=c, interpret=interpret, prune="bound",
+                      calibration=calibration, robust=robust)
     if factorized:
         return search(wl, constraints, engine=engine, factorized=True,
-                      space=space, c=c, interpret=interpret)
+                      space=space, c=c, interpret=interpret,
+                      calibration=calibration, robust=robust)
     grid = _space_to_grid(space)
     if engine == "python":
-        return _sequential_search(grid, wl, constraints, prune, collect, c)
+        c, cal, _ = _resolve_robust(calibration, robust, c, engine)
+        res = _sequential_search(grid, wl, constraints, prune, collect, c)
+        if cal is not None:
+            res.band = _measure_band(res, cal, wl)
+        return res
     return search(wl, constraints, engine=engine, grid=grid,
-                  hierarchical=prune, c=c, interpret=interpret)
+                  hierarchical=prune, c=c, interpret=interpret,
+                  calibration=calibration, robust=robust)
 
 
 def exhaustive_search(wl: Workload, constraints: Constraints = Constraints(),
@@ -2731,6 +2760,169 @@ def _check_grid(grid) -> np.ndarray:
     return g
 
 
+# ---------------------------------------------------------------------------
+# Robust search: calibration uncertainty through the cost model
+# ---------------------------------------------------------------------------
+#
+# `core.calibration`'s certified-monotone lemma reduces worst-case-robust
+# search to an ordinary search at the calibration's worst corner — so the
+# resolution below simply swaps the `DeviceConstants` the engines run on
+# and attaches the winner's (or frontier's) uncertainty band afterwards.
+# Only calibrations with *unresolved* fields (explicitly `uncertified=`,
+# or a direction conflict in a future cost model) leave that fast path,
+# via the conservative host-side vertex sweep `_robust_vertex_search`.
+
+#: Engines robust="worst_case" supports — the vectorized backends the
+#: worst-corner reduction prices in one sweep. The python engine is the
+#: paper-faithful sequential oracle (EDP_svd cap and all) and stays
+#: point-calibrated.
+ROBUST_ENGINES = ("numpy", "jax", "pallas")
+
+
+def _resolve_robust(calibration, robust, c, engine):
+    """Validate and resolve `calibration=` / `robust=` into the constants
+    the engines should run at.
+
+    Returns `(c_run, cal, fallback)`: `cal` is None on uncalibrated
+    searches; `fallback=True` routes through `_robust_vertex_search`
+    (unresolved fields), in which case `c_run` is None.
+    """
+    if calibration is None:
+        if robust is not None:
+            raise ValueError("robust= prices a calibration's uncertainty; "
+                             "pass calibration= (a CalibratedConstants, a "
+                             "{field: interval} mapping, or a preset name)")
+        return c, None, False
+    cal = as_calibration(calibration)
+    if c != CONSTANTS:
+        raise ValueError("pass either c= or calibration=, not both: the "
+                         "calibration's nominal values are the point "
+                         "constants")
+    if robust is None:
+        return cal.nominal(), cal, False
+    if robust != "worst_case":
+        raise ValueError(f"unknown robust mode {robust!r}; the engine "
+                         f"layer supports robust='worst_case' or None")
+    if engine not in ROBUST_ENGINES:
+        raise ValueError(f"robust='worst_case' supports engines "
+                         f"{ROBUST_ENGINES}, not {engine!r}")
+    if cal.unresolved():
+        return None, cal, True
+    return cal.worst_case(), cal, False
+
+
+def _corner_reduced_metrics(rows, wl, cal, sign, fspace=None, idx=None):
+    """Per-metric elementwise extreme over the calibration's `sign`-side
+    vertex corners (float64 host reference). One corner — hence one plain
+    `evaluate_grid` sweep — for fully certified calibrations."""
+    op = np.maximum if sign > 0 else np.minimum
+    out = None
+    for corner in cal.vertex_corners(sign=sign):
+        m = (factorized_evaluate_grid(fspace, wl, corner, idx=idx)
+             if fspace is not None else evaluate_grid(rows, wl, corner))
+        out = m if out is None else {k: op(out[k], m[k])
+                                     for k in REPORT_METRICS}
+    return out
+
+
+def _measure_band(res, cal, wl) -> Optional[RobustBand]:
+    """The result's uncertainty band: float64 reference metrics of the
+    winner (or each frontier row) at the calibration's worst / nominal /
+    best corners. None for infeasible results."""
+    if isinstance(res, ParetoResult):
+        if res.size == 0:
+            return None
+        rows = np.asarray(res.front, np.int64)
+
+        def to(m):
+            return {k: np.asarray(m[k], np.float64) for k in REPORT_METRICS}
+    else:
+        if res.best_cfg is None:
+            return None
+        rows = np.asarray([res.best_cfg.as_array()], np.int64)
+
+        def to(m):
+            return {k: float(np.asarray(m[k])[0]) for k in REPORT_METRICS}
+    worst = _corner_reduced_metrics(rows, wl, cal, +1)
+    best = _corner_reduced_metrics(rows, wl, cal, -1)
+    nom = evaluate_grid(rows, wl, cal.nominal())
+    return RobustBand(calibration=cal, worst=to(worst), nominal=to(nom),
+                      best=to(best))
+
+
+def _robust_vertex_search(wl, constraints, cal, engine, grid, n_z,
+                          objective, pareto_metrics, factorized, space,
+                          hierarchical):
+    """Conservative fallback for calibrations with unresolved fields: a
+    host-side float64 sweep over the 2^k vertex corners of the uncertified
+    fields (certified fields pinned at their worst end), each metric priced
+    at its elementwise corner max. Sound — per-field monotone metrics
+    attain their box extrema at vertices — but conservative: per-metric
+    maxes may come from different corners. `shard`/`chunk_size` are
+    accepted and ignored (the host sweep returns the same bytes);
+    `prune`/`runtime`/`keep_ledger` are rejected by `search` before this
+    runs."""
+    t0 = time.perf_counter()
+    fspace = None
+    if factorized:
+        fspace = _factorized_space(space, grid, n_z, engine, hierarchical)
+        rows = fspace.to_grid()
+    else:
+        if space is not None:
+            raise ValueError("space= requires factorized=True (pass grid= "
+                             "for materialized candidate sets)")
+        rows = _full_grid(n_z) if grid is None else _check_grid(grid)
+        rows = np.asarray(rows, np.int64)
+    n_corners = len(cal.vertex_corners())
+    worst = _corner_reduced_metrics(rows, wl, cal, +1, fspace=fspace)
+    ok = np.asarray(constraints.satisfied(worst["area"], worst["power"],
+                                          worst["energy"],
+                                          worst["latency"]))
+    n_eval = len(rows) * n_corners
+    n_feasible = int(ok.sum())
+
+    if objective == "edp":
+        if not ok.any():
+            return SearchResult(best_cfg=None, n_evaluated=n_eval,
+                                n_feasible=0, n_workload_evals=n_eval,
+                                wall_time_s=time.perf_counter() - t0)
+        idx = np.where(ok)[0]
+        best = int(idx[np.lexsort((idx, worst["edp"][idx]))[0]])
+        res = SearchResult(
+            best_cfg=PTAConfig.from_array(rows[best]),
+            area_mm2=float(worst["area"][best]),
+            power_w=float(worst["power"][best]),
+            energy_j=float(worst["energy"][best]),
+            latency_s=float(worst["latency"][best]),
+            edp=float(worst["edp"][best]),
+            n_evaluated=n_eval, n_feasible=n_feasible,
+            n_workload_evals=n_eval,
+            wall_time_s=time.perf_counter() - t0)
+    else:
+        metrics = _check_pareto_metrics(engine, pareto_metrics)
+        if not ok.any():
+            front = np.zeros((0, 5), np.int64)
+            met = {k: np.zeros(0, np.float64) for k in REPORT_METRICS}
+            return ParetoResult(front=front, metrics=met,
+                                objectives=metrics, n_evaluated=n_eval,
+                                n_feasible=0, n_workload_evals=n_eval,
+                                wall_time_s=time.perf_counter() - t0)
+        pts = np.stack([np.asarray(worst[k], np.float64)[ok]
+                        for k in metrics], axis=1)
+        mask = pareto_mask(pts)
+        front = rows[ok][mask]
+        order = np.lexsort(front.T[::-1])
+        sel = np.where(ok)[0][mask][order]
+        met = {k: np.asarray(worst[k], np.float64)[sel]
+               for k in REPORT_METRICS}
+        res = ParetoResult(front=front[order], metrics=met,
+                           objectives=metrics, n_evaluated=n_eval,
+                           n_feasible=n_feasible, n_workload_evals=n_eval,
+                           wall_time_s=time.perf_counter() - t0)
+    res.band = _measure_band(res, cal, wl)
+    return res
+
+
 def search(wl: Workload, constraints: Constraints = Constraints(), *,
            engine: str = "numpy", grid: Optional[np.ndarray] = None,
            n_z: int = 12, hierarchical: bool = False,
@@ -2740,7 +2932,8 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
            shard: Optional[int] = None, chunk_size: Optional[int] = None,
            factorized: bool = False, space=None,
            prune: Optional[str] = None, runtime=None,
-           keep_ledger: bool = False
+           keep_ledger: bool = False,
+           calibration=None, robust: Optional[str] = None
            ) -> Union[SearchResult, ParetoResult]:
     """Unified search over a config grid.
 
@@ -2818,6 +3011,27 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
         that actually *resumed* returns ``ledger=None`` — the resumed
         process replays only the schedule's tail, so no complete
         partition passes through it.
+      calibration: a `core.calibration.CalibratedConstants` (or a
+        `{field: interval}` mapping, or a shipped preset name like
+        "conservative") carrying per-field (lo, nominal, hi) uncertainty
+        intervals over the device constants. Mutually exclusive with a
+        non-default `c=`. Without `robust=`, the search runs at
+        `calibration.nominal()` — existing behavior — and the result
+        additionally carries the winner's uncertainty band on
+        ``result.band``.
+      robust: "worst_case" prices the search at the calibration's
+        certified worst corner: feasibility is decided on each metric's
+        worst-case value, the EDP incumbent (or frontier dominance) on
+        worst-case metrics, and the reported numbers are worst-case —
+        "best config whose worst-case metrics still meet the
+        constraints". The degenerate calibration (lo == nominal == hi)
+        returns byte-identical results to an uncalibrated search. Sound
+        by the `core.calibration.MONOTONE` direction lemma, which also
+        keeps `prune="bound"` admissible (the slab bounds are simply
+        built at the worst-corner constants); calibrations with
+        uncertified varying fields fall back to a conservative host-side
+        vertex sweep (which rejects prune/runtime/keep_ledger).
+        Vectorized engines only (numpy/jax/pallas).
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; pick from "
@@ -2827,17 +3041,37 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
     if keep_ledger and prune != "bound":
         raise ValueError("keep_ledger=True records the bound-guided slab "
                          "partition; it requires prune='bound'")
+    c, cal, fallback = _resolve_robust(calibration, robust, c, engine)
+    if fallback:
+        if prune is not None or runtime is not None or keep_ledger:
+            raise ValueError(
+                "this calibration has uncertified varying fields "
+                f"({cal.unresolved()}): robust search runs the "
+                "conservative vertex sweep, which supports neither "
+                "prune='bound' nor runtime= nor keep_ledger=True — "
+                "certify the field directions (core.calibration.MONOTONE) "
+                "to use the worst-corner fast path")
+        if objective not in ("edp", "pareto"):
+            raise ValueError(f"unknown objective {objective!r}; "
+                             f"pick 'edp' or 'pareto'")
+        return _robust_vertex_search(wl, constraints, cal, engine, grid,
+                                     n_z, objective, pareto_metrics,
+                                     factorized, space, hierarchical)
     rt = SearchRuntime.of(runtime) if runtime is not None else None
     if rt is None:
-        return _search_impl(wl, constraints, engine, grid, n_z,
-                            hierarchical, c, interpret, objective,
-                            pareto_metrics, shard, chunk_size, factorized,
-                            space, prune, None, keep_ledger)
-    with _activate_rt(rt):
-        return _search_impl(wl, constraints, engine, grid, n_z,
-                            hierarchical, c, interpret, objective,
-                            pareto_metrics, shard, chunk_size, factorized,
-                            space, prune, rt, keep_ledger)
+        res = _search_impl(wl, constraints, engine, grid, n_z,
+                           hierarchical, c, interpret, objective,
+                           pareto_metrics, shard, chunk_size, factorized,
+                           space, prune, None, keep_ledger)
+    else:
+        with _activate_rt(rt):
+            res = _search_impl(wl, constraints, engine, grid, n_z,
+                               hierarchical, c, interpret, objective,
+                               pareto_metrics, shard, chunk_size,
+                               factorized, space, prune, rt, keep_ledger)
+    if cal is not None:
+        res.band = _measure_band(res, cal, wl)
+    return res
 
 
 def _search_impl(wl, constraints, engine, grid, n_z, hierarchical, c,
@@ -2993,7 +3227,8 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                      chunk_size: Optional[int] = None,
                      factorized: bool = False, space=None,
                      prune: Optional[str] = None, runtime=None,
-                     keep_ledger: bool = False
+                     keep_ledger: bool = False,
+                     calibration=None, robust: Optional[str] = None
                      ) -> Dict[str, Union[SearchResult, ParetoResult]]:
     """Batched search: many workloads against one grid.
 
@@ -3022,13 +3257,59 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
     sub-search shares the batch campaign's fault injector, and each
     result carries its own workload's counters. `keep_ledger=True`
     retains each workload's slab partition on its result exactly as in
-    `search` (requires `prune="bound"`).
+    `search` (requires `prune="bound"`). `calibration=` / `robust=` carry
+    calibration uncertainty exactly as in `search`, resolved once for the
+    whole batch: the fused all-workloads launches simply run at the
+    calibration's worst corner (the worst-corner reduction is
+    engine-agnostic), and every result carries its own workload's
+    uncertainty band on ``result.band``.
     """
     if not isinstance(wls, Mapping):
         wls = {wl.name: wl for wl in wls}
     if objective not in ("edp", "pareto"):
         raise ValueError(f"unknown objective {objective!r}; "
                          f"pick 'edp' or 'pareto'")
+    c, cal, fallback = _resolve_robust(calibration, robust, c, engine)
+    if fallback:
+        if prune is not None or runtime is not None or keep_ledger:
+            raise ValueError(
+                "this calibration has uncertified varying fields "
+                f"({cal.unresolved()}): robust search runs the "
+                "conservative vertex sweep, which supports neither "
+                "prune='bound' nor runtime= nor keep_ledger=True — "
+                "certify the field directions (core.calibration.MONOTONE) "
+                "to use the worst-corner fast path")
+        _check_stream_args(shard, chunk_size)
+        out = {name: _robust_vertex_search(
+                   wl, (constraints[name] if isinstance(constraints,
+                                                        Mapping)
+                        else constraints), cal, engine, grid, n_z,
+                   objective, pareto_metrics, factorized, space,
+                   hierarchical)
+               for name, wl in wls.items()}
+        total = sum(r.wall_time_s for r in out.values())
+        for r in out.values():
+            r.wall_time_s = total
+        return out
+    out = _search_workloads_impl(wls, constraints, engine, grid, n_z,
+                                 hierarchical, c, interpret, objective,
+                                 pareto_metrics, shard, chunk_size,
+                                 factorized, space, prune, runtime,
+                                 keep_ledger)
+    if cal is not None:
+        for name, r in out.items():
+            r.band = _measure_band(r, cal, wls[name])
+    return out
+
+
+def _search_workloads_impl(wls, constraints, engine, grid, n_z,
+                           hierarchical, c, interpret, objective,
+                           pareto_metrics, shard, chunk_size, factorized,
+                           space, prune, runtime, keep_ledger
+                           ) -> Dict[str, Union[SearchResult,
+                                                ParetoResult]]:
+    """The batched dispatch behind `search_workloads`, post calibration
+    resolution (`c` is already the corner the batch should run at)."""
     _check_stream_args(shard, chunk_size)
     _check_prune_arg(prune, factorized)
     if keep_ledger and prune != "bound":

@@ -165,7 +165,8 @@ def sweep(grid: Union[ScenarioGrid, Sequence[Scenario]],
           service: Optional[SearchService] = None,
           engine: str = "jax", n_z: int = 12, space=None,
           objective: str = "edp", pareto_metrics: Optional[tuple] = None,
-          interpret: bool = True, c: DeviceConstants = CONSTANTS
+          interpret: bool = True, c: DeviceConstants = CONSTANTS,
+          calibration=None, robust: Optional[str] = None
           ) -> SweepReport:
     """Run every scenario of `grid` through one `SearchService`.
 
@@ -177,9 +178,13 @@ def sweep(grid: Union[ScenarioGrid, Sequence[Scenario]],
       service: a standing service to sweep through — repeated sweeps on
         one service answer repeated scenarios from the memo. When None a
         fresh service is built from `engine`/`n_z`/`space`/`interpret`/
-        `c` (those are ignored when `service` is given: the space side of
-        a query belongs to the service).
+        `c`/`calibration`/`robust` (those are ignored when `service` is
+        given: the space side of a query belongs to the service).
       objective / pareto_metrics: forwarded to every query.
+      calibration / robust: calibration uncertainty for the fresh
+        service (see `serve.SearchService`): robust="worst_case" sweeps
+        the zoo for configs whose *worst-case* metrics meet each class's
+        box, and every scenario result carries its uncertainty band.
 
     Returns a `SweepReport`; `report.stats` holds the service-counter
     deltas this sweep caused (not lifetime totals).
@@ -192,7 +197,8 @@ def sweep(grid: Union[ScenarioGrid, Sequence[Scenario]],
     scenarios = grid.expand() if isinstance(grid, ScenarioGrid) \
         else dedup_scenarios(grid)
     svc = service if service is not None else SearchService(
-        space=space, n_z=n_z, engine=engine, interpret=interpret, c=c)
+        space=space, n_z=n_z, engine=engine, interpret=interpret, c=c,
+        calibration=calibration, robust=robust)
     pairs = []
     for sc in scenarios:
         wl = sc.workload()

@@ -86,23 +86,31 @@ def workload_key(wl: Workload) -> str:
 
 
 def query_key(wl_key: str, box: Box, axes: tuple, objective: str,
-              metrics: Optional[tuple]) -> str:
+              metrics: Optional[tuple], constants: str = "") -> str:
     """Memo key of one fully-specified query: canonical workload digest +
     canonical box + the product-space axes + objective (+ pareto metric
-    tuple). Engine, sharding and chunking are deliberately *excluded*:
-    every engine x (shard, chunk_size) combination returns byte-identical
-    winners/frontiers, so they name the same answer."""
+    tuple) + the service's constants fingerprint. Engine, sharding and
+    chunking are deliberately *excluded*: every engine x (shard,
+    chunk_size) combination returns byte-identical winners/frontiers, so
+    they name the same answer. `constants` is *included* (the service
+    passes `SearchService.constants_fingerprint`): different
+    `DeviceConstants` — or different calibrations / robust modes — price
+    different cost models, so their answers, and the checkpoint
+    directories `query_checkpoint_dir` derives from this key, must never
+    collide."""
     return fingerprint(wl=wl_key, box=box, axes=axes, objective=objective,
-                       metrics=metrics)
+                       metrics=metrics, constants=constants)
 
 
 def base_key(wl_key: str, axes: tuple, objective: str,
-             metrics: Optional[tuple]) -> str:
+             metrics: Optional[tuple], constants: str = "") -> str:
     """Key of the box-independent *base entry* (ledger + evaluated-point
     store) that warm constraint-delta queries re-price against — the
-    `query_key` with the box left out."""
+    `query_key` with the box left out (and the same constants
+    fingerprint: a ledger priced under one cost model must not warm-start
+    another's)."""
     return fingerprint(wl=wl_key, axes=axes, objective=objective,
-                       metrics=metrics)
+                       metrics=metrics, constants=constants)
 
 
 def launch_key(engine: str, n_rows: int) -> Tuple[str, int]:

@@ -44,12 +44,13 @@ from repro.core.arch_params import Constraints
 from repro.core.factorized import (FactorizedSpace, SlabLedger,
                                    factorized_evaluate_grid)
 from repro.core.photonic_model import CONSTANTS, DeviceConstants
-from repro.core.runtime import query_policy
+from repro.core.runtime import fingerprint, query_policy
 from repro.core.search import (DEFAULT_OBJECTIVES, ParetoResult,
                                SearchResult, WarmStart,
                                _bnb_dominated_vs, _bnb_infeasible_mask,
-                               _check_pareto_metrics, _pareto_factorized_bnb,
-                               _pareto_from_rows, _search_factorized_bnb,
+                               _check_pareto_metrics, _measure_band,
+                               _pareto_factorized_bnb, _pareto_from_rows,
+                               _resolve_robust, _search_factorized_bnb,
                                search, search_workloads)
 from repro.core.workload import Workload
 
@@ -101,6 +102,23 @@ class SearchService:
         actually resumed returns no ledger, so it seeds no warm-start
         entry — correctness never depends on the checkpoint history.
       c: device constants of the photonic model.
+      calibration: a `core.calibration.CalibratedConstants` (or a
+        `{field: interval}` mapping, or a preset name) — the service's
+        calibration uncertainty. Mutually exclusive with a non-default
+        `c=`. Without `robust=`, searches run at `calibration.nominal()`;
+        every answer carries its uncertainty band on ``result.band``.
+      robust: "worst_case" makes the whole service robust: every cold
+        search, warm constraint-delta, and memoized answer is priced at
+        the calibration's certified worst corner (see `core.search` —
+        the warm ledger re-pricing stays sound because the stored bounds
+        were built at the same corner the deltas re-price at).
+        Calibrations with uncertified varying fields are rejected here:
+        the service's warm path needs the worst-corner reduction.
+
+    The constants fingerprint (`constants_fingerprint`) joins every memo
+    / base key and therefore the per-query checkpoint directories —
+    services over different constants, calibrations, or robust modes
+    never share answers, ledgers, or snapshots.
 
     Every returned result is byte-identical (winners/frontiers) to the
     equivalent cold `core.search.search` call; only wall-time and
@@ -112,7 +130,8 @@ class SearchService:
                  interpret: bool = True, shard: Optional[int] = None,
                  chunk_size: Optional[int] = None,
                  checkpoint_root: Optional[str] = None,
-                 c: DeviceConstants = CONSTANTS):
+                 c: DeviceConstants = CONSTANTS,
+                 calibration=None, robust: Optional[str] = None):
         self.space = (FactorizedSpace.full(n_z) if space is None
                       else FactorizedSpace.from_space(space))
         self.engine = engine
@@ -120,13 +139,36 @@ class SearchService:
         self.shard = shard
         self.chunk_size = chunk_size
         self.checkpoint_root = checkpoint_root
+        c, cal, fallback = _resolve_robust(calibration, robust, c, engine)
+        if fallback:
+            raise ValueError(
+                "this calibration has uncertified varying fields "
+                f"({cal.unresolved()}): SearchService's warm-start path "
+                "requires the certified worst-corner reduction — certify "
+                "the field directions (core.calibration.MONOTONE)")
         self.c = c
+        self.calibration = cal
+        self.robust = robust
         self._memo: Dict[str, Result] = {}
         self._base: Dict[str, _BaseEntry] = {}
         self._queue = QueryBatcher()
         self.stats = {"queries": 0, "memo_hits": 0, "warm": 0, "cold": 0,
                       "batched_calls": 0, "slabs_repriced": 0,
                       "slabs_revived": 0}
+        # Frozen-dataclass reprs are deterministic and carry every field,
+        # so this digest changes whenever the priced cost model does —
+        # including the exact constants corner `robust=` resolved to.
+        self._cfp = fingerprint(c=repr(self.c),
+                                calibration=repr(self.calibration),
+                                robust=self.robust or "")
+
+    @property
+    def constants_fingerprint(self) -> str:
+        """Digest of the cost model this service prices — the resolved
+        `DeviceConstants` (post calibration/robust resolution) plus the
+        calibration and robust mode. Joins every memo/base key and the
+        per-query checkpoint directories."""
+        return self._cfp
 
     # -- public surface ----------------------------------------------------
 
@@ -220,8 +262,9 @@ class SearchService:
         metrics = self._metrics(q)
         return (wkey,
                 query_key(wkey, q.box, self.space.axes, q.objective,
-                          metrics),
-                base_key(wkey, self.space.axes, q.objective, metrics))
+                          metrics, constants=self._cfp),
+                base_key(wkey, self.space.axes, q.objective, metrics,
+                         constants=self._cfp))
 
     def _serve_memo_or_warm(self, q: ServeQuery) -> Optional[Result]:
         _, mkey, bkey = self._keys(q)
@@ -276,6 +319,8 @@ class SearchService:
     def _finish_cold(self, q: ServeQuery, bkey: str, mkey: str,
                      res: Result) -> None:
         self.stats["cold"] += 1
+        if self.calibration is not None:
+            res.band = _measure_band(res, self.calibration, q.wl)
         self._memo[mkey] = res
         ledger = res.ledger
         if ledger is None:
@@ -332,6 +377,8 @@ class SearchService:
                 self.space, q.wl, cons, self.engine, self.c,
                 self.interpret, metrics, self.shard, self.chunk_size,
                 warm=warm)
+        if self.calibration is not None:
+            res.band = _measure_band(res, self.calibration, q.wl)
         self.stats["slabs_repriced"] += len(base.ledger.pruned)
         self.stats["slabs_revived"] += int((~dead).sum())
         log.debug("delta query served warm in %.3fms: %d/%d slabs revived",

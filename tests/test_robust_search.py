@@ -1,0 +1,551 @@
+"""Robust search: calibration uncertainty intervals through the cost model.
+
+Pins the three claims `core.calibration` rests on:
+
+  1. **The monotonicity lemma.** Every report metric is coordinate-wise
+     (weakly) monotone in every `DeviceConstants` field with the exact
+     directions `MONOTONE` certifies, and no field pulls two metrics in
+     opposite directions — numerically audited and property-tested here.
+  2. **Degenerate identity.** A collapsed calibration (lo == nominal ==
+     hi) run with `robust="worst_case"` returns byte-identical
+     winners/frontiers/counters to an uncalibrated search for every
+     engine x objective x (shard, chunk_size, prune="bound") cell.
+  3. **Robust != nominal.** A conservative calibration demonstrably
+     rejects a nominally-feasible paper-workload winner (the witness
+     test), and the conservative vertex fallback agrees with the
+     certified worst corner when forced onto truly-monotone fields.
+
+Plus the serve-side guarantees: robust warm constraint-deltas match cold
+robust searches, and two services with different constants sharing one
+`checkpoint_root` no longer collide (the satellite checkpoint fix).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover — CI images without hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (CONSTANTS, MONOTONE, CalibratedConstants,
+                        Constraints, DeviceConstants, ROBUST_ENGINES,
+                        RobustBand, as_calibration, audit_monotonicity,
+                        calibration_presets, dxpta_search, evaluate_grid,
+                        field_direction, load_calibration_preset,
+                        metric_direction, pareto_search_refined, search,
+                        search_workloads)
+from repro.core.calibration import FIELD_NAMES
+from repro.core.paper_workloads import load
+from repro.serve import SearchService
+
+WL = load("deit-t")
+CONS = Constraints()
+N_Z = 8
+DEGENERATE = CalibratedConstants.degenerate()
+CONSERVATIVE = load_calibration_preset("conservative")
+
+
+def result_core(r):
+    """Every comparable result field — wall time, band, and ledger are
+    run artifacts, not part of the answer."""
+    return {f.name: getattr(r, f.name) for f in dataclasses.fields(r)
+            if f.name not in ("wall_time_s", "band", "ledger")}
+
+
+def assert_identical(a, b):
+    ca, cb = result_core(a), result_core(b)
+    assert ca.keys() == cb.keys()
+    for k in ca:
+        va, vb = ca[k], cb[k]
+        if isinstance(va, np.ndarray):
+            assert np.array_equal(va, vb), k
+        elif isinstance(va, dict):
+            assert va is not None and vb is not None and va.keys() == vb.keys()
+            for kk in va:
+                assert np.array_equal(va[kk], vb[kk]), (k, kk)
+        else:
+            assert va == vb, k
+
+
+def worst_metrics_of(row, cal, wl=WL):
+    rows = np.asarray(row, np.int64).reshape(1, 5)
+    return {k: float(v[0])
+            for k, v in evaluate_grid(rows, wl, cal.worst_case()).items()}
+
+
+# ---------------------------------------------------------------------------
+# CalibratedConstants construction + presets
+# ---------------------------------------------------------------------------
+
+class TestCalibratedConstants:
+    def test_degenerate_covers_every_field_and_reproduces_constants(self):
+        assert DEGENERATE.is_degenerate
+        assert DEGENERATE.varying == ()
+        assert DEGENERATE.nominal() == CONSTANTS
+        assert DEGENERATE.worst_case() == CONSTANTS
+        assert DEGENERATE.best_case() == CONSTANTS
+        # int-typed fields survive the round trip exactly
+        assert DEGENERATE.worst_case().act_bits == 4
+        assert isinstance(DEGENERATE.worst_case().act_bits, int)
+
+    def test_from_dict_interval_spellings(self):
+        cal = CalibratedConstants.from_dict({
+            "a_mzm": {"rel": 0.1},
+            "p_dac": (1e-3, 3e-3),
+            "f_clk_hz": (9e9, 10e9, 11e9)})
+        lo, nom, hi = cal.interval("a_mzm")
+        assert nom == CONSTANTS.a_mzm
+        assert lo == pytest.approx(CONSTANTS.a_mzm * 0.9)
+        assert cal.interval("p_dac") == (1e-3, CONSTANTS.p_dac, 3e-3)
+        assert cal.interval("f_clk_hz") == (9e9, 10e9, 11e9)
+        assert set(cal.varying) == {"a_mzm", "p_dac", "f_clk_hz"}
+
+    def test_worst_corner_is_directional(self):
+        w = CONSERVATIVE.worst_case()
+        b = CONSERVATIVE.best_case()
+        # +1 fields (area/power/energy) worst at hi
+        assert w.a_mzm > CONSTANTS.a_mzm > b.a_mzm
+        assert w.p_chip_fixed > CONSTANTS.p_chip_fixed
+        # -1 fields (rates): latency is *decreasing* in f_clk_hz, so the
+        # worst corner takes the LOW end
+        assert w.f_clk_hz < CONSTANTS.f_clk_hz < b.f_clk_hz
+        assert w.dram_bw_bytes < CONSTANTS.dram_bw_bytes
+        assert w.elec_ops_per_s < CONSTANTS.elec_ops_per_s
+
+    @pytest.mark.parametrize("bad", [
+        {"a_mzm": (0.01, 0.009, 0.02)},          # lo > nominal
+        {"a_mzm": (-0.1, 0.01, 0.02)},           # negative
+        {"a_mzm": (float("nan"), 0.01, 0.02)},   # NaN
+        {"a_mzm": (0.0, 0.01, 0.02)},            # zero
+        {"nonsense_field": {"rel": 0.1}},        # unknown field
+        {"a_mzm": "wide"},                       # malformed spec
+    ])
+    def test_invalid_calibrations_raise(self, bad):
+        with pytest.raises(ValueError):
+            CalibratedConstants.from_dict(bad)
+
+    def test_uncertified_must_name_real_fields(self):
+        with pytest.raises(ValueError, match="uncertified"):
+            CalibratedConstants.from_dict({"a_mzm": {"rel": 0.1}},
+                                          uncertified=("bogus",))
+
+    def test_presets_ship_and_load(self):
+        names = calibration_presets()
+        assert {"nominal", "conservative", "node45"} <= set(names)
+        assert load_calibration_preset("nominal").is_degenerate
+        n45 = load_calibration_preset("node45")
+        assert n45.varying and n45.unresolved() == ()
+        # node-style tables re-center nominals
+        assert n45.nominal() != CONSTANTS
+        with pytest.raises(ValueError, match="unknown calibration preset"):
+            load_calibration_preset("does-not-exist")
+
+    def test_as_calibration_coercions(self):
+        assert as_calibration(CONSERVATIVE) is CONSERVATIVE
+        assert as_calibration("conservative") == CONSERVATIVE
+        m = as_calibration({"a_mzm": {"rel": 0.1}})
+        assert m.varying == ("a_mzm",)
+        with pytest.raises(ValueError):
+            as_calibration(42)
+
+    def test_vertex_corners(self):
+        cal = CalibratedConstants.from_dict(
+            {"a_mzm": {"rel": 0.1}, "p_dac": {"rel": 0.1},
+             "f_clk_hz": {"rel": 0.1}},
+            uncertified=("a_mzm", "p_dac"))
+        assert cal.unresolved() == ("a_mzm", "p_dac")
+        corners = cal.vertex_corners()
+        assert len(corners) == 4  # 2^2 over the uncertified fields
+        # certified field pinned at its worst (lo for a rate) everywhere
+        assert all(c.f_clk_hz == pytest.approx(9e9) for c in corners)
+        mzm = sorted({c.a_mzm for c in corners})
+        assert mzm == sorted({cal.interval("a_mzm")[0],
+                              cal.interval("a_mzm")[2]})
+        many = CalibratedConstants.from_dict(
+            {f: {"rel": 0.1} for f in FIELD_NAMES[1:11]},
+            uncertified=FIELD_NAMES[1:11])
+        with pytest.raises(ValueError, match="2\\^"):
+            many.vertex_corners()
+
+
+# ---------------------------------------------------------------------------
+# DeviceConstants validation (satellite)
+# ---------------------------------------------------------------------------
+
+class TestDeviceConstantsValidation:
+    @pytest.mark.parametrize("kw", [
+        {"a_mzm": float("nan")}, {"a_mzm": 0.0}, {"p_dac": -1e-3},
+        {"f_clk_hz": float("inf")}, {"act_bits": 0},
+        {"a_mzm": "wide"},
+    ])
+    def test_nonsense_constants_raise(self, kw):
+        with pytest.raises(ValueError):
+            DeviceConstants(**kw)
+
+    def test_sram_bounds_ordered(self):
+        with pytest.raises(ValueError, match="sram_min_mb"):
+            DeviceConstants(sram_min_mb=64.0, sram_max_mb=4.0)
+
+    def test_defaults_still_construct(self):
+        assert DeviceConstants() == CONSTANTS
+
+
+# ---------------------------------------------------------------------------
+# The monotonicity lemma
+# ---------------------------------------------------------------------------
+
+class TestMonotoneTable:
+    def test_audit_certifies_the_table(self):
+        rng = np.random.default_rng(0)
+        cfgs = rng.integers(1, 16, size=(128, 5))
+        assert audit_monotonicity(cfgs, WL) == []
+        # a second workload shape (BERT has different GEMMs + elec ops)
+        assert audit_monotonicity(cfgs, load("bert-b")) == []
+
+    def test_no_field_conflicts_across_metrics(self):
+        # The single-worst-corner reduction needs every field to have one
+        # consolidated direction; a None here means a conflicting model.
+        for f in FIELD_NAMES:
+            assert field_direction(f) is not None, f
+
+    def test_directions_spotchecks(self):
+        assert metric_direction("latency", "f_clk_hz") == -1
+        assert metric_direction("energy", "f_clk_hz") == -1
+        assert metric_direction("area", "f_clk_hz") == 0
+        assert metric_direction("area", "a_mzm") == +1
+        assert metric_direction("power", "p_chip_fixed") == +1
+        assert metric_direction("energy", "e_dram_per_byte") == +1
+        assert metric_direction("edp", "dram_bw_bytes") == -1
+        # util depends on no constant; p_elec/weight_bits enter no metric
+        assert MONOTONE["util"] == {}
+        assert all(metric_direction(m, "p_elec") == 0 for m in MONOTONE)
+        assert all(metric_direction(m, "weight_bits") == 0 for m in MONOTONE)
+
+
+# Module-level: the hypothesis fallback shim wraps property tests in a
+# zero-argument runner, which pytest can only collect outside a class.
+@settings(max_examples=25)
+@given(st.tuples(*(st.integers(min_value=1, max_value=14)
+                   for _ in range(5))),
+       st.integers(min_value=0, max_value=len(FIELD_NAMES) - 1),
+       st.integers(min_value=5, max_value=30))
+def test_property_each_metric_moves_in_certified_direction(
+        cfg, field_i, rel_pct):
+    """The lemma itself, point-by-point: perturbing any one constant
+    moves every metric of `eval_hw`/`eval_wload` (via the composite
+    `evaluate_grid`) weakly in the `MONOTONE`-certified direction —
+    including direction 0, which asserts full independence."""
+    field = FIELD_NAMES[field_i]
+    row = np.asarray([cfg], np.int64)
+    nom = getattr(CONSTANTS, field)
+    rel = rel_pct / 100.0
+    m_lo = evaluate_grid(row, WL, dataclasses.replace(
+        CONSTANTS, **{field: nom * (1.0 - rel)}))
+    m_hi = evaluate_grid(row, WL, dataclasses.replace(
+        CONSTANTS, **{field: nom * (1.0 + rel)}))
+    for metric in MONOTONE:
+        d = metric_direction(metric, field)
+        delta = float(m_hi[metric][0]) - float(m_lo[metric][0])
+        if d == 0:
+            assert delta == 0.0, (metric, field)
+        else:
+            assert d * delta >= 0.0, (metric, field, d)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate calibration == today's results, byte for byte
+# ---------------------------------------------------------------------------
+
+MATRIX_KNOBS = [{}, {"shard": 2}, {"chunk_size": 9000},
+                {"factorized": True},
+                {"factorized": True, "prune": "bound"}]
+
+
+class TestDegenerateIdentity:
+    @pytest.mark.parametrize("engine", ROBUST_ENGINES)
+    @pytest.mark.parametrize("objective", ["edp", "pareto"])
+    @pytest.mark.parametrize("knobs", MATRIX_KNOBS,
+                             ids=["plain", "shard", "chunk", "factorized",
+                                  "bnb"])
+    def test_matrix(self, engine, objective, knobs):
+        r0 = search(WL, CONS, engine=engine, n_z=N_Z, objective=objective,
+                    **knobs)
+        r1 = search(WL, CONS, engine=engine, n_z=N_Z, objective=objective,
+                    calibration=DEGENERATE, robust="worst_case", **knobs)
+        assert_identical(r0, r1)
+        # the band is attached and collapsed (worst == nominal == best)
+        assert r1.band is not None
+        for k in r1.band.worst:
+            assert np.array_equal(r1.band.worst[k], r1.band.best[k])
+            assert np.array_equal(r1.band.worst[k], r1.band.nominal[k])
+
+    def test_search_workloads_fused_batch(self):
+        wls = {"deit-t": WL, "deit-s": load("deit-s")}
+        r0 = search_workloads(wls, CONS, engine="pallas", n_z=N_Z,
+                              factorized=True)
+        r1 = search_workloads(wls, CONS, engine="pallas", n_z=N_Z,
+                              factorized=True, calibration=DEGENERATE,
+                              robust="worst_case")
+        for name in wls:
+            assert_identical(r0[name], r1[name])
+            assert r1[name].band is not None
+
+    def test_dxpta_search(self):
+        r0 = dxpta_search(WL, CONS, engine="numpy", prune="bound")
+        r1 = dxpta_search(WL, CONS, engine="numpy", prune="bound",
+                          calibration=DEGENERATE, robust="worst_case")
+        assert_identical(r0, r1)
+
+    def test_calibration_without_robust_runs_nominal(self):
+        r0 = search(WL, CONS, engine="numpy", n_z=N_Z)
+        r1 = search(WL, CONS, engine="numpy", n_z=N_Z,
+                    calibration=CONSERVATIVE)
+        assert_identical(r0, r1)  # nominal answer, band only added
+        assert r1.band is not None
+        assert r1.band.worst["power"] > r1.band.nominal["power"]
+
+
+# ---------------------------------------------------------------------------
+# Robust != nominal: the witness
+# ---------------------------------------------------------------------------
+
+class TestRobustWitness:
+    def test_conservative_rejects_nominal_winner(self):
+        """Self-calibrating witness: put the power bound midway between
+        the nominal winner's nominal and worst-case power. The nominal
+        search still picks it; the robust search must not."""
+        rn = search(WL, CONS, engine="numpy")
+        assert rn.feasible
+        worst = worst_metrics_of(rn.best_cfg.as_array(), CONSERVATIVE)
+        assert worst["power"] > rn.power_w  # conservative really is
+        box = Constraints(power_w=(rn.power_w + worst["power"]) / 2)
+        rn2 = search(WL, box, engine="numpy")
+        assert rn2.best_cfg == rn.best_cfg  # nominally still feasible
+        rr = search(WL, box, engine="numpy", calibration=CONSERVATIVE,
+                    robust="worst_case")
+        assert rr.best_cfg != rn.best_cfg  # the witness
+        if rr.feasible:
+            w = worst_metrics_of(rr.best_cfg.as_array(), CONSERVATIVE)
+            assert w["power"] < box.power_w  # robust answer holds worst-case
+
+    def test_robust_result_prices_worst_case(self):
+        rr = search(WL, CONS, engine="numpy", calibration=CONSERVATIVE,
+                    robust="worst_case")
+        assert rr.feasible
+        w = worst_metrics_of(rr.best_cfg.as_array(), CONSERVATIVE)
+        assert rr.edp == w["edp"]
+        assert rr.power_w == w["power"]
+        assert rr.band.worst["edp"] == rr.edp
+        # equal across engines
+        for engine in ("jax", "pallas"):
+            r2 = search(WL, CONS, engine=engine, calibration=CONSERVATIVE,
+                        robust="worst_case")
+            assert r2.best_cfg == rr.best_cfg
+            assert r2.edp == rr.edp
+
+    def test_robust_pareto_front_is_worst_case_feasible(self):
+        pr = search(WL, CONS, engine="numpy", objective="pareto",
+                    calibration=CONSERVATIVE, robust="worst_case")
+        assert pr.size > 0
+        m = evaluate_grid(pr.front, WL, CONSERVATIVE.worst_case())
+        assert np.all(CONS.satisfied(m["area"], m["power"], m["energy"],
+                                     m["latency"]))
+        # band: (F,) arrays aligned with the front, weakly ordered
+        assert pr.band is not None
+        for k in ("area", "power", "energy", "latency", "util", "edp"):
+            assert pr.band.worst[k].shape == (pr.size,)
+            assert np.all(pr.band.worst[k] >= pr.band.nominal[k])
+            assert np.all(pr.band.nominal[k] >= pr.band.best[k])
+        assert np.all(pr.band.width("power") >= 0)
+
+    def test_pareto_search_refined_robust(self):
+        r1 = pareto_search_refined(WL, CONS, engine="numpy",
+                                   calibration=CONSERVATIVE,
+                                   robust="worst_case")
+        r2 = pareto_search_refined(WL, CONS, engine="numpy",
+                                   c=CONSERVATIVE.worst_case())
+        assert np.array_equal(r1.front, r2.front)
+        assert r1.band is not None and r2.band is None
+
+    def test_infeasible_robust_result_has_no_band(self):
+        tiny = Constraints(power_w=1e-6)
+        rr = search(WL, tiny, engine="numpy", calibration=CONSERVATIVE,
+                    robust="worst_case")
+        assert not rr.feasible and rr.band is None
+
+
+# ---------------------------------------------------------------------------
+# Conservative vertex fallback (uncertified fields)
+# ---------------------------------------------------------------------------
+
+SPEC = {"p_mzm": {"rel": 0.15}, "f_clk_hz": {"rel": 0.1}}
+CERT = CalibratedConstants.from_dict(SPEC)
+UNCERT = CalibratedConstants.from_dict(SPEC,
+                                       uncertified=("p_mzm", "f_clk_hz"))
+
+
+class TestVertexFallback:
+    def test_agrees_with_certified_corner(self):
+        """Forcing truly-monotone fields onto the vertex sweep must not
+        change the answer: the certified worst corner is one of the
+        vertices and dominates the others."""
+        rc = search(WL, CONS, engine="numpy", n_z=N_Z, calibration=CERT,
+                    robust="worst_case")
+        ru = search(WL, CONS, engine="numpy", n_z=N_Z, calibration=UNCERT,
+                    robust="worst_case")
+        assert ru.best_cfg == rc.best_cfg
+        assert ru.edp == pytest.approx(rc.edp, rel=1e-12)
+        # the sweep really enumerated 2^2 corners
+        assert ru.n_evaluated == rc.n_evaluated * 4
+
+    def test_factorized_and_pareto_fallback(self):
+        rf = search(WL, CONS, engine="numpy", n_z=N_Z, calibration=UNCERT,
+                    robust="worst_case", factorized=True)
+        ru = search(WL, CONS, engine="numpy", n_z=N_Z, calibration=UNCERT,
+                    robust="worst_case")
+        assert rf.best_cfg == ru.best_cfg and rf.edp == ru.edp
+        pu = search(WL, CONS, engine="numpy", n_z=N_Z, objective="pareto",
+                    calibration=UNCERT, robust="worst_case")
+        pc = search(WL, CONS, engine="numpy", n_z=N_Z, objective="pareto",
+                    calibration=CERT, robust="worst_case")
+        assert np.array_equal(pu.front, pc.front)
+        assert pu.band is not None
+
+    def test_fallback_rejects_prune_runtime_ledger(self):
+        for kw in ({"factorized": True, "prune": "bound"},
+                   {"factorized": True, "prune": "bound",
+                    "keep_ledger": True}):
+            with pytest.raises(ValueError, match="uncertified"):
+                search(WL, CONS, engine="numpy", calibration=UNCERT,
+                       robust="worst_case", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Argument validation
+# ---------------------------------------------------------------------------
+
+class TestRobustArgs:
+    def test_robust_requires_calibration(self):
+        with pytest.raises(ValueError, match="calibration"):
+            search(WL, CONS, robust="worst_case")
+
+    def test_calibration_excludes_custom_c(self):
+        with pytest.raises(ValueError, match="not both"):
+            search(WL, CONS, c=DeviceConstants(a_mzm=0.01),
+                   calibration=CONSERVATIVE)
+
+    def test_unknown_robust_mode(self):
+        with pytest.raises(ValueError, match="robust"):
+            search(WL, CONS, calibration=CONSERVATIVE, robust="expectile")
+
+    def test_python_engine_rejected(self):
+        with pytest.raises(ValueError, match="python"):
+            search(WL, CONS, engine="python", calibration=CONSERVATIVE,
+                   robust="worst_case")
+        with pytest.raises(ValueError):
+            dxpta_search(WL, CONS, engine="python",
+                         calibration=CONSERVATIVE, robust="worst_case")
+
+    def test_python_engine_accepts_nominal_calibration(self):
+        r = dxpta_search(WL, CONS, engine="python",
+                         calibration=CONSERVATIVE)
+        assert r.band is not None
+
+
+# ---------------------------------------------------------------------------
+# Serve: robust service, calibration-fingerprinted keys, checkpoint fix
+# ---------------------------------------------------------------------------
+
+class TestServeRobust:
+    def test_warm_delta_matches_cold_robust(self):
+        svc = SearchService(engine="numpy", n_z=N_Z,
+                            calibration=CONSERVATIVE, robust="worst_case")
+        r1 = svc.query(WL, CONS)
+        direct = search(WL, CONS, engine="numpy", n_z=N_Z, factorized=True,
+                        prune="bound", calibration=CONSERVATIVE,
+                        robust="worst_case")
+        assert r1.best_cfg == direct.best_cfg and r1.edp == direct.edp
+        assert r1.band is not None
+        assert r1.band.worst["edp"] == direct.band.worst["edp"]
+        tight = {"power_w": 4.5}
+        r2 = svc.query(WL, tight)
+        assert svc.stats["warm"] == 1
+        cold = search(WL, Constraints(power_w=4.5), engine="numpy",
+                      n_z=N_Z, factorized=True, prune="bound",
+                      calibration=CONSERVATIVE, robust="worst_case")
+        assert r2.best_cfg == cold.best_cfg and r2.edp == cold.edp
+        assert r2.band is not None
+
+    def test_constants_fingerprint_isolates_memo(self):
+        nominal = SearchService(engine="numpy", n_z=N_Z)
+        robust = SearchService(engine="numpy", n_z=N_Z,
+                               calibration=CONSERVATIVE,
+                               robust="worst_case")
+        cal_only = SearchService(engine="numpy", n_z=N_Z,
+                                 calibration=CONSERVATIVE)
+        fps = {nominal.constants_fingerprint,
+               robust.constants_fingerprint,
+               cal_only.constants_fingerprint}
+        assert len(fps) == 3
+        # degenerate calibration resolves to the same corner as nominal
+        # constants but is still a different declared cost model — and a
+        # service must never alias another's memo either way
+        rn = nominal.query(WL, CONS)
+        rr = robust.query(WL, CONS)
+        rc = cal_only.query(WL, CONS)
+        assert rn.best_cfg == rc.best_cfg  # nominal answers agree...
+        assert rn.band is None and rc.band is not None  # ...bands differ
+        assert rr.best_cfg != rn.best_cfg  # witness at the service layer
+
+    def test_uncertified_calibration_rejected(self):
+        with pytest.raises(ValueError, match="uncertified"):
+            SearchService(engine="numpy", calibration=UNCERT,
+                          robust="worst_case")
+
+    def test_restart_with_changed_constants_recomputes(self, tmp_path):
+        """The satellite checkpoint fix: two services with different
+        constants sharing one checkpoint_root must use different
+        per-query checkpoint directories — before the constants
+        fingerprint joined `query_key`, service B resumed service A's
+        snapshots and crashed with CheckpointMismatch."""
+        from repro.serve.batching import ServeQuery
+        from repro.serve.cache import box_constraints, canonical_box
+
+        root = str(tmp_path)
+        a = SearchService(engine="numpy", n_z=N_Z, checkpoint_root=root)
+        ra = a.query(WL, CONS)
+        q = ServeQuery(wl=WL,
+                       constraints=box_constraints(canonical_box(CONS)))
+        b = SearchService(engine="numpy", n_z=N_Z, checkpoint_root=root,
+                          calibration=CONSERVATIVE, robust="worst_case")
+        assert a._keys(q)[1] != b._keys(q)[1]  # distinct checkpoint dirs
+        rb = b.query(WL, CONS)  # must recompute, not resume A's snapshots
+        direct = search(WL, CONS, engine="numpy", n_z=N_Z,
+                        factorized=True, prune="bound",
+                        calibration=CONSERVATIVE, robust="worst_case")
+        assert rb.best_cfg == direct.best_cfg and rb.edp == direct.edp
+        assert rb.best_cfg != ra.best_cfg or rb.edp != ra.edp
+        # and a genuine same-constants restart still works
+        a2 = SearchService(engine="numpy", n_z=N_Z, checkpoint_root=root)
+        ra2 = a2.query(WL, CONS)
+        assert ra2.best_cfg == ra.best_cfg and ra2.edp == ra.edp
+
+
+# ---------------------------------------------------------------------------
+# RobustBand surface
+# ---------------------------------------------------------------------------
+
+class TestRobustBand:
+    def test_band_is_a_frozen_report(self):
+        rr = search(WL, CONS, engine="numpy", calibration=CONSERVATIVE,
+                    robust="worst_case")
+        band = rr.band
+        assert isinstance(band, RobustBand)
+        assert band.calibration is not None
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            band.worst = {}
+        assert band.width("edp") == band.worst["edp"] - band.best["edp"]
+        assert band.width("util") == 0.0  # util depends on no constant
