@@ -51,7 +51,7 @@ import sys
 # deliberately absent — a dict hit is pure host noise.
 GATED_PREFIXES = ("fused_", "pareto_jax", "pareto_pallas", "pareto_batch",
                   "serve_cold", "serve_warm", "scenario_cold",
-                  "scenario_warm")
+                  "scenario_warm", "sched_")
 # Machine-speed normalizers (first one present in both files wins).
 REFERENCE_KEYS = ("fused_numpy", "pareto_numpy")
 

@@ -1,0 +1,117 @@
+"""Scheduler benchmark: leased-worker overlap of slab dispatch latency.
+
+The parallel slab scheduler (`repro.parallel.slab_sched`) is
+transport-agnostic: locally its workers are threads over the fake-device
+mesh, but the lease/heartbeat protocol exists so that a multi-host
+backend — where every slab batch is dispatched over an RPC with real
+latency — can slot in behind the same surface. What a work-stealing
+scheduler must therefore be good at is *overlapping* that per-slab
+dispatch latency across the pool, and that is exactly what this
+benchmark pins, on a single host, with the scheduler's own simulated
+``dispatch_latency_s`` knob (30ms per leased batch, ``grain=512`` points
+per sweep batch so the partition — and hence the total latency budget —
+is identical at every pool size):
+
+  * ``sched_w1_N`` — the async driver with a single leased worker over
+    the N^5 space: every batch's dispatch latency is paid serially.
+  * ``sched_w4_N`` — four leased workers stealing the *same* batch
+    partition best-first: up to four dispatches in flight at once, so
+    the latency budget divides by the pool (compute is host-bound and
+    does not, which is why the measured speedup sits below 4x).
+
+Both runs are full fault-tolerant searches (leases, heartbeats, merges,
+the coverage tiling assertion), and the winner of every timed run is
+asserted byte-equal to the sequential ``prune="bound"`` driver's.
+
+Results land in BENCH_sched.json at the repo root; set SCHED_SMOKE=1 (or
+pass --smoke) to write BENCH_sched.smoke.json instead. The CI gate diffs
+the two normalized by the ``fused_numpy`` reference row and additionally
+requires the 4-worker pool to stay >=2x faster than the single worker at
+20^5 (``check_regression.py --speedup sched_w1_20:sched_w4_20:2``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+from repro.core import Constraints, FactorizedSpace, search
+from repro.core.paper_workloads import load
+from repro.core.photonic_model import CONSTANTS
+from repro.parallel.slab_sched import parallel_bnb
+
+from .common import row, timed
+
+_BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_sched.json"
+
+# Simulated per-batch transport latency and work-stealing grain. The
+# grain is worker-count-independent, so w1 and w4 sweep the *same* batch
+# partition; 30ms is a conservative cross-host RPC + device-dispatch
+# figure.
+DISPATCH_S = 0.03
+GRAIN = 512
+
+
+def run():
+    smoke = bool(int(os.environ.get("SCHED_SMOKE", "0")))
+    wl = load("deit-b")
+    cons = Constraints()
+    repeats = 2 if smoke else 3
+    rows = []
+    bench = {"workload": "deit-b", "smoke": smoke, "spaces": {},
+             "engines_us": {}, "speedups": {}, "agreement": {}}
+
+    # Machine-speed reference for the CI gate (never gated itself): the
+    # host float64 factorized sweep of the 12^5 space.
+    ref_space = FactorizedSpace.full(12)
+    _, us_ref = timed(lambda: search(wl, cons, engine="numpy",
+                                     factorized=True, space=ref_space),
+                      repeats=repeats)
+    bench["engines_us"]["fused_numpy"] = us_ref
+    rows.append(row("sched/fused_numpy_reference", us_ref,
+                    f"one-shot float64 factorized sweep of "
+                    f"{ref_space.size} cfgs"))
+
+    for n in (12, 20):
+        space = FactorizedSpace.full(n)
+        bench["spaces"][str(n)] = space.size
+        seq = search(wl, cons, engine="numpy", factorized=True,
+                     space=space, prune="bound")
+        us = {}
+        for w in (1, 4):
+            def one():
+                return parallel_bnb(
+                    space, wl, cons, "numpy", CONSTANTS, True, None, None,
+                    objective="edp", metrics=None, workers=w,
+                    deterministic=False, dispatch_latency_s=DISPATCH_S,
+                    grain=GRAIN)
+            r, us[w] = timed(one, repeats=repeats)
+            bench["engines_us"][f"sched_w{w}_{n}"] = us[w]
+            agree = (r.best_cfg == seq.best_cfg and r.edp == seq.edp)
+            bench["agreement"][f"sched_w{w}_{n}"] = agree
+            s = r.sched
+            rows.append(row(
+                f"sched/sched_w{w}_{n}", us[w],
+                f"{s.n_batches} leased batches x {DISPATCH_S*1e3:.0f}ms "
+                f"dispatch, {s.n_merges} merges; same best as "
+                f"sequential: {agree}"))
+        speedup = us[1] / us[4]
+        bench["speedups"][f"sched_w4_{n}_vs_w1"] = speedup
+        rows.append(row(f"sched/overlap_{n}", us[4],
+                        f"{speedup:.2f}x from 4-way dispatch overlap"))
+
+    bench["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    out_path = _BENCH_JSON.with_suffix(".smoke.json") if smoke \
+        else _BENCH_JSON  # never clobber the committed full-run record
+    out_path.write_text(json.dumps(bench, indent=2, default=str) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    if "--smoke" in sys.argv:
+        os.environ["SCHED_SMOKE"] = "1"
+    for r in run():
+        print(",".join(str(x) for x in r))

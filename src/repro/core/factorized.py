@@ -732,6 +732,15 @@ class SlabLedger:
             evaluated=np.asarray(tree["evaluated"],
                                  np.int64).reshape(-1, 5, 2))
 
+    def nbytes(self) -> int:
+        """Serialized byte size of this ledger — the exact `save()` npz
+        round-trip, which is the unit `repro.serve.SearchService`'s
+        `max_ledger_bytes=` budget accounts base entries in."""
+        import io
+        buf = io.BytesIO()
+        np.savez_compressed(buf, **self.to_arrays())
+        return buf.getbuffer().nbytes
+
     def save(self, path: str) -> None:
         """Persist as a compressed .npz archive."""
         np.savez_compressed(path, **self.to_arrays())

@@ -92,6 +92,20 @@ class CheckpointMismatch(SearchFault):
     """A checkpoint directory holds state for a *different* search."""
 
 
+class QueryTimeout(SearchFault):
+    """A search exceeded its `RuntimePolicy.deadline_s` budget.
+
+    Raised at a unit (or scheduler merge) boundary, so the campaign stops
+    cleanly: no thread is interrupted mid-launch, checkpoints already
+    committed stay durable, and a service can keep answering other
+    queries. `query_name` carries the originating query's workload name
+    when the serve layer set one."""
+
+    def __init__(self, message: str, query_name: Optional[str] = None):
+        super().__init__(message)
+        self.query_name = query_name
+
+
 class KillSearch(BaseException):
     """Injected process death. Derives from BaseException so no guard in
     the retry/fallback machinery can swallow it — it must propagate out of
@@ -128,6 +142,12 @@ class RuntimePolicy:
     timeout_s: per-launch watchdog; None disables it (a first pallas/jax
       launch legitimately spends minutes compiling — only set a timeout
       when launch times are known).
+    deadline_s: whole-campaign budget measured from the runtime's
+      construction; checked cooperatively at every unit boundary (and at
+      every scheduler merge boundary), raising `QueryTimeout` once
+      exceeded. None disables it. Unlike `timeout_s` this bounds the
+      *search*, not one launch — it is how `SearchService.submit(...,
+      deadline_s=)` cancels a runaway query without hanging the batch.
     fallback: engine degradation chain; every fallback engine returns
       byte-identical results, so degradation is invisible in the answer.
     sleep: injectable sleep (tests pass a recorder to keep backoff
@@ -141,6 +161,7 @@ class RuntimePolicy:
     backoff_base_s: float = 0.05
     backoff_cap_s: float = 2.0
     timeout_s: Optional[float] = None
+    deadline_s: Optional[float] = None
     fallback: Mapping[str, Tuple[str, ...]] = \
         dataclasses.field(default_factory=lambda: dict(FALLBACK_CHAIN))
     sleep: Callable[[float], None] = time.sleep
@@ -152,6 +173,9 @@ class RuntimePolicy:
         if self.max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got "
                              f"{self.max_retries}")
+        if self.deadline_s is not None and self.deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0, got "
+                             f"{self.deadline_s}")
 
 
 COUNTER_KEYS = ("n_retries", "n_fallbacks", "n_quarantined", "n_checkpoints")
@@ -240,6 +264,90 @@ def query_policy(root: str, query_fp: str, **overrides) -> RuntimePolicy:
         checkpoint_dir=query_checkpoint_dir(root, query_fp), **overrides)
 
 
+def _query_dir_fingerprint(path: str) -> Optional[str]:
+    """The full search fingerprint a per-query checkpoint dir is bound to
+    (from its latest COMMITTED manifest), '' when the dir has no committed
+    step yet (an orphaned cold start), or None when the dir is not a
+    checkpoint directory of ours at all (unreadable / foreign layout)."""
+    import json
+    try:
+        steps = sorted(
+            int(n[len("step_"):-len(".COMMITTED")])
+            for n in os.listdir(path)
+            if n.startswith("step_") and n.endswith(".COMMITTED"))
+    except OSError:
+        return None
+    if not steps:
+        # No committed step: ours only if it is empty or holds nothing
+        # but step debris (an interrupted first snapshot).
+        try:
+            entries = os.listdir(path)
+        except OSError:
+            return None
+        if all(e.startswith(("step_", "tmp_", ".")) for e in entries):
+            return ""
+        return None
+    try:
+        with open(os.path.join(path, f"step_{steps[-1]:06d}",
+                               "manifest.json")) as fh:
+            manifest = json.load(fh)
+    except (OSError, ValueError):
+        return None
+    fp = manifest.get("extra", {}).get("fingerprint")
+    return fp if isinstance(fp, str) else None
+
+
+def gc_checkpoints(root: str, keep: int = 0,
+                   known: Sequence[str] = ()) -> list:
+    """Prune stale per-query checkpoint directories under `root`.
+
+    A long-lived service accretes one `query_checkpoint_dir` per distinct
+    query signature; completed queries never clean up after themselves
+    (their snapshots are what make a restarted service resume). This
+    reclaims that space: every direct subdirectory of `root` whose name
+    is a fingerprint prefix *and* whose latest committed manifest carries
+    a search-fingerprint binding is GC-eligible. (The dir is named by the
+    *query* fingerprint while the manifest records the *search*
+    fingerprint — two different digests, so the check is layout-shaped,
+    not a prefix match: a directory without our committed-manifest
+    structure belongs to someone else and is skipped, never deleted.)
+    Directories with no committed step (orphaned cold starts) are
+    eligible too, and rank oldest.
+
+    The `keep` most recently modified eligible directories survive, as
+    does any whose name is in `known` (a service passes the fingerprints
+    of queries still in flight). Returns the removed paths.
+    """
+    import shutil
+    if keep < 0:
+        raise ValueError(f"keep must be >= 0, got {keep}")
+    known = {k[:24] for k in known}
+    eligible = []
+    try:
+        names = sorted(os.listdir(root))
+    except OSError:
+        return []
+    for name in names:
+        path = os.path.join(root, name)
+        if not os.path.isdir(path) or name in known:
+            continue
+        if len(name) != 24 or not all(ch in "0123456789abcdef"
+                                      for ch in name):
+            continue  # not a query_checkpoint_dir name: foreign, skip
+        fp = _query_dir_fingerprint(path)
+        if fp is None:
+            log.warning("gc_checkpoints: %r does not verify as a "
+                        "per-query checkpoint dir; skipping", path)
+            continue
+        eligible.append((os.path.getmtime(path), path))
+    eligible.sort(reverse=True)  # newest first
+    removed = []
+    for _, path in eligible[keep:]:
+        shutil.rmtree(path)
+        removed.append(path)
+    return removed
+
+
 class SearchRuntime:
     """One resilient search campaign: counters, guard, checkpoint cursor.
 
@@ -253,6 +361,8 @@ class SearchRuntime:
         self.counters = {k: 0 for k in COUNTER_KEYS}
         self.resumed_step = 0
         self.fault_injector = None  # set by repro.testing.faults.inject
+        self.query_name = None  # set by the serve layer for QueryTimeout
+        self.started = time.monotonic()
         self._ckpt = None
         self._retryable = _retryable_exceptions()
         self._pool = None
@@ -277,6 +387,23 @@ class SearchRuntime:
         if inj is None:
             return False
         return bool(inj.fire(site))
+
+    # ---- deadline ----
+
+    def check_deadline(self):
+        """Raise `QueryTimeout` once the campaign has outlived
+        `policy.deadline_s` (measured from runtime construction). Called
+        at every unit boundary and at every scheduler merge boundary —
+        cooperative cancellation, so the abort always lands between
+        units, never inside one."""
+        d = self.policy.deadline_s
+        if d is None:
+            return
+        elapsed = time.monotonic() - self.started
+        if elapsed >= d:
+            raise QueryTimeout(
+                f"search exceeded its {d:g}s deadline "
+                f"({elapsed:.3f}s elapsed)", query_name=self.query_name)
 
     # ---- guarded evaluation ----
 
@@ -330,6 +457,7 @@ class SearchRuntime:
         the host float64 re-evaluation a NaN-poisoned result quarantines
         to (defaults to thunks["numpy"]).
         """
+        self.check_deadline()
         chain = [engine] + [e for e in self.policy.fallback.get(engine, ())
                             if e in thunks]
         last = None

@@ -158,6 +158,13 @@ class SearchResult:
     band: Optional[RobustBand] = dataclasses.field(default=None, repr=False,
                                                    compare=False)
 
+    # Parallel slab scheduler (search(..., workers=N)): the run's
+    # lease/requeue/merge telemetry (a repro.parallel.slab_sched.SchedStats).
+    # None on single-executor searches. Excluded from equality like the
+    # ledger: scheduling is how the answer was computed, not the answer.
+    sched: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                compare=False)
+
     @property
     def feasible(self) -> bool:
         """True when the search found any constraint-satisfying config."""
@@ -210,6 +217,10 @@ class ParetoResult:
     # frontier member. None on uncalibrated searches and empty frontiers.
     band: Optional[RobustBand] = dataclasses.field(default=None, repr=False,
                                                    compare=False)
+
+    # Parallel slab scheduler telemetry, as on SearchResult (workers=N).
+    sched: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                compare=False)
 
     @property
     def size(self) -> int:
@@ -2134,14 +2145,15 @@ def _bnb_order(fspace, ranges_list, lbs, objectives=None) -> np.ndarray:
     return np.lexsort(tuple(keys))
 
 
-def _bnb_batch_slices(sizes: np.ndarray):
-    """Consecutive [s, e) leaf slices of at most BNB_BATCH total points
-    (a lone bigger leaf still forms its own slice)."""
+def _bnb_batch_slices(sizes: np.ndarray, max_points: Optional[int] = None):
+    """Consecutive [s, e) leaf slices of at most `max_points` total points
+    (default BNB_BATCH; a lone bigger leaf still forms its own slice)."""
+    cap = BNB_BATCH if max_points is None else int(max_points)
     out = []
     s = 0
     pts = 0
     for j, n in enumerate(sizes):
-        if j > s and pts + int(n) > BNB_BATCH:
+        if j > s and pts + int(n) > cap:
             out.append((s, j))
             s, pts = j, 0
         pts += int(n)
@@ -2265,7 +2277,7 @@ def _bnb_eval_pareto(engine, fspace, wl, constraints, c, interpret,
 
 def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
                            shard, chunk_size, rt=None, led=None,
-                           warm=None) -> SearchResult:
+                           warm=None, executor=None) -> SearchResult:
     """Bound-guided min-EDP driver.
 
     Phase 1 (`_bnb_frontier`): constraint-prune the slab tree down to
@@ -2298,6 +2310,12 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
     so there is no complete partition to capture — chained deltas
     re-price against the original cold ledger, which stays valid for any
     box inside the original one).
+
+    An `executor` (a `repro.parallel.slab_sched.SlabScheduler`) replaces
+    the direct `_bnb_eval_edp` call with a leased multi-worker fan-out of
+    the same batch. The fan-out is byte-identical to the direct call (per
+    the scheduler's merge contract), so every other line of this driver —
+    the schedule, the checkpoints, the counters — is untouched.
     """
     from .factorized import cached_bound_evaluator
     if warm is not None and rt is not None:
@@ -2359,15 +2377,18 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
     def evaluate(ranges_list, n_points):
         if led is not None:
             led.evaluate(np.asarray(ranges_list, np.int64).reshape(-1, 5, 2))
+
+        def run(eng):
+            if executor is not None:
+                return executor.eval_edp(eng, ranges_list)
+            return _bnb_eval_edp(eng, fspace, wl, constraints, c,
+                                 interpret, ranges_list, shard, chunk_size)
+
         if rt is None:
-            gi, e, f = _bnb_eval_edp(engine, fspace, wl, constraints, c,
-                                     interpret, ranges_list, shard,
-                                     chunk_size)
+            gi, e, f = run(engine)
         else:
             gi, e, f = rt.eval_unit(engine, {
-                eng: functools.partial(_bnb_eval_edp, eng, fspace, wl,
-                                       constraints, c, interpret,
-                                       ranges_list, shard, chunk_size)
+                eng: functools.partial(run, eng)
                 for eng in ("numpy", "jax", "pallas")})
         state["nf"] += f
         state["n_eval"] += n_points
@@ -2466,7 +2487,7 @@ def _search_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
 
 def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
                            objectives, shard, chunk_size, rt=None, led=None,
-                           warm=None) -> ParetoResult:
+                           warm=None, executor=None) -> ParetoResult:
     """Bound-guided frontier driver: probe the objective-sorted leaves to
     seed the running (float64-refined) frontier, refine the remainder
     against it, then evaluate the survivors in batches. A slab is pruned
@@ -2476,8 +2497,10 @@ def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
     later evicted (its evictor dominates the slab as well). Runtime
     checkpointing follows `_search_factorized_bnb`, with the frozen
     refinement frontier persisted alongside the live one. `warm=` /
-    `led=` follow `_search_factorized_bnb` too (warm seeds the running
-    frontier from `WarmStart.rows`/`met` instead of an argmin)."""
+    `led=` / `executor=` follow `_search_factorized_bnb` too (warm seeds
+    the running frontier from `WarmStart.rows`/`met` instead of an
+    argmin; the executor fan-out's candidate union is
+    frontier-identical to the direct call)."""
     from .factorized import cached_bound_evaluator
     if warm is not None and rt is not None:
         raise ValueError("warm= cannot combine with a runtime: checkpoint "
@@ -2549,17 +2572,20 @@ def _pareto_factorized_bnb(fspace, wl, constraints, engine, c, interpret,
     def evaluate(ranges_list, n_points):
         if led is not None:
             led.evaluate(np.asarray(ranges_list, np.int64).reshape(-1, 5, 2))
+
+        def run(eng):
+            if executor is not None:
+                return executor.eval_pareto(eng, ranges_list,
+                                            state["rows"])
+            return _bnb_eval_pareto(eng, fspace, wl, constraints, c,
+                                    interpret, ranges_list, shard,
+                                    chunk_size, objectives, state["rows"])
+
         if rt is None:
-            idx, f, o = _bnb_eval_pareto(engine, fspace, wl, constraints,
-                                         c, interpret, ranges_list, shard,
-                                         chunk_size, objectives,
-                                         state["rows"])
+            idx, f, o = run(engine)
         else:
             idx, f, o = rt.eval_unit(engine, {
-                eng: functools.partial(_bnb_eval_pareto, eng, fspace, wl,
-                                       constraints, c, interpret,
-                                       ranges_list, shard, chunk_size,
-                                       objectives, state["rows"])
+                eng: functools.partial(run, eng)
                 for eng in ("numpy", "jax", "pallas")})
         state["nf"] += f
         state["n_eval"] += n_points
@@ -2933,6 +2959,7 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
            factorized: bool = False, space=None,
            prune: Optional[str] = None, runtime=None,
            keep_ledger: bool = False,
+           workers: Optional[int] = None, deterministic: bool = True,
            calibration=None, robust: Optional[str] = None
            ) -> Union[SearchResult, ParetoResult]:
     """Unified search over a config grid.
@@ -3011,6 +3038,24 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
         that actually *resumed* returns ``ledger=None`` — the resumed
         process replays only the schedule's tail, so no complete
         partition passes through it.
+      workers: fan the bound-guided slab queue out across this many
+        leased worker executors (`repro.parallel.slab_sched`): every
+        slab batch is taken under a heartbeat lease, a worker that dies
+        or hangs has its batch requeued (never silently dropped — the
+        run ends with an explicit tiling assertion), and the
+        incumbent/frontier is shared through versioned monotone merges.
+        Requires `prune="bound"`. Composes with `runtime=` (the queue +
+        lease table checkpoint/resume through the same step-atomic
+        layer) and `keep_ledger=True`. Scheduler telemetry comes back on
+        ``result.sched``.
+      deterministic: with `workers=`, True (default) replays merges on
+        the sequential drivers' fixed schedule — byte-identical to
+        `workers=1` (winners, frontiers, and the canonical counter set;
+        see `repro.parallel.slab_sched.canonical_counters`). False runs
+        the async work-stealing sweep: faster under skew, pinned to
+        "same winner/frontier after float64 exact verification,
+        coverage-complete" instead (prune counters become
+        schedule-dependent).
       calibration: a `core.calibration.CalibratedConstants` (or a
         `{field: interval}` mapping, or a shipped preset name like
         "conservative") carrying per-field (lo, nominal, hi) uncertainty
@@ -3041,6 +3086,14 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
     if keep_ledger and prune != "bound":
         raise ValueError("keep_ledger=True records the bound-guided slab "
                          "partition; it requires prune='bound'")
+    if workers is not None:
+        workers = int(workers)
+        if workers < 1:
+            raise ValueError("workers= must be a positive integer")
+        if prune != "bound":
+            raise ValueError("workers= fans out the bound-guided slab "
+                             "queue; it requires prune='bound' "
+                             "(factorized=True)")
     c, cal, fallback = _resolve_robust(calibration, robust, c, engine)
     if fallback:
         if prune is not None or runtime is not None or keep_ledger:
@@ -3062,13 +3115,15 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
         res = _search_impl(wl, constraints, engine, grid, n_z,
                            hierarchical, c, interpret, objective,
                            pareto_metrics, shard, chunk_size, factorized,
-                           space, prune, None, keep_ledger)
+                           space, prune, None, keep_ledger, workers,
+                           deterministic)
     else:
         with _activate_rt(rt):
             res = _search_impl(wl, constraints, engine, grid, n_z,
                                hierarchical, c, interpret, objective,
                                pareto_metrics, shard, chunk_size,
-                               factorized, space, prune, rt, keep_ledger)
+                               factorized, space, prune, rt, keep_ledger,
+                               workers, deterministic)
     if cal is not None:
         res.band = _measure_band(res, cal, wl)
     return res
@@ -3076,13 +3131,22 @@ def search(wl: Workload, constraints: Constraints = Constraints(), *,
 
 def _search_impl(wl, constraints, engine, grid, n_z, hierarchical, c,
                  interpret, objective, pareto_metrics, shard, chunk_size,
-                 factorized, space, prune, rt, keep_ledger=False):
+                 factorized, space, prune, rt, keep_ledger=False,
+                 workers=None, deterministic=True):
     if factorized:
         from .factorized import LedgerRecorder
         fspace = _factorized_space(space, grid, n_z, engine, hierarchical)
         led = LedgerRecorder() if keep_ledger else None
         if objective == "edp":
             if prune == "bound":
+                if workers is not None:
+                    from repro.parallel.slab_sched import parallel_bnb
+                    return parallel_bnb(fspace, wl, constraints, engine,
+                                        c, interpret, shard, chunk_size,
+                                        objective="edp", metrics=None,
+                                        workers=workers,
+                                        deterministic=deterministic,
+                                        rt=rt, led=led)
                 return _search_factorized_bnb(fspace, wl, constraints,
                                               engine, c, interpret, shard,
                                               chunk_size, rt, led)
@@ -3093,6 +3157,14 @@ def _search_impl(wl, constraints, engine, grid, n_z, hierarchical, c,
                              f"pick 'edp' or 'pareto'")
         metrics = _check_pareto_metrics(engine, pareto_metrics)
         if prune == "bound":
+            if workers is not None:
+                from repro.parallel.slab_sched import parallel_bnb
+                return parallel_bnb(fspace, wl, constraints, engine, c,
+                                    interpret, shard, chunk_size,
+                                    objective="pareto", metrics=metrics,
+                                    workers=workers,
+                                    deterministic=deterministic,
+                                    rt=rt, led=led)
             return _pareto_factorized_bnb(fspace, wl, constraints, engine,
                                           c, interpret, metrics, shard,
                                           chunk_size, rt, led)
@@ -3228,6 +3300,8 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                      factorized: bool = False, space=None,
                      prune: Optional[str] = None, runtime=None,
                      keep_ledger: bool = False,
+                     workers: Optional[int] = None,
+                     deterministic: bool = True,
                      calibration=None, robust: Optional[str] = None
                      ) -> Dict[str, Union[SearchResult, ParetoResult]]:
     """Batched search: many workloads against one grid.
@@ -3257,7 +3331,11 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
     sub-search shares the batch campaign's fault injector, and each
     result carries its own workload's counters. `keep_ledger=True`
     retains each workload's slab partition on its result exactly as in
-    `search` (requires `prune="bound"`). `calibration=` / `robust=` carry
+    `search` (requires `prune="bound"`). `workers=` / `deterministic=`
+    fan each workload's slab queue out across the leased scheduler
+    exactly as in `search` (a fresh worker pool per workload — the slab
+    tree is per-workload, so there is nothing to share).
+    `calibration=` / `robust=` carry
     calibration uncertainty exactly as in `search`, resolved once for the
     whole batch: the fused all-workloads launches simply run at the
     calibration's worst corner (the worst-corner reduction is
@@ -3295,7 +3373,7 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
                                  hierarchical, c, interpret, objective,
                                  pareto_metrics, shard, chunk_size,
                                  factorized, space, prune, runtime,
-                                 keep_ledger)
+                                 keep_ledger, workers, deterministic)
     if cal is not None:
         for name, r in out.items():
             r.band = _measure_band(r, cal, wls[name])
@@ -3305,7 +3383,8 @@ def search_workloads(wls: Union[Mapping[str, Workload], Sequence[Workload]],
 def _search_workloads_impl(wls, constraints, engine, grid, n_z,
                            hierarchical, c, interpret, objective,
                            pareto_metrics, shard, chunk_size, factorized,
-                           space, prune, runtime, keep_ledger
+                           space, prune, runtime, keep_ledger,
+                           workers=None, deterministic=True
                            ) -> Dict[str, Union[SearchResult,
                                                 ParetoResult]]:
     """The batched dispatch behind `search_workloads`, post calibration
@@ -3315,6 +3394,9 @@ def _search_workloads_impl(wls, constraints, engine, grid, n_z,
     if keep_ledger and prune != "bound":
         raise ValueError("keep_ledger=True records the bound-guided slab "
                          "partition; it requires prune='bound'")
+    if workers is not None and prune != "bound":
+        raise ValueError("workers= fans out the bound-guided slab queue; "
+                         "it requires prune='bound' (factorized=True)")
     rt0 = SearchRuntime.of(runtime) if runtime is not None else None
     if grid is not None:
         grid = _check_grid(grid)
@@ -3347,7 +3429,8 @@ def _search_workloads_impl(wls, constraints, engine, grid, n_z,
                             pareto_metrics=pareto_metrics, shard=shard,
                             chunk_size=chunk_size, factorized=True,
                             space=space, prune="bound",
-                            runtime=rt_for(name), keep_ledger=keep_ledger)
+                            runtime=rt_for(name), keep_ledger=keep_ledger,
+                            workers=workers, deterministic=deterministic)
                for name, wl in wls.items()}
         total = sum(r.wall_time_s for r in out.values())
         for r in out.values():

@@ -92,7 +92,8 @@ def _dse_main(args) -> None:
     svc = SearchService(n_z=args.n_z, engine=args.engine,
                         interpret=not args.tpu, shard=args.shard,
                         chunk_size=args.chunk_size,
-                        checkpoint_root=args.checkpoint_root)
+                        checkpoint_root=args.checkpoint_root,
+                        workers=args.workers)
     boxes = [("paper defaults", Constraints())]
     boxes += [(spec, Constraints(**_parse_scenario(spec)))
               for spec in args.scenario]
@@ -118,6 +119,13 @@ def _dse_main(args) -> None:
           f"warm, {s['memo_hits']} memoized "
           f"({s['slabs_revived']}/{s['slabs_repriced']} re-priced slabs "
           f"revived)")
+    if args.gc is not None:
+        if args.checkpoint_root is None:
+            raise SystemExit("--gc requires --checkpoint-root")
+        from repro.core.runtime import gc_checkpoints
+        removed = gc_checkpoints(args.checkpoint_root, keep=args.gc)
+        print(f"gc: removed {len(removed)} stale checkpoint dir(s), "
+              f"kept newest {args.gc}")
 
 
 def _scenarios_main(args) -> None:
@@ -185,6 +193,13 @@ def main(argv=None) -> None:
     ds.add_argument("--chunk-size", type=int, default=None)
     ds.add_argument("--checkpoint-root", default=None,
                     help="service-owned checkpoint root (resume per query)")
+    ds.add_argument("--workers", type=int, default=None,
+                    help="fan cold searches and warm deltas out over N "
+                         "leased slab workers (byte-identical answers)")
+    ds.add_argument("--gc", type=int, default=None, metavar="KEEP",
+                    help="after serving, prune completed-query checkpoint "
+                         "dirs under --checkpoint-root down to the newest "
+                         "KEEP (manifest-validated; foreign dirs skipped)")
     ds.add_argument("--tpu", action="store_true",
                     help="disable Pallas interpret mode")
 

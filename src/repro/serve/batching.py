@@ -41,13 +41,18 @@ class ServeQuery:
 
     `objective` / `pareto_metrics` follow `core.search.search`;
     `pareto_metrics` is ignored (and excluded from the memo key) in
-    "edp" mode.
+    "edp" mode. `deadline_s` is a per-query wall-clock budget: a cold
+    search past it raises `core.runtime.QueryTimeout` (cooperatively, at
+    a unit/merge boundary). Deadline queries are never coalesced into a
+    batched wave — a shared launch has no per-member cancellation — so
+    the field stays out of the wave signature by construction.
     """
 
     wl: Workload
     constraints: Constraints
     objective: str = "edp"
     pareto_metrics: Optional[tuple] = None
+    deadline_s: Optional[float] = None
 
     @property
     def box(self) -> Box:

@@ -33,6 +33,8 @@ multi-workload batched calls (`serve.batching`).
 """
 from __future__ import annotations
 
+import collections
+import contextlib
 import dataclasses
 import logging
 import time
@@ -44,7 +46,8 @@ from repro.core.arch_params import Constraints
 from repro.core.factorized import (FactorizedSpace, SlabLedger,
                                    factorized_evaluate_grid)
 from repro.core.photonic_model import CONSTANTS, DeviceConstants
-from repro.core.runtime import fingerprint, query_policy
+from repro.core.runtime import (QueryTimeout, RuntimePolicy, SearchRuntime,
+                                fingerprint, query_policy)
 from repro.core.search import (DEFAULT_OBJECTIVES, ParetoResult,
                                SearchResult, WarmStart,
                                _bnb_dominated_vs, _bnb_infeasible_mask,
@@ -75,6 +78,7 @@ class _BaseEntry:
     idx: np.ndarray                  # (E,) flat indices of evaluated points
     rows: np.ndarray                 # (E, 5) their decoded config rows
     met: Dict[str, np.ndarray]       # {metric: (E,) float64} reference vals
+    nbytes: int = 0                  # ledger npz size (the LRU budget unit)
 
 
 class SearchService:
@@ -114,6 +118,20 @@ class SearchService:
         were built at the same corner the deltas re-price at).
         Calibrations with uncertified varying fields are rejected here:
         the service's warm path needs the worst-corner reduction.
+      max_bases / max_ledger_bytes: bound the resident warm-start memory
+        — the number of `_BaseEntry` substrates and their total ledger
+        byte size (each accounted at its exact `SlabLedger.nbytes()` npz
+        round-trip). When either budget is exceeded the least recently
+        *used* base entries are evicted (`stats["evicted_bases"]`); an
+        evicted base only downgrades its successors from warm to cold —
+        answers never change, because the memo of exact results is
+        separate and every cold search is self-contained.
+      workers / deterministic: fan every cold search's slab queue out
+        across the leased parallel scheduler
+        (`repro.parallel.slab_sched`), and run warm constraint-deltas
+        through the same worker fan-out. Answers stay byte-identical
+        (deterministic mode) or exactly-verified-identical (async) to a
+        single-executor service, per `core.search.search(workers=)`.
 
     The constants fingerprint (`constants_fingerprint`) joins every memo
     / base key and therefore the per-query checkpoint directories —
@@ -131,7 +149,11 @@ class SearchService:
                  chunk_size: Optional[int] = None,
                  checkpoint_root: Optional[str] = None,
                  c: DeviceConstants = CONSTANTS,
-                 calibration=None, robust: Optional[str] = None):
+                 calibration=None, robust: Optional[str] = None,
+                 max_bases: Optional[int] = None,
+                 max_ledger_bytes: Optional[int] = None,
+                 workers: Optional[int] = None,
+                 deterministic: bool = True):
         self.space = (FactorizedSpace.full(n_z) if space is None
                       else FactorizedSpace.from_space(space))
         self.engine = engine
@@ -149,12 +171,23 @@ class SearchService:
         self.c = c
         self.calibration = cal
         self.robust = robust
+        if max_bases is not None and max_bases < 0:
+            raise ValueError("max_bases= must be >= 0")
+        if max_ledger_bytes is not None and max_ledger_bytes < 0:
+            raise ValueError("max_ledger_bytes= must be >= 0")
+        self.max_bases = max_bases
+        self.max_ledger_bytes = max_ledger_bytes
+        self.workers = workers
+        self.deterministic = deterministic
         self._memo: Dict[str, Result] = {}
-        self._base: Dict[str, _BaseEntry] = {}
+        self._base: "collections.OrderedDict[str, _BaseEntry]" = \
+            collections.OrderedDict()
+        self._base_bytes = 0
         self._queue = QueryBatcher()
         self.stats = {"queries": 0, "memo_hits": 0, "warm": 0, "cold": 0,
                       "batched_calls": 0, "slabs_repriced": 0,
-                      "slabs_revived": 0}
+                      "slabs_revived": 0, "evicted_bases": 0,
+                      "timeouts": 0}
         # Frozen-dataclass reprs are deterministic and carry every field,
         # so this digest changes whenever the priced cost model does —
         # including the exact constants corner `robust=` resolved to.
@@ -196,13 +229,26 @@ class SearchService:
     def submit(self, wl: Workload,
                constraints: Union[Constraints, Mapping] = Constraints(), *,
                objective: str = "edp",
-               pareto_metrics: Optional[tuple] = None) -> None:
-        """Queue a question for the next `drain()` (FIFO)."""
+               pareto_metrics: Optional[tuple] = None,
+               deadline_s: Optional[float] = None) -> None:
+        """Queue a question for the next `drain()` (FIFO).
+
+        `deadline_s` gives the query a wall-clock budget: a cold search
+        that outlives it is cancelled cooperatively (at a unit/merge
+        boundary — the in-flight wave unwinds cleanly, worker pools and
+        checkpoints included) and surfaces as a typed
+        `core.runtime.QueryTimeout` in that query's `drain()` slot
+        instead of hanging the batch. Memo/warm answers ignore the
+        deadline (they cost microseconds), and deadline queries are
+        never coalesced into a shared batched launch.
+        """
+        if deadline_s is not None and deadline_s < 0:
+            raise ValueError("deadline_s= must be >= 0")
         self._queue.put(ServeQuery(wl=wl, constraints=box_constraints(
             canonical_box(constraints)), objective=objective,
-            pareto_metrics=pareto_metrics))
+            pareto_metrics=pareto_metrics, deadline_s=deadline_s))
 
-    def drain(self) -> List[Result]:
+    def drain(self) -> List[Union[Result, QueryTimeout]]:
         """Answer every queued question, in arrival order.
 
         Memo hits and warm deltas are peeled off individually (they cost
@@ -212,23 +258,37 @@ class SearchService:
         signatures allow — on the pallas engine without `prune`, such a
         call is literally one fused launch; under the bound-guided driver
         it still shares every resident table and jit cache.
+
+        A query submitted with `deadline_s=` that exceeds its budget
+        returns the raised `QueryTimeout` (carrying ``query_name``) in
+        its slot — the rest of the batch completes normally, so the
+        caller gets every completed result plus the timed-out names.
         """
         queries = self._queue.take()
-        out: Dict[int, Result] = {}
+        out: Dict[int, Union[Result, QueryTimeout]] = {}
         cold: List[tuple] = []  # (position, query)
         seen: Dict[str, int] = {}  # mkey -> first cold position
         for pos, q in enumerate(queries):
             self.stats["queries"] += 1
             res = self._serve_memo_or_warm(q)
-            if res is None:
-                mkey = self._keys(q)[1]
-                if mkey in seen:  # duplicate within this drain: one search
-                    self.stats["memo_hits"] += 1
-                else:
-                    seen[mkey] = pos
-                    cold.append((pos, q))
-            else:
+            if res is not None:
                 out[pos] = res
+                continue
+            if q.deadline_s is not None:
+                # Deadline queries run their own cancellable campaign
+                # immediately — a shared wave has no per-member abort.
+                try:
+                    out[pos] = self._serve_cold_one(q)
+                except QueryTimeout as e:
+                    self.stats["timeouts"] += 1
+                    out[pos] = e
+                continue
+            mkey = self._keys(q)[1]
+            if mkey in seen:  # duplicate within this drain: one search
+                self.stats["memo_hits"] += 1
+            else:
+                seen[mkey] = pos
+                cold.append((pos, q))
         if self.checkpoint_root is not None:
             # Checkpointed colds run one campaign per query fingerprint;
             # batching would fold them into per-name directories instead.
@@ -242,6 +302,12 @@ class SearchService:
             if pos not in out:
                 out[pos] = self._memo[self._keys(q)[1]]
         return [out[i] for i in range(len(queries))]
+
+    @staticmethod
+    def timed_out(results) -> List[str]:
+        """The timed-out query names in a `drain()` return value."""
+        return [r.query_name for r in results
+                if isinstance(r, QueryTimeout)]
 
     def stats_delta(self, before: Mapping[str, int]) -> Dict[str, int]:
         """Counter increments since a ``dict(service.stats)`` snapshot —
@@ -273,6 +339,7 @@ class SearchService:
             return self._memo[mkey]
         base = self._base.get(bkey)
         if base is not None and box_contains(base.box, q.box):
+            self._base.move_to_end(bkey)  # LRU touch: this base just served
             res = self._delta(base, q)
             self.stats["warm"] += 1
             self._memo[mkey] = res
@@ -284,6 +351,9 @@ class SearchService:
                   objective="edp", shard=self.shard,
                   chunk_size=self.chunk_size, factorized=True,
                   space=self.space, prune="bound", keep_ledger=True)
+        if self.workers is not None:
+            kw["workers"] = self.workers
+            kw["deterministic"] = self.deterministic
         if self.checkpoint_root is not None:
             kw["runtime"] = query_policy(self.checkpoint_root, mkey)
         return kw
@@ -294,6 +364,14 @@ class SearchService:
         kw["objective"] = q.objective
         if q.objective == "pareto":
             kw["pareto_metrics"] = self._metrics(q)
+        if q.deadline_s is not None:
+            pol = kw.pop("runtime", None)
+            pol = (dataclasses.replace(pol, deadline_s=q.deadline_s)
+                   if pol is not None
+                   else RuntimePolicy(deadline_s=q.deadline_s))
+            rt = SearchRuntime(pol)
+            rt.query_name = q.wl.name
+            kw["runtime"] = rt
         res = search(q.wl, q.constraints, **kw)
         self._finish_cold(q, bkey, mkey, res)
         return res
@@ -331,10 +409,53 @@ class SearchService:
             return
         idx = ledger.evaluated_indices()
         met = factorized_evaluate_grid(self.space, q.wl, self.c, idx=idx)
-        self._base[bkey] = _BaseEntry(
+        prior = self._base.pop(bkey, None)
+        if prior is not None:
+            self._base_bytes -= prior.nbytes
+        entry = _BaseEntry(
             box=q.box, ledger=ledger, idx=idx,
             rows=self.space.decode(idx),
-            met={k: np.asarray(v, np.float64) for k, v in met.items()})
+            met={k: np.asarray(v, np.float64) for k, v in met.items()},
+            nbytes=ledger.nbytes())
+        self._base[bkey] = entry
+        self._base_bytes += entry.nbytes
+        self._evict_bases()
+
+    def _evict_bases(self) -> None:
+        """Evict least-recently-used base entries until both budgets hold.
+
+        Eviction is availability, not correctness: a dropped base only
+        means the next tightened-box query runs cold (and re-seeds the
+        entry) instead of warm — the memo of exact results is untouched.
+        """
+        while self._base and (
+                (self.max_bases is not None
+                 and len(self._base) > self.max_bases)
+                or (self.max_ledger_bytes is not None
+                    and self._base_bytes > self.max_ledger_bytes)):
+            bkey, entry = self._base.popitem(last=False)
+            self._base_bytes -= entry.nbytes
+            self.stats["evicted_bases"] += 1
+            log.debug("evicted base %s (%d bytes; %d bases / %d bytes "
+                      "resident)", bkey[:12], entry.nbytes,
+                      len(self._base), self._base_bytes)
+
+    def _maybe_executor(self, wl, cons, objective, metrics):
+        """A leased worker fan-out for one warm delta, or a None context.
+
+        Warm deltas always use the *deterministic* wave fan-out even on
+        an async-configured service: the async drivers own their whole
+        probe/refine/sweep schedule and have no warm-start entry point,
+        and a delta's revived-slab descent is small enough that the
+        byte-identical wave split is the right tool anyway.
+        """
+        if self.workers is None:
+            return contextlib.nullcontext(None)
+        from repro.parallel.slab_sched import SlabScheduler
+        return SlabScheduler(self.space, wl, cons, self.c, self.interpret,
+                             self.shard, self.chunk_size, self.workers,
+                             objective=objective, objectives=metrics,
+                             deterministic=True)
 
     def _delta(self, base: _BaseEntry, q: ServeQuery) -> Result:
         """Warm constraint-delta answer: filter the point store, re-price
@@ -358,9 +479,11 @@ class SearchService:
                 lbs={k2: v[~dead]
                      for k2, v in base.ledger.bounds.items()},
                 best=best, nf=int(ok.sum()))
-            res = _search_factorized_bnb(
-                self.space, q.wl, cons, self.engine, self.c,
-                self.interpret, self.shard, self.chunk_size, warm=warm)
+            with self._maybe_executor(q.wl, cons, "edp", None) as ex:
+                res = _search_factorized_bnb(
+                    self.space, q.wl, cons, self.engine, self.c,
+                    self.interpret, self.shard, self.chunk_size,
+                    warm=warm, executor=ex)
         else:
             metrics = self._metrics(q)
             front, met, nf = _pareto_from_rows(base.rows, q.wl, cons,
@@ -373,10 +496,11 @@ class SearchService:
                 lbs={k2: v[~dead]
                      for k2, v in base.ledger.bounds.items()},
                 rows=front, met=met, nf=nf)
-            res = _pareto_factorized_bnb(
-                self.space, q.wl, cons, self.engine, self.c,
-                self.interpret, metrics, self.shard, self.chunk_size,
-                warm=warm)
+            with self._maybe_executor(q.wl, cons, "pareto", metrics) as ex:
+                res = _pareto_factorized_bnb(
+                    self.space, q.wl, cons, self.engine, self.c,
+                    self.interpret, metrics, self.shard, self.chunk_size,
+                    warm=warm, executor=ex)
         if self.calibration is not None:
             res.band = _measure_band(res, self.calibration, q.wl)
         self.stats["slabs_repriced"] += len(base.ledger.pruned)

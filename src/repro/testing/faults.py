@@ -9,17 +9,31 @@ sites:
   * ``"checkpoint"`` — immediately after every COMMITTED snapshot (the
                        kill-at-every-boundary tests hook here).
 
+The parallel slab scheduler (repro.parallel.slab_sched) consults four
+more sites from inside its worker threads, each passing its worker id:
+
+  * ``"lease"``     — right after a worker acquires a slab lease;
+  * ``"heartbeat"`` — at every lease heartbeat;
+  * ``"merge"``     — before a completed slab's result is merged;
+  * ``"report"``    — after evaluating but before reporting a slab (the
+                      duplicate-completion boundary).
+
 A `FaultSpec` names a site, a fault kind and the 0-based invocation index
 at which it fires (``at=-1`` fires on *every* invocation — persistent
-failure, used to force engine fallback). Kinds:
+failure, used to force engine fallback). A spec may additionally pin a
+``worker`` id: it then matches against that worker's own per-site
+invocation counter, so "kill worker 2 at its first lease" is expressible
+regardless of how the pool interleaves. Kinds:
 
   * ``"raise"``   — raises LaunchError (transient launch failure);
   * ``"timeout"`` — raises LaunchTimeout (watchdog expiry, without the
-                    wall-clock wait);
+                    wall-clock wait; the scheduler interprets it as a
+                    missed heartbeat and force-expires the lease);
   * ``"nan"``     — poisons the attempt's result with NaN (the runtime
                     quarantines and re-evaluates on the host);
   * ``"kill"``    — raises KillSearch (BaseException: simulated process
-                    death; propagates through every guard).
+                    death; propagates through every guard — the scheduler
+                    lets it kill exactly the one worker thread).
 
 Everything is a pure function of the spec list — no RNG at fire time — so
 a schedule replays identically across runs, which is what lets the
@@ -30,23 +44,26 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Dict, Iterable, List, Sequence, Tuple
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.runtime import KillSearch, LaunchError, LaunchTimeout
 
-SITES = ("launch", "checkpoint")
+SITES = ("launch", "checkpoint", "lease", "heartbeat", "merge", "report")
 KINDS = ("raise", "timeout", "nan", "kill")
 
 
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """One scheduled fault: fire `kind` at invocation `at` of `site`
-    (0-based; -1 = every invocation)."""
+    (0-based; -1 = every invocation). `worker` pins the spec to one
+    worker's own per-site counter (None matches the global counter)."""
     site: str
     kind: str
     at: int = 0
+    worker: Optional[int] = None
 
     def __post_init__(self):
         if self.site not in SITES:
@@ -58,34 +75,59 @@ class FaultSpec:
 class FaultInjector:
     """Replays a FaultSpec schedule against per-site invocation counters.
 
-    `fire(site)` is called by the runtime; it returns True when the
-    current invocation is scheduled to produce a NaN-poisoned result, and
-    raises for the failure kinds. `hits` records every fault actually
-    fired (site, kind, invocation) for assertions.
+    `fire(site, worker=None)` is called by the runtime (and, with a
+    worker id, by the slab scheduler's worker threads); it returns True
+    when the current invocation is scheduled to produce a NaN-poisoned
+    result, and raises for the failure kinds. `hits` records every fault
+    actually fired (site, kind, invocation) for assertions. Counters are
+    lock-guarded: scheduler workers fire concurrently.
     """
 
     def __init__(self, specs: Iterable[FaultSpec] = ()):
         self.specs: Tuple[FaultSpec, ...] = tuple(specs)
-        self.calls: Dict[str, int] = {s: 0 for s in SITES}
+        # Counts only sites actually consulted — an injector that never
+        # saw a "lease" call reports no "lease" key at all.
+        self.calls: Dict[str, int] = {}
+        self.worker_calls: Dict[Tuple[str, int], int] = {}
         self.hits: List[Tuple[str, str, int]] = []
+        self._lock = threading.Lock()
 
-    def fire(self, site: str) -> bool:
-        idx = self.calls[site]
-        self.calls[site] = idx + 1
-        poison = False
-        for spec in self.specs:
-            if spec.site != site or (spec.at != -1 and spec.at != idx):
-                continue
-            self.hits.append((site, spec.kind, idx))
-            if spec.kind == "raise":
+    def fire(self, site: str, worker: Optional[int] = None) -> bool:
+        with self._lock:
+            idx = self.calls.get(site, 0)
+            self.calls[site] = idx + 1
+            widx = None
+            if worker is not None:
+                widx = self.worker_calls.get((site, worker), 0)
+                self.worker_calls[(site, worker)] = widx + 1
+            poison = False
+            matched = None
+            for spec in self.specs:
+                if spec.site != site:
+                    continue
+                if spec.worker is None:
+                    at_idx = idx
+                elif spec.worker == worker:
+                    at_idx = widx
+                else:
+                    continue
+                if spec.at != -1 and spec.at != at_idx:
+                    continue
+                self.hits.append((site, spec.kind, at_idx))
+                if spec.kind == "nan":
+                    poison = True
+                else:
+                    matched = (spec.kind, at_idx)
+                    break  # first failure spec wins, as before the lock
+        if matched is not None:
+            kind, at_idx = matched
+            if kind == "raise":
                 raise LaunchError(f"injected launch failure "
-                                  f"({site}#{idx})")
-            if spec.kind == "timeout":
+                                  f"({site}#{at_idx})")
+            if kind == "timeout":
                 raise LaunchTimeout(f"injected watchdog expiry "
-                                    f"({site}#{idx})")
-            if spec.kind == "kill":
-                raise KillSearch(f"injected process death ({site}#{idx})")
-            poison = True  # "nan"
+                                    f"({site}#{at_idx})")
+            raise KillSearch(f"injected process death ({site}#{at_idx})")
         return poison
 
 

@@ -394,3 +394,119 @@ def test_service_checkpoint_root_resume(tmp_path):
     assert svc2.stats["warm"] == 0 and svc2.stats["cold"] == 2
     _same_edp(r3, search(WL, tight, engine="numpy", factorized=True,
                          space=SPACE, prune="bound"))
+
+
+# ---------------------------------------------------------------------------
+# Hardened long-lived service: base eviction, deadlines, checkpoint GC
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_then_requery_is_byte_identical():
+    # max_bases=1: the second workload's base evicts the first; a delta
+    # query against the evicted base goes cold again and still matches
+    # its cold twin exactly.
+    wl2 = load("deit-s")
+    svc = SearchService(space=SPACE, engine="numpy", max_bases=1)
+    svc.query(WL, Constraints())
+    svc.query(wl2, Constraints())
+    assert svc.stats["evicted_bases"] == 1
+    tight = Constraints(power_w=4.0)
+    got = svc.query(WL, tight)
+    assert svc.stats["evicted_bases"] == 2
+    assert svc.stats["warm"] == 0 and svc.stats["cold"] == 3
+    _same_edp(got, search(WL, tight, engine="numpy", factorized=True,
+                          space=SPACE, prune="bound"), "evicted requery")
+    # The surviving base (the power_w=4.0 re-search) still serves warm
+    # deltas for boxes that tighten it.
+    got2 = svc.query(WL, Constraints(power_w=3.5))
+    assert svc.stats["warm"] == 1
+    _same_edp(got2, search(WL, Constraints(power_w=3.5), engine="numpy",
+                           factorized=True, space=SPACE, prune="bound"))
+
+
+def test_ledger_byte_budget_eviction():
+    # The budget accounts each base at its exact save() npz size; a
+    # 1-byte budget can hold no base at all.
+    led = search(WL, Constraints(), engine="numpy", factorized=True,
+                 space=SPACE, prune="bound", keep_ledger=True).ledger
+    assert led.nbytes() > 0
+    svc = SearchService(space=SPACE, engine="numpy", max_ledger_bytes=1)
+    svc.query(WL, Constraints())
+    assert svc.stats["evicted_bases"] == 1
+    with pytest.raises(ValueError, match="max_ledger_bytes"):
+        SearchService(space=SPACE, max_ledger_bytes=-1)
+
+
+def test_mru_base_survives_eviction():
+    # Touching a base via a warm delta refreshes its LRU position.
+    wl2, wl3 = load("deit-s"), load("deit-b")
+    svc = SearchService(space=SPACE, engine="numpy", max_bases=2)
+    svc.query(WL, Constraints())
+    svc.query(wl2, Constraints())
+    svc.query(WL, Constraints(power_w=4.5))      # warm: WL becomes MRU
+    svc.query(wl3, Constraints())                # evicts wl2, not WL
+    svc.query(WL, Constraints(power_w=4.0))
+    assert svc.stats["warm"] == 2                # WL's base survived
+
+
+def test_deadline_timeout_surfaces_in_drain():
+    from repro.core.runtime import QueryTimeout
+    wl2 = load("deit-s")
+    svc = SearchService(space=SPACE, engine="numpy")
+    svc.submit(WL, Constraints(), deadline_s=0.0)
+    svc.submit(wl2, Constraints())
+    out = svc.drain()
+    assert isinstance(out[0], QueryTimeout)
+    assert out[0].query_name == WL.name
+    assert SearchService.timed_out(out) == [WL.name]
+    assert svc.stats["timeouts"] == 1
+    _same_edp(out[1], search(wl2, Constraints(), engine="numpy",
+                             factorized=True, space=SPACE, prune="bound"))
+    # The timed-out query left no memo or base poison: resubmitting
+    # without a deadline completes and matches the cold twin.
+    got = svc.query(WL, Constraints())
+    _same_edp(got, search(WL, Constraints(), engine="numpy",
+                          factorized=True, space=SPACE, prune="bound"))
+    with pytest.raises(ValueError, match="deadline_s"):
+        svc.submit(WL, Constraints(), deadline_s=-1.0)
+
+
+def test_gc_checkpoints_prunes_and_skips_foreign(tmp_path):
+    import os
+    from repro.core.runtime import gc_checkpoints
+    root = str(tmp_path / "root")
+    svc = SearchService(space=SPACE, engine="numpy", checkpoint_root=root)
+    svc.query(WL, Constraints())
+    svc.query(WL, Constraints(power_w=4.0), objective="pareto")
+    dirs = sorted(os.listdir(root))
+    assert len(dirs) == 2
+    # Foreign content is never deleted: wrong name shape, and a
+    # fingerprint-shaped name without our manifest layout.
+    os.makedirs(os.path.join(root, "not-ours"))
+    open(os.path.join(root, "not-ours", "data.bin"), "w").close()
+    os.makedirs(os.path.join(root, "a" * 24))
+    open(os.path.join(root, "a" * 24, "user.txt"), "w").close()
+    kept = gc_checkpoints(root, keep=1)
+    assert len(kept) == 1 and kept[0].startswith(root)
+    left = sorted(os.listdir(root))
+    assert "not-ours" in left and "a" * 24 in left
+    assert len([d for d in left if d in dirs]) == 1
+    # known= protects in-flight queries regardless of age.
+    removed = gc_checkpoints(root, keep=0,
+                             known=[d for d in left if d in dirs])
+    assert removed == []
+    with pytest.raises(ValueError):
+        gc_checkpoints(root, keep=-1)
+    assert gc_checkpoints(str(tmp_path / "missing"), keep=0) == []
+
+
+def test_service_workers_byte_identical():
+    # A worker-pool service answers cold and warm queries byte-identically
+    # to the sequential service.
+    tight = Constraints(power_w=4.5)
+    ref, refw = SearchService(space=SPACE, engine="numpy"), \
+        SearchService(space=SPACE, engine="numpy", workers=2)
+    for svc in (ref, refw):
+        svc.query(WL, Constraints())
+    a, b = ref.query(WL, tight), refw.query(WL, tight)
+    assert refw.stats["warm"] == 1
+    _same_edp(a, b, "workers warm delta")

@@ -1,0 +1,283 @@
+"""Parallel slab scheduler tests: leased work-stealing BnB correctness.
+
+The contract under test (repro.parallel.slab_sched via
+`core.search.search(..., prune="bound", workers=N)`):
+
+  * `deterministic=True` with any worker count is *byte-identical* to
+    `workers=1` and to the sequential driver — winners, frontiers, and
+    every canonical (partition-independent) counter — per engine and
+    objective, including the full 12^5 golden workloads;
+  * `deterministic=False` (async work-stealing) pins the same winner and
+    frontier (re-decided exactly in float64) and complete coverage:
+    every config is pruned or evaluated, never lost, never double-counted;
+  * a fault — raise / simulated hang (timeout) / process death (kill) —
+    injected at EVERY scheduler boundary (lease, heartbeat, merge,
+    report) leaves the answer identical: leases expire, slabs requeue,
+    dead workers respawn, late duplicate completions are dropped
+    idempotently;
+  * a kill at any checkpoint boundary resumes byte-identically from the
+    snapshot, including across different worker counts;
+  * zero-feasible spaces work in every mode.
+
+Faults come from the deterministic injector in repro.testing.faults — no
+RNG at fire time, so every schedule replays identically.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import (Constraints, FactorizedSpace, KillSearch,
+                        REPORT_METRICS, RuntimePolicy, SearchRuntime,
+                        search)
+from repro.core.paper_workloads import load
+from repro.parallel.slab_sched import canonical_counters
+from repro.testing import FaultSpec, inject
+
+SPACE = FactorizedSpace(((1, 2, 3, 4, 5), (1, 2, 3, 4), (2, 4, 6),
+                         (1, 3, 5, 7), (4, 8, 12)))
+WL = load("deit-t")
+CONS = Constraints()
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "dse_12x5.json"
+
+SITES = ("lease", "heartbeat", "merge", "report")
+
+
+def _policy(tmpdir=None, **kw):
+    kw.setdefault("sleep", lambda s: None)
+    return RuntimePolicy(checkpoint_dir=str(tmpdir) if tmpdir else None,
+                         **kw)
+
+
+def _run(workers=None, deterministic=True, objective="edp", engine="numpy",
+         rt=None, cons=CONS, space=SPACE, wl=WL):
+    return search(wl, cons, engine=engine, factorized=True, prune="bound",
+                  space=space, objective=objective, workers=workers,
+                  deterministic=deterministic, runtime=rt)
+
+
+def _assert_same(objective, ref, got, label):
+    if objective == "edp":
+        assert got.best_cfg == ref.best_cfg, label
+        a, b = ref.edp, got.edp
+        assert (a == b) or (np.isnan(a) and np.isnan(b)), label
+    else:
+        assert np.array_equal(got.front, ref.front), label
+        for k in REPORT_METRICS:
+            assert np.array_equal(got.metrics[k], ref.metrics[k]), \
+                (label, k)
+
+
+def _assert_covered(res, space=SPACE):
+    assert res.n_pruned + res.n_workload_evals == space.size
+    assert res.n_evaluated == space.size
+
+
+# ---------------------------------------------------------------------------
+# Deterministic byte-identity to workers=1 / sequential
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+@pytest.mark.parametrize("engine", ["numpy", "jax", "pallas"])
+def test_deterministic_byte_identity(engine, objective):
+    seq = _run(objective=objective, engine=engine)
+    w1 = _run(workers=1, objective=objective, engine=engine)
+    w4 = _run(workers=4, objective=objective, engine=engine)
+    for got, label in ((w1, "w1"), (w4, "w4")):
+        _assert_same(objective, seq, got, f"{engine}/{label}")
+        assert canonical_counters(got) == canonical_counters(seq), \
+            (engine, label)
+        _assert_covered(got)
+    assert w4.sched is not None and w4.sched.workers == 4
+    assert w4.sched.deterministic and w4.sched.n_merges > 0
+
+
+def test_deterministic_full_12x5_matches_golden():
+    committed = json.loads(GOLDEN.read_text())["workloads"]["deit-b"]
+    wl = load("deit-b")
+    seq = search(wl, CONS, engine="numpy", factorized=True, prune="bound")
+    par = search(wl, CONS, engine="numpy", factorized=True, prune="bound",
+                 workers=4)
+    assert [int(x) for x in par.best_cfg.as_array()] == committed["best"]
+    assert float(par.edp) == committed["edp"]
+    assert canonical_counters(par) == canonical_counters(seq)
+
+
+# ---------------------------------------------------------------------------
+# Async mode: same winner/frontier, complete coverage
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+def test_async_same_winner_and_coverage(objective):
+    seq = _run(objective=objective)
+    got = _run(workers=4, deterministic=False, objective=objective)
+    _assert_same(objective, seq, got, "async")
+    _assert_covered(got)
+    assert got.sched is not None and not got.sched.deterministic
+
+
+def test_workers_validation():
+    with pytest.raises(ValueError, match="positive integer"):
+        _run(workers=0)
+    with pytest.raises(ValueError, match="prune='bound'"):
+        search(WL, CONS, engine="numpy", factorized=True, space=SPACE,
+               workers=2)
+
+
+# ---------------------------------------------------------------------------
+# Fault matrix: every boundary x every kind, both modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("deterministic", [True, False])
+@pytest.mark.parametrize("kind", ["kill", "raise", "timeout"])
+@pytest.mark.parametrize("site", SITES)
+def test_fault_at_every_boundary(site, kind, deterministic):
+    seq = _run()
+    rt = SearchRuntime(_policy())
+    with inject(rt, [FaultSpec(site, kind, at=0)]) as inj:
+        got = _run(workers=4, deterministic=deterministic, rt=rt)
+    assert (site, kind, 0) in inj.hits
+    _assert_same("edp", seq, got, f"{site}/{kind}")
+    _assert_covered(got)
+    if deterministic:
+        assert canonical_counters(got) == canonical_counters(seq)
+    s = got.sched
+    if kind == "kill":
+        assert s.n_deaths >= 1 and s.n_requeued >= 1
+    elif kind == "timeout":
+        # A simulated hang force-expires the lease; the slab is requeued
+        # and redone while the original worker may still report.
+        assert s.n_requeued >= 1
+
+
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+@pytest.mark.parametrize("engine", ["numpy", "jax", "pallas"])
+@pytest.mark.parametrize("site", SITES)
+def test_kill_at_every_boundary_every_engine(site, engine, objective):
+    seq = _run(objective=objective, engine=engine)
+    rt = SearchRuntime(_policy())
+    with inject(rt, [FaultSpec(site, "kill", at=0)]) as inj:
+        got = _run(workers=4, deterministic=False, objective=objective,
+                   engine=engine, rt=rt)
+    assert (site, "kill", 0) in inj.hits
+    _assert_same(objective, seq, got, f"{site}/{engine}")
+    _assert_covered(got)
+    assert got.sched.n_deaths >= 1
+
+
+def test_duplicate_completion_idempotent():
+    # A simulated hang (timeout at the lease boundary) force-expires the
+    # lease; the slab is requeued and redone, and the original worker's
+    # completion arrives against a gone lease. Whichever lands first is
+    # merged; the other is dropped — merging twice must not double-count.
+    seq = _run()
+    rt = SearchRuntime(_policy())
+    with inject(rt, [FaultSpec("lease", "timeout", at=0)]):
+        got = _run(workers=4, rt=rt)
+    _assert_same("edp", seq, got, "dup")
+    assert canonical_counters(got) == canonical_counters(seq)
+    s = got.sched
+    assert s.n_requeued >= 1 and (s.n_late + s.n_dup) >= 1
+
+
+def test_all_workers_dead_falls_back_inline():
+    # Kill every worker at its first lease: the pool dies faster than the
+    # respawn budget; the coordinator drains the queue inline and the
+    # answer is still byte-identical.
+    seq = _run()
+    rt = SearchRuntime(_policy())
+    specs = [FaultSpec("lease", "kill", at=0, worker=w) for w in range(16)]
+    with inject(rt, specs):
+        got = _run(workers=2, rt=rt)
+    _assert_same("edp", seq, got, "inline")
+    assert canonical_counters(got) == canonical_counters(seq)
+    assert got.sched.n_deaths >= 2
+
+
+# ---------------------------------------------------------------------------
+# Zero-feasible spaces
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("deterministic", [True, False])
+@pytest.mark.parametrize("objective", ["edp", "pareto"])
+def test_zero_feasible(objective, deterministic):
+    cons = Constraints(area_mm2=1e-9)
+    got = _run(workers=4, deterministic=deterministic,
+               objective=objective, cons=cons)
+    if objective == "edp":
+        assert not got.feasible
+    else:
+        assert got.size == 0
+    assert got.n_feasible == 0
+    _assert_covered(got)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint kill + resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("deterministic", [True, False])
+@pytest.mark.parametrize("boundary", [0, 1, 2])
+def test_checkpoint_kill_resume(tmp_path, boundary, deterministic):
+    seq = _run()
+    pol = _policy(tmp_path, checkpoint_every=1)
+    rt = SearchRuntime(pol)
+    with inject(rt, [FaultSpec("checkpoint", "kill", at=boundary)]) as inj:
+        try:
+            got = _run(workers=4, deterministic=deterministic, rt=rt)
+            fired = False
+        except KillSearch:
+            fired = True
+    if fired:
+        assert ("checkpoint", "kill", boundary) in inj.hits
+        got = _run(workers=4, deterministic=deterministic,
+                   rt=SearchRuntime(pol))
+        assert got.resumed_step is not None and got.resumed_step > 0
+    _assert_same("edp", seq, got, f"ckpt{boundary}")
+    _assert_covered(got)
+
+
+def test_resume_across_worker_counts(tmp_path):
+    # The async snapshot fingerprint excludes the worker count: a search
+    # checkpointed under workers=4 resumes under workers=2 byte-equal.
+    seq = _run()
+    pol = _policy(tmp_path, checkpoint_every=1)
+    rt = SearchRuntime(pol)
+    with inject(rt, [FaultSpec("checkpoint", "kill", at=1)]):
+        with pytest.raises(KillSearch):
+            _run(workers=4, deterministic=False, rt=rt)
+    got = _run(workers=2, deterministic=False, rt=SearchRuntime(pol))
+    assert got.resumed_step is not None and got.resumed_step > 0
+    _assert_same("edp", seq, got, "cross-worker resume")
+    _assert_covered(got)
+
+
+def test_pareto_async_checkpoint_resume(tmp_path):
+    seq = _run(objective="pareto")
+    pol = _policy(tmp_path, checkpoint_every=1)
+    rt = SearchRuntime(pol)
+    with inject(rt, [FaultSpec("checkpoint", "kill", at=1)]):
+        with pytest.raises(KillSearch):
+            _run(workers=4, deterministic=False, objective="pareto", rt=rt)
+    got = _run(workers=4, deterministic=False, objective="pareto",
+               rt=SearchRuntime(pol))
+    _assert_same("pareto", seq, got, "pareto resume")
+    _assert_covered(got)
+
+
+# ---------------------------------------------------------------------------
+# search_workloads fan-out
+# ---------------------------------------------------------------------------
+
+def test_search_workloads_forwards_workers():
+    from repro.core import search_workloads
+    wls = {n: load(n) for n in ("deit-t", "deit-s")}
+    seq = search_workloads(wls, {n: CONS for n in wls}, engine="numpy",
+                           factorized=True, prune="bound", space=SPACE)
+    par = search_workloads(wls, {n: CONS for n in wls}, engine="numpy",
+                           factorized=True, prune="bound", space=SPACE,
+                           workers=2)
+    for n in wls:
+        _assert_same("edp", seq[n], par[n], n)
+        assert canonical_counters(par[n]) == canonical_counters(seq[n])
